@@ -1,0 +1,83 @@
+"""Paper Figs 7 / 8 / 9 — performance isolation under co-location.
+
+Fig 7: pairwise interference matrix (MODELED from calibrated system
+models).  Fig 8: tail latency vs load + SLO throughput.  Fig 9: Search
+co-located with batch workloads, p99 degradation per system.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.simlib import SYSTEMS, p99, simulate_serving
+
+WORKLOADS = ("cpu", "cache", "io", "net")  # SPEC/cachebench/IOzone/netperf analogue
+# background pressure each workload class exerts (cachebench writes are the
+# paper's worst case — Fig 7's hot column)
+PRESSURE = {"cpu": 0.25, "cache": 1.0, "io": 0.6, "net": 0.45}
+
+
+def fig7_matrix(rows: List[dict]):
+    for sys_name in ("rainforest", "lxc", "xen", "linux-3.17.4"):
+        sm = SYSTEMS[sys_name]
+        for fg in WORKLOADS:
+            solo = simulate_serving(sm, rate=250, n_servers=48, colo_load=0.0, seed=7)
+            for bg in WORKLOADS:
+                colo = simulate_serving(
+                    sm, rate=250, n_servers=48, colo_load=PRESSURE[bg], seed=11)
+                deg = (np.mean(colo) / np.mean(solo) - 1) * 100
+                rows.append({
+                    "name": f"fig7_degradation_pct/{sys_name}/{fg}_vs_{bg}",
+                    "us_per_call": float(np.mean(colo) * 1e6),
+                    "derived": f"deg={deg:.1f}% MODELED",
+                })
+
+
+def fig8_slo(rows: List[dict]):
+    """Tail latency vs request rate; throughput at the 200 ms SLO."""
+    slo = 0.200
+    for sys_name in ("rainforest", "lxc", "xen", "linux-2.6.35M"):
+        sm = SYSTEMS[sys_name]
+        max_ok = 0
+        for rate in range(250, 651, 50):
+            # two Search instances share the box: pressure grows with load.
+            # bare Linux schedules freely across all 12 cores (paper: better
+            # average, worse tail past 450 req/s)
+            ns = 12 * 8 if "linux" in sys_name else 6 * 8
+            lat = simulate_serving(sm, rate=float(rate), n_servers=ns,
+                                   base_service=0.05, colo_load=rate / 650.0, seed=rate)
+            tail = p99(lat)
+            if tail <= slo:
+                max_ok = rate
+            rows.append({
+                "name": f"fig8_p99ms/{sys_name}/rate{rate}",
+                "us_per_call": tail * 1e6,
+                "derived": f"{'OK' if tail <= slo else 'VIOLATE'} MODELED",
+            })
+        rows.append({
+            "name": f"fig8_slo_throughput/{sys_name}",
+            "us_per_call": float(max_ok),
+            "derived": "req/s at p99<=200ms MODELED",
+        })
+
+
+def fig9_colo(rows: List[dict]):
+    for sys_name in ("rainforest", "lxc", "xen", "linux-3.17.4"):
+        sm = SYSTEMS[sys_name]
+        solo = p99(simulate_serving(sm, rate=300, n_servers=48, colo_load=0.0, seed=3))
+        worst = 0.0
+        for bg in WORKLOADS:
+            colo = p99(simulate_serving(sm, rate=300, n_servers=48, colo_load=PRESSURE[bg], seed=5))
+            worst = max(worst, colo / solo - 1)
+        rows.append({
+            "name": f"fig9_worst_tail_degradation/{sys_name}",
+            "us_per_call": worst * 100,
+            "derived": f"paper: rf<=8% lxc<=46% MODELED",
+        })
+
+
+def run(rows: List[dict]):
+    fig7_matrix(rows)
+    fig8_slo(rows)
+    fig9_colo(rows)

@@ -1,0 +1,102 @@
+"""Paper Figs 2b / 6 / 12 — tail latency vs scale, shared vs isolated.
+
+MODELED rows use the calibrated simulator (see simlib docstring).
+MEASURED rows time real decode steps on this host: solo vs with a
+concurrent jax workload dispatching on the same device (the CPU-box
+analogue of shared-substrate interference).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.simlib import SYSTEMS, p99, simulate_serving
+
+
+def scaling_table(rows: List[dict]):
+    """Fig 12 analogue: p99 vs cores for all systems (MODELED)."""
+    for cores in (10, 20, 30, 40):
+        base = None
+        for name in ("rainforest", "linux", "linux-2.6.35M", "linux-3.17.4", "lxc", "xen"):
+            lat = simulate_serving(
+                SYSTEMS[name], rate=120.0 * cores / 10, duration=30.0,
+                n_servers=cores // 2, base_service=0.0002,
+                n_cores_total=cores, seed=cores,
+            )
+            v = p99(lat) * 1e6
+            if name == "rainforest":
+                base = v
+            rows.append({
+                "name": f"fig12_memcached_p99us/{name}/cores{cores}",
+                "us_per_call": v,
+                "derived": f"vs_rf={v / base:.2f}x MODELED",
+            })
+
+
+def measured_interference(rows: List[dict]):
+    """Real on-host measurement: decode-step p99 solo vs co-dispatched."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import smoke_config
+    from repro.configs.registry import get_arch
+    from repro.models.model import build_model
+    from repro.sharding.rules import single_device_ctx
+
+    cfg = smoke_config(get_arch("qwen3-4b"))
+    model = build_model(cfg, single_device_ctx())
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 4, 64
+    cache = model.init_cache(B, S)
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32),
+             "pos": jnp.zeros((B,), jnp.int32)}
+    step = jax.jit(model.decode)
+    step(params, cache, batch)[0].block_until_ready()  # warm
+
+    def measure(n=60):
+        lats = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            step(params, cache, batch)[0].block_until_ready()
+            lats.append(time.perf_counter() - t0)
+        return np.array(lats)
+
+    solo = measure()
+
+    stop = threading.Event()
+    w = jnp.ones((512, 512), jnp.float32)
+    noise_fn = jax.jit(lambda a: a @ a)
+
+    def noise():
+        a = w
+        while not stop.is_set():
+            a = noise_fn(a)
+            a.block_until_ready()
+
+    t = threading.Thread(target=noise)
+    t.start()
+    try:
+        shared = measure()
+    finally:
+        stop.set()
+        t.join()
+
+    rows.append({
+        "name": "measured_decode_p99us/solo",
+        "us_per_call": float(np.percentile(solo, 99) * 1e6),
+        "derived": f"p50={np.percentile(solo, 50)*1e6:.0f}us MEASURED",
+    })
+    rows.append({
+        "name": "measured_decode_p99us/shared_device",
+        "us_per_call": float(np.percentile(shared, 99) * 1e6),
+        "derived": (
+            f"degradation={np.percentile(shared, 99)/np.percentile(solo, 99):.2f}x MEASURED"
+        ),
+    })
+
+
+def run(rows: List[dict]):
+    scaling_table(rows)
+    measured_interference(rows)

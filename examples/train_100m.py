@@ -1,0 +1,94 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model.
+
+Demonstrates the full training substrate — sharded init, microbatched
+train step, deterministic restart-safe data pipeline, async checkpointing,
+and (the fault-tolerance path) a mid-run simulated failure with restore
+from the last checkpoint.  Loss should drop toward the bigram-chain
+entropy floor.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+import argparse
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import single_device_grid, DeviceGrid, Supervisor
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import abstract_train_state, train_state_pspecs
+
+ARCH_100M = ArchConfig(
+    name="qwen3-100m",
+    family="dense",
+    num_layers=10,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=2560,
+    vocab=16384,
+    vocab_pad_multiple=128,
+    qk_norm=True,
+    tie_embeddings=False,
+    microbatch=1,
+)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=60)  # CPU demo; use 300+ on real chips
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq", type=int, default=32)
+    p.add_argument("--ckpt-every", type=int, default=20)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    args = p.parse_args()
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    sup = Supervisor(single_device_grid())
+    cell = sup.create_cell(
+        "lm100m", ARCH_100M, "train", ncols=1,
+        opt_cfg=OptConfig(lr=6e-4, warmup_steps=40, total_steps=args.steps),
+    )
+    print(f"model: {cell.model.n_params()/1e6:.1f}M params")
+    shape = ShapeConfig("train", "train", args.seq, args.batch)
+    pipe = SyntheticPipeline(DataConfig(kind="bigram", vocab=2048), ARCH_100M, shape)
+    print(f"bigram entropy floor: {pipe.bigram_entropy():.3f} nats")
+
+    t0 = time.time()
+    fail_at = args.steps // 2
+    pending = None
+    while cell.step < args.steps:
+        if cell.step == fail_at and cell.status != "recovered-once":
+            # ---- simulated node failure + restore from checkpoint --------
+            print(f"[{cell.step}] simulating failure; restoring from checkpoint")
+            if pending is not None:
+                pending.result()
+            step = ckpt.latest_step(args.ckpt_dir)
+            target = abstract_train_state(cell.model, cell.opt_cfg)
+            shardings = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(cell.mesh, s),
+                train_state_pspecs(cell.model))
+            cell.state = ckpt.restore(args.ckpt_dir, step, target, shardings)
+            cell.step = step
+            cell.status = "recovered-once"
+            print(f"  restored at step {step} "
+                  f"(data pipeline is deterministic — no batch skew)")
+        m = cell.train_steps(pipe.get_batch, 10)
+        if cell.step % args.ckpt_every == 0:
+            pending = ckpt.save(args.ckpt_dir, cell.step, cell.state, blocking=False)
+        tput = args.batch * args.seq * cell.step / (time.time() - t0)
+        print(f"[{cell.step:4d}] xent={m['xent']:.3f} lr={m['lr']:.2e} "
+              f"gnorm={m['grad_norm']:.2f} ({tput:,.0f} tok/s)")
+    if pending is not None:
+        pending.result()
+    print(f"final xent {m['xent']:.3f} vs floor {pipe.bigram_entropy():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Sharded, async, resharding-aware checkpointing.
+
+Layout:  <dir>/step_<N>/
+           meta.json           tree structure + shapes + dtypes
+           leaf_<i>.npy        one file per pytree leaf
+
+Restore takes target shardings, so a checkpoint written by a cell on mesh
+M1 restores onto mesh M2 (the failure-recovery / resize-across-restart
+path).  Saves run on a thread pool (async) and are atomic via tmp-dir
+rename; ``latest_step`` scans completed checkpoints only.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_POOL = ThreadPoolExecutor(max_workers=2)
+
+
+def _flatten_with_meta(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    meta = {
+        "treedef": str(treedef),
+        "leaves": [
+            {"shape": list(np.shape(l)), "dtype": str(np.asarray(l).dtype)}
+            for l in leaves
+        ],
+    }
+    return leaves, treedef, meta
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    """Non-native dtypes (bfloat16 etc.) are stored as raw uint views."""
+    if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return arr
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    import ml_dtypes  # registered numpy extension dtypes
+    want = np.dtype(getattr(ml_dtypes, dtype_name, dtype_name))
+    if arr.dtype != want and arr.dtype.kind == "u" and arr.dtype.itemsize == want.itemsize:
+        return arr.view(want)
+    return arr.astype(want)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True) -> Optional[Future]:
+    """Save a pytree.  Gathers to host then writes (atomic rename)."""
+    # Gather on the calling thread so device buffers may be donated afterwards.
+    leaves, _treedef, meta = _flatten_with_meta(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    def write():
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        for i, arr in enumerate(host_leaves):
+            np.save(os.path.join(tmp, f"leaf_{i}.npy"), _encode(arr))
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        return final
+
+    if blocking:
+        return write()
+    return _POOL.submit(write)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``target`` (pytree of arrays or
+    ShapeDtypeStructs), placing leaves with ``shardings`` when given —
+    this is the cross-mesh restore path (resharding happens in device_put).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    leaves, treedef = jax.tree.flatten(target)
+    if len(leaves) != len(meta["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(meta['leaves'])} leaves, target has {len(leaves)}"
+        )
+    out = []
+    shard_leaves = (
+        jax.tree.leaves(shardings, is_leaf=lambda s: s is None)
+        if shardings is not None else [None] * len(leaves)
+    )
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
+        arr = _decode(arr, meta["leaves"][i]["dtype"])
+        arr = arr.astype(ref.dtype) if str(arr.dtype) != str(ref.dtype) else arr
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

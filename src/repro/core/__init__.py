@@ -1,0 +1,15 @@
+"""IFTS core: supervisor + cells (subOSes) + elastic partitions + channels."""
+from repro.core.partition import (  # noqa: F401
+    DeviceGrid,
+    PartitionError,
+    PartitionTable,
+    Zone,
+    single_device_grid,
+)
+from repro.core.cell import Cell, CellError  # noqa: F401
+from repro.core.supervisor import Supervisor  # noqa: F401
+from repro.core.channels import ArrayChannel, ChannelError, ControlPlane  # noqa: F401
+from repro.core.elastic import ElasticPolicy, ThresholdScheduler  # noqa: F401
+from repro.core.guard import BoundaryGuard, BoundaryViolation  # noqa: F401
+from repro.core.accounting import CellAccounting, collective_bytes  # noqa: F401
+from repro.core.resharding import reshard_tree, tree_bytes  # noqa: F401

@@ -1,0 +1,112 @@
+"""Per-cell resource accounting.
+
+The paper argues the subOS abstraction makes accounting *exact*: a subOS
+owns its resources, so consumption attribution is unambiguous.  The same
+holds here — each cell's compiled programs yield per-device FLOPs/bytes
+(``cost_analysis``) and collective traffic (parsed from HLO), all of which
+belong to that cell alone because nothing is shared.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device output bytes of every collective op in an HLO module.
+
+    ``-start/-done`` pairs are counted once (on the ``-start``).
+    """
+    out: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        out[op] += _shape_bytes(shape_str)
+    return dict(out)
+
+
+@dataclasses.dataclass
+class ProgramCost:
+    name: str
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collective_per_device: Dict[str, int] = dataclasses.field(default_factory=dict)
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    invocations: int = 0
+
+    @property
+    def total_collective_bytes(self) -> int:
+        return sum(self.collective_per_device.values())
+
+
+class CellAccounting:
+    """Exact per-cell attribution of compiled-program costs."""
+
+    def __init__(self, cell_name: str):
+        self.cell = cell_name
+        self.programs: Dict[str, ProgramCost] = {}
+
+    def register_program(self, name: str, compiled, hlo_text: Optional[str] = None):
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        text = hlo_text if hlo_text is not None else compiled.as_text()
+        pc = ProgramCost(
+            name=name,
+            flops_per_device=float(ca.get("flops", 0.0)),
+            bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+            collective_per_device=collective_bytes(text),
+            arg_bytes=getattr(ma, "argument_size_in_bytes", 0),
+            temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
+        )
+        self.programs[name] = pc
+        return pc
+
+    def record_invocation(self, name: str, n: int = 1):
+        if name in self.programs:
+            self.programs[name].invocations += n
+
+    def totals(self) -> dict:
+        t = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+        for pc in self.programs.values():
+            t["flops"] += pc.flops_per_device * pc.invocations
+            t["bytes"] += pc.bytes_per_device * pc.invocations
+            t["collective_bytes"] += pc.total_collective_bytes * pc.invocations
+        return t

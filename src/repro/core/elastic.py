@@ -1,0 +1,69 @@
+"""Elastic (lt, ut) threshold scheduler — paper Fig 10/11.
+
+The paper bounds a latency-critical workload's tail latency with two
+thresholds: if the p99 over the last window exceeds ``ut``, a CPU moves
+from the batch OS instance to the serving instance; if it falls below
+``lt``, one moves back.  Here the unit is a mesh column and the move is
+``Supervisor.transfer_columns`` (live reshard on both cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    lt: float                    # lower tail-latency threshold (seconds or ms)
+    ut: float                    # upper threshold
+    window: int = 50             # samples in the sliding window
+    percentile: float = 99.0
+    cooldown: float = 0.0        # min seconds between actions
+    min_server_cols: int = 1
+    min_donor_cols: int = 1
+
+
+class ThresholdScheduler:
+    def __init__(self, supervisor, server: str, donor: str, policy: ElasticPolicy):
+        self.sup = supervisor
+        self.server = server
+        self.donor = donor
+        self.policy = policy
+        self.samples: Deque[float] = deque(maxlen=policy.window)
+        self.last_action_ts = -1e9
+        self.actions: List[dict] = []
+
+    def observe(self, latency: float):
+        self.samples.append(latency)
+
+    def tail(self) -> Optional[float]:
+        if len(self.samples) < max(5, self.policy.window // 5):
+            return None
+        return float(np.percentile(np.asarray(self.samples), self.policy.percentile))
+
+    def maybe_act(self, now: Optional[float] = None) -> Optional[dict]:
+        now = time.monotonic() if now is None else now
+        if now - self.last_action_ts < self.policy.cooldown:
+            return None
+        p = self.tail()
+        if p is None:
+            return None
+        server_cols = self.sup.cells[self.server].zone.ncols
+        donor_cols = self.sup.cells[self.donor].zone.ncols
+        action = None
+        if p > self.policy.ut and donor_cols > self.policy.min_donor_cols:
+            stats = self.sup.transfer_columns(self.donor, self.server, 1)
+            action = {"kind": "grow_server", "p_tail": p, **stats}
+        elif p < self.policy.lt and server_cols > self.policy.min_server_cols:
+            stats = self.sup.transfer_columns(self.server, self.donor, 1)
+            action = {"kind": "shrink_server", "p_tail": p, **stats}
+        if action:
+            action["ts"] = now
+            self.last_action_ts = now
+            self.actions.append(action)
+            self.samples.clear()   # fresh window after a topology change
+        return action

@@ -1,0 +1,94 @@
+"""BoundaryGuard — the Security-guard analogue.
+
+The paper's Security guard maps the partition descriptions read-only and
+checks privileged operations (page-table updates, ``mov-to-cr3``) against
+them.  Here the "privileged operation" is *running a compiled program*:
+the guard checks that
+
+1. every device the executable touches lies inside the cell's zone
+   (physical confinement), and
+2. the program was compiled under the current partition-table epoch for
+   that zone (no stale executables survive a resize — the resize is the
+   analogue of a page-table change).
+
+Like the paper (whose implementation omits enforcement), this is a
+validation layer: it raises on violation rather than sandboxing XLA.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import jax
+
+
+class BoundaryViolation(Exception):
+    pass
+
+
+def _sharding_devices(obj) -> set:
+    devs: set = set()
+    for leaf in jax.tree.leaves(obj):
+        mesh = getattr(leaf, "mesh", None)
+        if mesh is not None:
+            devs.update(d.id for d in mesh.devices.flat)
+        else:
+            ds = getattr(leaf, "device_set", None)
+            if ds:
+                devs.update(d.id for d in ds)
+    return devs
+
+
+def executable_device_ids(compiled) -> set:
+    """Device ids a compiled program will touch (from its shardings)."""
+    devs: set = set()
+    try:
+        ins = compiled.input_shardings
+        devs |= _sharding_devices(ins)
+    except Exception:
+        pass
+    try:
+        outs = compiled.output_shardings
+        devs |= _sharding_devices(outs)
+    except Exception:
+        pass
+    return devs
+
+
+class BoundaryGuard:
+    def __init__(self, table_provider):
+        """table_provider: zero-arg callable returning the current table."""
+        self._table = table_provider
+
+    def validate_devices(self, compiled, zone_device_ids: Iterable[int], cell_name: str):
+        used = executable_device_ids(compiled)
+        allowed = set(zone_device_ids)
+        extra = used - allowed
+        if extra:
+            raise BoundaryViolation(
+                f"cell {cell_name!r}: executable touches devices {sorted(extra)} "
+                f"outside its zone {sorted(allowed)}"
+            )
+
+    def validate_epoch(self, cell_name: str, bound_epoch: int):
+        table = self._table()
+        zone_epochs = getattr(table, "_zone_epochs", None)
+        # A cell's programs bind to the epoch at compile time.  Any table
+        # mutation that touched this cell's zone bumps its bound epoch via
+        # the supervisor; mismatch => stale program.
+        current = table.epoch
+        if bound_epoch > current:
+            raise BoundaryViolation(
+                f"cell {cell_name!r}: program bound to future epoch {bound_epoch} > {current}"
+            )
+
+    def validate(self, cell, compiled):
+        self.validate_devices(
+            compiled,
+            (d.id for d in cell.mesh.devices.flat),
+            cell.name,
+        )
+        if cell.bound_epoch != cell.zone_epoch:
+            raise BoundaryViolation(
+                f"cell {cell.name!r}: program compiled at epoch {cell.bound_epoch} "
+                f"but zone changed at epoch {cell.zone_epoch} (stale executable)"
+            )

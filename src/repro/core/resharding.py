@@ -1,0 +1,35 @@
+"""Live resharding: move a pytree of arrays between meshes/shardings.
+
+This is the mechanical core of "resizing a subOS": a cell's params,
+optimizer state and KV caches are re-placed under the new zone's mesh.
+``jax.device_put`` performs the cross-mesh transfer (ICI/DCN on real
+hardware); no checkpoint round-trip is involved — mirroring the paper's
+observation that the *elastic resize* path must be shorter than the
+failure path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(tree)
+    )
+
+
+def reshard_tree(tree: Any, target_shardings: Any, *, donate: bool = True) -> Tuple[Any, dict]:
+    """Place every leaf under its target sharding.  Returns (tree, stats)."""
+    t0 = time.monotonic()
+    nbytes = tree_bytes(tree)
+    out = jax.device_put(
+        tree, target_shardings, donate=donate, may_alias=not donate
+    )
+    out = jax.block_until_ready(out)
+    dt = time.monotonic() - t0
+    return out, {"bytes": nbytes, "seconds": dt,
+                 "gbps": nbytes / max(dt, 1e-9) / 1e9}

@@ -1,0 +1,210 @@
+"""Supervisor — discovers, monitors, and provisions; never on the step path.
+
+Owns the PartitionTable (epoch-versioned) and the cell registry; provides
+the paper's primitives: create / destroy / resize / transfer (preemption),
+fault detection via heartbeats, failed-column handling with
+checkpoint-restore recovery, and straggler mitigation by resizing away
+from slow columns.  Every operation is timestamped into an event log (the
+Table-4 elasticity measurements read from it).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core.cell import Cell, CellError
+from repro.core.channels import ArrayChannel, ControlPlane
+from repro.core.guard import BoundaryGuard
+from repro.core.partition import DeviceGrid, PartitionError, PartitionTable, Zone
+from repro.train.optimizer import OptConfig
+
+
+class Supervisor:
+    def __init__(self, grid: DeviceGrid, *, heartbeat_timeout: float = 30.0):
+        self.grid = grid
+        self.table = PartitionTable(grid_shape=grid.shape)
+        self.cells: Dict[str, Cell] = {}
+        self.control = ControlPlane()
+        self.control.register("supervisor")
+        self.guard = BoundaryGuard(lambda: self.table)
+        self.heartbeat_timeout = heartbeat_timeout
+        self.events: List[dict] = []
+        self.channels: List[ArrayChannel] = []
+
+    # ------------------------------------------------------------------
+    def _log(self, op: str, **kw):
+        evt = {"ts": time.monotonic(), "op": op, "epoch": self.table.epoch, **kw}
+        self.events.append(evt)
+        return evt
+
+    # ------------------------------------------------------------------
+    # lifecycle primitives
+    # ------------------------------------------------------------------
+    def create_cell(
+        self,
+        name: str,
+        arch: ArchConfig,
+        role: str,
+        *,
+        ncols: int = 1,
+        pods: Sequence[int] = (0,),
+        opt_cfg: Optional[OptConfig] = None,
+        parent: Optional[str] = None,
+    ) -> Cell:
+        t0 = time.monotonic()
+        self.table, zone = self.table.carve(name, ncols, pods)
+        cell = Cell(
+            name, zone, self.grid, arch, role,
+            epoch=self.table.epoch, opt_cfg=opt_cfg, parent=parent,
+        )
+        self.cells[name] = cell
+        self.control.register(name)
+        self._log("create", cell=name, ncols=ncols, seconds=time.monotonic() - t0)
+        return cell
+
+    def destroy_cell(self, name: str):
+        t0 = time.monotonic()
+        cell = self.cells.pop(name)
+        cell.destroy()
+        self.table = self.table.release(name)
+        self.control.unregister(name)
+        self._log("destroy", cell=name, seconds=time.monotonic() - t0)
+
+    def resize_cell(self, name: str, new_ncols: int) -> dict:
+        t0 = time.monotonic()
+        cell = self.cells[name]
+        self.table, zone = self.table.resize(name, new_ncols)
+        stats = cell.resize_to(zone, self.table.epoch)
+        stats["seconds_total"] = time.monotonic() - t0
+        self._log("resize", cell=name, **stats)
+        return stats
+
+    def transfer_columns(self, src: str, dst: str, ncols: int = 1) -> dict:
+        """Preemption path: move columns from a donor to a taker cell."""
+        t0 = time.monotonic()
+        self.table, zs, zd = self.table.transfer(src, dst, ncols)
+        s1 = self.cells[src].resize_to(zs, self.table.epoch)
+        s2 = self.cells[dst].resize_to(zd, self.table.epoch)
+        out = {
+            "seconds_total": time.monotonic() - t0,
+            "shrink": s1, "grow": s2,
+        }
+        self._log("transfer", src=src, dst=dst, ncols=ncols,
+                  seconds=out["seconds_total"])
+        return out
+
+    def spawn_child(self, parent_name: str, child_name: str, arch: ArchConfig,
+                    role: str, ncols: int = 1) -> Cell:
+        """Fork-like spawn: the child's zone is carved out of the parent's."""
+        parent = self.cells[parent_name]
+        if parent.zone.ncols - ncols < 1:
+            raise CellError("parent too small to fork")
+        self.table, pz = self.table.resize(parent_name, parent.zone.ncols - ncols)
+        parent.resize_to(pz, self.table.epoch)
+        child = self.create_cell(
+            child_name, arch, role, ncols=ncols, pods=parent.zone.pods,
+            parent=parent_name,
+        )
+        self._log("spawn_child", parent=parent_name, child=child_name)
+        return child
+
+    # ------------------------------------------------------------------
+    # health / fault tolerance
+    # ------------------------------------------------------------------
+    def check_health(self) -> List[str]:
+        now = time.monotonic()
+        dead = [
+            c.name for c in self.cells.values()
+            if c.status == "running" and now - c.last_heartbeat > self.heartbeat_timeout
+        ]
+        for name in dead:
+            self._log("dead_cell", cell=name)
+        return dead
+
+    def fail_column(self, pod: int, col: int) -> List[str]:
+        """A column (host/ICI ring) failed: evict affected cells."""
+        affected = [
+            z.name for z in self.table.zones if (pod, col) in z.columns()
+        ]
+        self.table = self.table.mark_failed(pod, col)
+        for name in affected:
+            cell = self.cells.get(name)
+            if cell:
+                cell.status = "failed"
+        self._log("fail_column", pod=pod, col=col, affected=affected)
+        return affected
+
+    def recover_cell(self, name: str, *, ncols: Optional[int] = None,
+                     ckpt_dir: Optional[str] = None) -> Cell:
+        """Re-carve a zone for a failed cell and restore from checkpoint."""
+        t0 = time.monotonic()
+        old = self.cells[name]
+        arch, role, opt_cfg = old.arch, old.role, old.opt_cfg
+        pods = old.zone.pods
+        want = ncols if ncols is not None else old.zone.ncols
+        if self.table.has_zone(name):
+            self.table = self.table.release(name)
+        del self.cells[name]
+        self.control.unregister(name)
+        cell = None
+        for try_cols in range(want, 0, -1):
+            try:
+                cell = self.create_cell(name, arch, role, ncols=try_cols,
+                                        pods=pods, opt_cfg=opt_cfg)
+                break
+            except PartitionError:
+                continue
+        if cell is None:
+            raise PartitionError(
+                f"cannot recover {name!r}: no free columns on pods {list(pods)}"
+            )
+        if cell.zone.ncols < want:
+            self._log("recover_degraded", cell=name, want=want,
+                      got=cell.zone.ncols)
+        if ckpt_dir is not None:
+            import jax
+            from repro.checkpoint import checkpoint as ckpt
+            from repro.train.train_step import abstract_train_state, train_state_pspecs
+            step = ckpt.latest_step(ckpt_dir)
+            if step is not None:
+                target = abstract_train_state(cell.model, cell.opt_cfg)
+                shardings = jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(cell.mesh, s),
+                    train_state_pspecs(cell.model),
+                )
+                cell.state = ckpt.restore(ckpt_dir, step, target, shardings)
+                cell.step = step
+                cell.status = "running"
+        self._log("recover", cell=name, seconds=time.monotonic() - t0)
+        return cell
+
+    def mitigate_straggler(self, name: str, slow_col: int) -> dict:
+        """Straggler policy: shrink the cell off a slow column and re-grow
+        elsewhere (resize-away)."""
+        cell = self.cells[name]
+        pod = cell.zone.pods[0]
+        affected = self.fail_column(pod, slow_col)  # quarantine slow column
+        if name in affected:
+            return {"action": "recovered", "cell": self.recover_cell(name).name}
+        return {"action": "none"}
+
+    # ------------------------------------------------------------------
+    # channels (on-demand sharing)
+    # ------------------------------------------------------------------
+    def open_channel(self, src: str, dst: str) -> ArrayChannel:
+        ch = ArrayChannel(self.cells[src], self.cells[dst])
+        self.channels.append(ch)
+        self._log("open_channel", src=src, dst=dst, cid=ch.cid)
+        return ch
+
+    # ------------------------------------------------------------------
+    def validate_cell_programs(self, name: str):
+        """Run the BoundaryGuard over a cell's compiled programs."""
+        cell = self.cells[name]
+        for prog_name, prog in cell._programs.items():
+            # jitted callables cache compiled artifacts internally; guard
+            # checks are run at registration time in Cell; here we check
+            # epoch binding.
+            pass
+        self.guard.validate_epoch(name, cell.bound_epoch)

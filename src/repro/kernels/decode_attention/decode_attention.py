@@ -1,0 +1,111 @@
+"""Flash-decode TPU kernel: one query token vs a long KV cache.
+
+Decode is HBM-bandwidth-bound (the entire KV cache is streamed once per
+token), so the kernel's job is to keep the streaming dense and the
+softmax state in VMEM: grid (B, Hkv, nk) with the kv dim innermost; each
+step loads a (block_k, Dh) K/V tile, updates the running (m, l, acc) for
+all G query heads of the kv group, and emits the normalized output on the
+last step.  Length masking comes from a per-batch ``kv_len`` scalar block.
+
+On real hardware the nk dimension maps to the sequential grid walk
+(``arbitrary``), giving the classic split-KV streaming pattern; splits
+across the model axis are combined outside the kernel with an LSE merge
+(see serve/distributed decode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, block_k: int, nk: int, G: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = kvlen_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)                # (G, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (bk, Dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (G, bk)
+        pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(
+    q, k_cache, v_cache, kv_len, *, block_k: int = 512, interpret: bool = True,
+):
+    """q: (B, Hq, Dh); k/v_cache: (B, S, Hkv, Dh); kv_len: (B,) int32."""
+    B, Hq, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    qg = q.reshape(B, Hkv, G, Dh)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=1.0 / math.sqrt(Dh), block_k=block_k, nk=nk, G=G,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, Dh), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, block_k, 1, Dh), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention",
+    )(kv_len, qg, k_cache, v_cache)
+    return out.reshape(B, Hq, Dh)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len):
+    """q: (B, Hq, Dh); k/v_cache: (B, S, Hkv, Dh); kv_len: (B,) valid count.
+
+    Returns (B, Hq, Dh).  Slot i holds position i; positions >= kv_len are
+    masked.
+    """
+    B, S, Hkv, Dh = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    valid = jnp.arange(S)[None] < kv_len[:, None]               # (B, S)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, Dh).astype(q.dtype)

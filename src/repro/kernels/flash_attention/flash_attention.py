@@ -1,0 +1,131 @@
+"""Flash attention TPU kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+Layout: q (B, Hq, Sq, Dh), k/v (B, Hkv, Skv, Dh).  Grid (B, Hq, nq, nk)
+with the kv dimension innermost ("arbitrary" semantics): the (m, l, acc)
+running-softmax state lives in VMEM scratch and is carried across kv grid
+steps; the output block is written on the last kv step.  Causal + sliding
+window masking; fully-masked kv blocks are skipped with ``pl.when``.
+
+Block sizes are chosen so the working set
+(q_blk + k_blk + v_blk + acc = bq*Dh*4 + 2*bk*Dh*2 + bq*bk*4 bytes)
+fits comfortably in the ~16 MiB of VMEM with MXU-aligned (128-multiple)
+tile dims.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,      # blocks
+    m_scr, l_scr, acc_scr,           # VMEM scratch (carried over kv steps)
+    *, scale: float, causal: bool, window: Optional[int],
+    block_q: int, block_k: int, nk: int, seq_off: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + seq_off          # absolute q positions
+    k_start = ki * block_k
+
+    # skip blocks that are entirely masked
+    run = True
+    if causal:
+        run = (q_start + block_q - 1) >= k_start
+    if window is not None:
+        # newest k in block must be > oldest q - window
+        run = jnp.logical_and(run, (k_start + block_k - 1) > (q_start - window))
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)               # (bq, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    block_q: int = 512, block_k: int = 512, interpret: bool = True,
+):
+    """q: (B, Hq, Sq, Dh); k/v: (B, Hkv, Skv, Dh) -> (B, Hq, Sq, Dh)."""
+    B, Hq, Sq, Dh = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, block_q, Skv, block_k)
+    nq, nk = Sq // block_q, Skv // block_k
+    seq_off = Skv - Sq                 # q block positions count from the end
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / math.sqrt(Dh),
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk, seq_off=seq_off,
+    )
+    grid = (B, Hq, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts the model's (B, S, H, Dh) layout, dispatches to the Pallas kernel
+(interpret=True on CPU — the kernel body executes for correctness; real
+Mosaic lowering on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    block_q: int = 512, block_k: int = 512,
+):
+    """q: (B, Sq, Hq, Dh); k/v: (B, Skv, Hkv, Dh) -> (B, Sq, Hq, Dh)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
+    )
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (naive full-matrix softmax)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+):
+    """q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh) -> (B, Hq, Sq, Dh).
+
+    GQA by head grouping (head h uses kv head h // (Hq//Hkv)).
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kf = jnp.repeat(k, G, axis=1)
+    vf = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (q suffix)
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.moe_gmm.ops import gmm  # noqa: F401
+from repro.kernels.moe_gmm.ref import gmm_ref  # noqa: F401

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the grouped expert GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gmm.moe_gmm import gmm as _gmm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f"))
+def gmm(x, w, counts, *, block_c: int = 128, block_f: int = 512):
+    return _gmm(x, w, counts, block_c=block_c, block_f=block_f,
+                interpret=not _on_tpu())

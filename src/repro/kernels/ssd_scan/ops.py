@@ -1,0 +1,71 @@
+"""jit'd SSD wrapper: Pallas per-chunk kernel + jnp inter-chunk recurrence.
+
+Produces the same (y, final_state) contract as
+``repro.models.mamba2.ssd_chunked`` (the oracle) and is numerically
+interchangeable with it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_chunks
+
+F32 = jnp.float32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A_log, B_in, C_in, *, chunk: int = 256, initial_state=None):
+    """x: (B,S,H,P); dt: (B,S,H); A_log: (H,); B/C: (B,S,G,N).
+
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32).
+    """
+    Bb, S, H, P_ = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    A = -jnp.exp(A_log.astype(F32))
+    dA = (dt.astype(F32) * A)                                  # (B,S,H)
+    xw = x.astype(F32) * dt.astype(F32)[..., None]
+
+    xk = xw.reshape(Bb, nc, Q, H, P_).transpose(0, 3, 1, 2, 4)     # (B,H,nc,Q,P)
+    dAk = dA.reshape(Bb, nc, Q, H).transpose(0, 3, 1, 2)           # (B,H,nc,Q)
+    Bk = B_in.astype(F32).reshape(Bb, nc, Q, G, N).transpose(0, 3, 1, 2, 4)
+    Ck = C_in.astype(F32).reshape(Bb, nc, Q, G, N).transpose(0, 3, 1, 2, 4)
+
+    y_diag, states, decay = ssd_chunks(xk, dAk, Bk, Ck, interpret=not _on_tpu())
+
+    # inter-chunk recurrence over the nc per-chunk states
+    if initial_state is None:
+        initial_state = jnp.zeros((Bb, H, P_, N), F32)
+    a_seq = decay.transpose(2, 0, 1)[..., None, None]          # (nc,B,H,1,1)
+    s_seq = states.transpose(2, 0, 1, 3, 4)                    # (nc,B,H,P,N)
+
+    def combine(c1, c2):
+        a1, h1 = c1
+        a2, h2 = c2
+        return a1 * a2, h1 * a2 + h2
+
+    a_all, h_all = jax.lax.associative_scan(combine, (a_seq, s_seq), axis=0)
+    prev = jnp.concatenate([jnp.zeros_like(h_all[:1]), h_all[:-1]], 0) + \
+        jnp.concatenate([jnp.ones_like(a_all[:1]), a_all[:-1]], 0) * initial_state[None]
+    prev = prev.transpose(1, 2, 0, 3, 4)                       # (B,H,nc,P,N)
+    final = h_all[-1] + a_all[-1] * initial_state
+
+    # state -> output term (dense einsum; OK for XLA)
+    cs = jnp.cumsum(dAk, axis=-1)                              # (B,H,nc,Q)
+    out_decay = jnp.exp(cs)
+    HG = H // G
+    Ch = jnp.repeat(Ck, HG, axis=1)                            # (B,H,nc,Q,N)
+    y_off = jnp.einsum("bhcqn,bhcpn,bhcq->bhcqp", Ch, prev, out_decay)
+
+    y = (y_diag + y_off).transpose(0, 2, 3, 1, 4).reshape(Bb, S, H, P_)
+    return y, final

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the per-chunk SSD computation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dA, B, C):
+    """Per-chunk SSD (intra-chunk output + chunk state + chunk decay).
+
+    x:  (Bb, H, nc, Q, P)   dt-weighted inputs
+    dA: (Bb, H, nc, Q)      per-step log decays (dt * A, negative)
+    B, C: (Bb, G, nc, Q, N) group-shared input/output projections
+
+    Returns (y_diag (Bb,H,nc,Q,P), states (Bb,H,nc,P,N), decay (Bb,H,nc)).
+    """
+    Bb, H, nc, Q, P = x.shape
+    G = B.shape[1]
+    HG = H // G
+    cs = jnp.cumsum(dA, axis=-1)                               # (Bb,H,nc,Q)
+    diff = cs[..., :, None] - cs[..., None, :]
+    L = jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), jnp.exp(diff), 0.0)
+    Bh = jnp.repeat(B, HG, axis=1)                             # (Bb,H,nc,Q,N)
+    Ch = jnp.repeat(C, HG, axis=1)
+    scores = jnp.einsum("bhcqn,bhckn->bhcqk", Ch, Bh) * L
+    y_diag = jnp.einsum("bhcqk,bhckp->bhcqp", scores, x)
+    decay_states = jnp.exp(cs[..., -1:] - cs)                  # (Bb,H,nc,Q)
+    states = jnp.einsum("bhcqp,bhcqn,bhcq->bhcpn", x, Bh, decay_states)
+    decay = jnp.exp(cs[..., -1])                               # (Bb,H,nc)
+    return y_diag, states, decay

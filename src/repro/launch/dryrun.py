@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST stay first — jax locks the device count on
+# first init.  (That is also why this file has no `from __future__` import.)
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we record, from the compiled artifact:
+  * memory_analysis  (bytes/device — proves it fits)
+  * cost_analysis    (per-device HLO FLOPs / bytes accessed)
+  * per-collective traffic parsed from the post-SPMD HLO text
+
+Results go to ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both]
+"""
+__doc__ = _DOC
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ArchConfig, ShapeConfig, shapes_for, with_opt_level
+from repro.configs.registry import ARCHS, get_arch
+from repro.core.accounting import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.sharding.rules import make_ctx
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (
+    abstract_train_state,
+    build_train_step,
+    train_state_pspecs,
+)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def lower_cell(arch: ArchConfig, shape: ShapeConfig, mesh, *, opt_cfg=None):
+    """Lower the right program for a (arch, shape) cell on a mesh."""
+    # serving cells skip FSDP weight sharding (no optimizer state; avoids
+    # a per-step weight all-gather) unless the arch needs it to fit
+    fsdp = True if shape.kind == "train" else arch.serve_fsdp
+    zero3_ok = (shape.kind == "train" and arch.train_layout == "zero3"
+                and shape.global_batch % int(mesh.devices.size) == 0)
+    ctx = make_ctx(mesh, fsdp=fsdp, dp_over_model=zero3_ok)
+    model = build_model(arch, ctx)
+    batch_sds, batch_pspecs = model.batch_specs(shape)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptConfig(m_dtype=arch.optimizer_m_dtype)
+        state_sds = abstract_train_state(model, opt_cfg)
+        state_ps = train_state_pspecs(model)
+        fn = build_train_step(model, opt_cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(_ns(mesh, state_ps), _ns(mesh, batch_pspecs)),
+            out_shardings=(_ns(mesh, state_ps), None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_sds, batch_sds)
+    elif shape.kind == "prefill":
+        params_sds = model.abstract_params()
+        params_ps = model.params_pspecs()
+        cache_sds = model.abstract_cache(B, S)
+        cache_ps = model.cache_pspecs(B, S)
+        jitted = jax.jit(
+            model.prefill,
+            in_shardings=(_ns(mesh, params_ps), _ns(mesh, batch_pspecs),
+                          _ns(mesh, cache_ps)),
+            out_shardings=(None, _ns(mesh, cache_ps)),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(params_sds, batch_sds, cache_sds)
+    else:  # decode
+        params_sds = model.abstract_params()
+        params_ps = model.params_pspecs()
+        cache_sds = model.abstract_cache(B, S)
+        cache_ps = model.cache_pspecs(B, S)
+        jitted = jax.jit(
+            model.decode,
+            in_shardings=(_ns(mesh, params_ps), _ns(mesh, cache_ps),
+                          _ns(mesh, batch_pspecs)),
+            out_shardings=(None, _ns(mesh, cache_ps)),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_sds, cache_sds, batch_sds)
+    return model, lowered
+
+
+def run_cell(arch: ArchConfig, shape: ShapeConfig, mesh, mesh_name: str,
+             *, verbose: bool = True) -> dict:
+    n_dev = int(mesh.devices.size)
+    t0 = time.monotonic()
+    model, lowered = lower_cell(arch, shape, mesh)
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+
+    rec = {
+        "arch": arch.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "devices": n_dev,
+        "n_params": model.n_params(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": colls,
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_estimate_bytes": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        },
+    }
+    if verbose:
+        mem_gb = rec["memory"]["peak_estimate_bytes"] / 2**30
+        print(
+            f"[dryrun] {arch.name:24s} {shape.name:12s} {mesh_name:6s} "
+            f"compile={t_compile:6.1f}s flops/dev={rec['flops_per_device']:.3e} "
+            f"mem/dev={mem_gb:6.2f}GiB coll={sum(colls.values())/2**20:8.1f}MiB"
+        )
+    return rec
+
+
+def out_path(root: str, mesh_name: str, arch: str, shape: str) -> str:
+    d = os.path.join(root, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape}.json")
+
+
+def main(argv: Optional[list] = None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="arch id (default: all)")
+    p.add_argument("--shape", default=None, help="shape name (default: all)")
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--level", default="optimized", choices=["baseline", "optimized"])
+    p.add_argument("--skip-existing", action="store_true")
+    args = p.parse_args(argv)
+
+    archs = [get_arch(args.arch)] if args.arch else list(ARCHS.values())
+    archs = [with_opt_level(a, args.level == "optimized") for a in archs]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    failures = []
+    for arch in archs:
+        shapes = shapes_for(arch)
+        if args.shape:
+            shapes = [s for s in shapes if s.name == args.shape]
+            if not shapes:
+                print(f"[dryrun] {arch.name}: shape {args.shape} skipped "
+                      f"(not applicable — see DESIGN.md)")
+                continue
+        for shape in shapes:
+            for mesh_name, mesh in meshes:
+                path = out_path(args.out, mesh_name, arch.name, shape.name)
+                if args.skip_existing and os.path.exists(path):
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mesh, mesh_name)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch.name, shape.name, mesh_name, str(e)[:200]))
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("\nAll dry-run cells compiled successfully.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

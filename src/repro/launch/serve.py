@@ -1,0 +1,59 @@
+"""Serving driver: spawn a serving cell and run batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --requests 32 --slots 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs.base import smoke_config, with_opt_level
+from repro.configs.registry import get_arch
+from repro.core import Supervisor, single_device_grid
+from repro.serve.batcher import Request
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-4b")
+    p.add_argument("--smoke", action="store_true", default=True)
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--max-len", type=int, default=128)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--temperature", type=float, default=0.0)
+    args = p.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if args.smoke:
+        arch = smoke_config(arch)
+    arch = with_opt_level(arch, True)
+
+    sup = Supervisor(single_device_grid())
+    cell = sup.create_cell(arch.name, arch, "serve", ncols=1)
+    cell.init_serve()
+    bat = cell.make_batcher(batch_slots=args.slots, max_len=args.max_len,
+                            temperature=args.temperature)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for rid in range(args.requests):
+        prompt = rng.integers(0, arch.vocab, size=rng.integers(2, 12)).astype(np.int32)
+        bat.submit(Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new))
+    done = bat.run_until_drained()
+    dt = time.time() - t0
+
+    lats = sorted(r.latency for r in done)
+    toks = sum(len(r.output) for r in done)
+    print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)")
+    print(f"[serve] latency p50={lats[len(lats)//2]*1e3:.1f}ms "
+          f"p99={lats[int(len(lats)*0.99)-1]*1e3:.1f}ms")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

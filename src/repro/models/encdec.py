@@ -1,0 +1,118 @@
+"""Encoder-decoder layers (SeamlessM4T backbone).
+
+Encoder: bidirectional self-attention + FFN over precomputed source frame
+embeddings (audio frontend stub).  Decoder: causal self-attention +
+cross-attention to the encoder output + FFN.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (
+    KVSlice,
+    attention_block,
+    attn_specs,
+    chunked_attention,
+    mlp_block,
+    mlp_specs,
+    norm_spec,
+    rms_norm,
+)
+from repro.models.param import PSpec
+
+
+def cross_attn_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    return {
+        "wq": PSpec((d, hq, dh), ("embed", "heads", None), ("normal", 0)),
+        "wk": PSpec((d, hkv, dh), ("embed", "kv_heads", None), ("normal", 0)),
+        "wv": PSpec((d, hkv, dh), ("embed", "kv_heads", None), ("normal", 0)),
+        "wo": PSpec((hq, dh, d), ("heads", None, "embed"), ("normal", 0)),
+    }
+
+
+def enc_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "attn_norm": norm_spec(cfg.d_model),
+        "attn": attn_specs(cfg),
+        "mlp_norm": norm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "attn_norm": norm_spec(cfg.d_model),
+        "attn": attn_specs(cfg),
+        "cross_norm": norm_spec(cfg.d_model),
+        "cross": cross_attn_specs(cfg),
+        "mlp_norm": norm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+class DecCache(NamedTuple):
+    self_kv: KVSlice
+    cross_k: jnp.ndarray   # (B, S_src, Hkv, Dh)
+    cross_v: jnp.ndarray
+
+
+def enc_layer(lp, x, cfg: ArchConfig, ctx=None) -> Tuple[jnp.ndarray, None, jnp.ndarray]:
+    h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+    a, _ = attention_block(lp["attn"], h, cfg, ctx, mode="train", causal=False)
+    x = x + a
+    h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+    x = x + mlp_block(lp["mlp"], h, cfg)
+    return x, None, jnp.float32(0.0)
+
+
+def cross_attend(cp, x, ck, cv, cfg: ArchConfig):
+    """x: (B,Sq,D); ck/cv: (B,Skv,Hkv,Dh) precomputed; full (unmasked) attn."""
+    q = jnp.einsum("bsd,dhk->bshk", x, cp["wq"])
+    out = chunked_attention(
+        q, ck, cv, causal=False,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        unroll=cfg.unroll_attn,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, cp["wo"])
+
+
+def cross_kv(cp, memory):
+    ck = jnp.einsum("bsd,dhk->bshk", memory, cp["wk"])
+    cv = jnp.einsum("bsd,dhk->bshk", memory, cp["wv"])
+    return ck, cv
+
+
+def dec_layer(
+    lp, x, cfg: ArchConfig, ctx=None, *, mode: str,
+    memory: Optional[jnp.ndarray] = None,       # encoder output (train/prefill)
+    cache: Optional[DecCache] = None, pos=None,
+) -> Tuple[jnp.ndarray, Optional[DecCache], jnp.ndarray]:
+    h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+    a, new_self = attention_block(
+        lp["attn"], h, cfg, ctx, mode=mode,
+        cache=None if cache is None else cache.self_kv, pos=pos,
+    )
+    x = x + a
+
+    h = rms_norm(x, lp["cross_norm"], cfg.rms_eps)
+    if mode in ("train", "prefill"):
+        assert memory is not None
+        ck, cv = cross_kv(lp["cross"], memory)
+    else:
+        assert cache is not None
+        ck, cv = cache.cross_k, cache.cross_v
+    x = x + cross_attend(lp["cross"], h, ck, cv, cfg)
+
+    h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+    x = x + mlp_block(lp["mlp"], h, cfg)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = DecCache(self_kv=new_self, cross_k=ck, cross_v=cv)
+    return x, new_cache, jnp.float32(0.0)

@@ -1,0 +1,444 @@
+"""Shared model layers: norms, RoPE, attention, MLPs, embeddings.
+
+All attention paths are memory-bounded by construction: the baseline is a
+chunked flash-style attention written in pure jnp (XLA-visible FLOPs so the
+roofline terms from ``cost_analysis`` are exact).  The Pallas kernel path
+(``cfg.use_flash_kernel``) swaps in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.param import PSpec  # noqa: F401  (re-exported for layer specs)
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x, w, eps: float):
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(F32)).astype(x.dtype)
+
+
+def norm_spec(d: int) -> PSpec:
+    return PSpec((d,), (None,), ("const", 1.0))
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=F32) / half)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # (Dh/2,)
+    angles = positions.astype(F32)[..., None] * freqs        # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked flash-style attention (pure jnp baseline)
+# --------------------------------------------------------------------------
+def _block_mask(q_pos, k_pos, causal: bool, window: Optional[int], kv_len=None):
+    """(qc, kc) bool mask of VALID entries from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    unroll: bool = False,
+):
+    """Flash-algorithm attention in jnp (running max/sum over KV chunks).
+
+    q: (B, Sq, Hq, Dh);  k, v: (B, Skv, Hkv, Dh);  GQA via head grouping.
+    Returns (B, Sq, Hq, Dh).
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0
+
+    qg = q.reshape(B, nq, q_chunk, Hkv, G, Dh)
+    kg = k.reshape(B, nk, kv_chunk, Hkv, Dh)
+    vg = v.reshape(B, nk, kv_chunk, Hkv, Dh)
+
+    def q_body(_, qi):
+        qblk, qidx = qi                                       # (B,qc,Hkv,G,Dh)
+        q_pos = q_offset + qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            k_pos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qblk.astype(F32), kblk.astype(F32)
+            ) * scale                                         # (B,Hkv,G,qc,kc)
+            mask = _block_mask(q_pos, k_pos, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk.astype(F32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, F32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), F32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dh), F32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (kg.swapaxes(0, 1), vg.swapaxes(0, 1), jnp.arange(nk)),
+            unroll=nk if unroll else 1,
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,Hkv,G,qc,Dh)
+        return None, out.transpose(0, 3, 1, 2, 4)             # (B,qc,Hkv,G,Dh)
+
+    _, outs = jax.lax.scan(q_body, None, (qg.swapaxes(0, 1), jnp.arange(nq)),
+                           unroll=nq if unroll else 1)
+    out = outs.swapaxes(0, 1).reshape(B, Sq, Hq, Dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len, *, window: Optional[int] = None,
+                         slot_pos: Optional[jnp.ndarray] = None):
+    """Single-position attention against a (possibly rolling) KV cache.
+
+    q: (B, 1, Hq, Dh);  k/v_cache: (B, S, Hkv, Dh);  kv_len: (B,) valid count.
+    slot_pos: (B, S) absolute position stored in each slot (rolling SWA
+    buffers), or None meaning slot i holds position i.
+    Returns (B, 1, Hq, Dh).
+    """
+    B, S, Hkv, Dh = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(F32), k_cache.astype(F32)) * scale
+    if slot_pos is None:
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    else:
+        pos = slot_pos
+    valid = pos < kv_len[:, None]
+    if window is not None:
+        valid &= pos > (kv_len[:, None] - 1 - window)
+    valid &= pos >= 0
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(F32))
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention block (QKV proj + rope + attn + out proj)
+# --------------------------------------------------------------------------
+def attn_specs(cfg: ArchConfig, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    dh = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    specs = {
+        "wq": PSpec((d, hq, dh), ("embed", "heads", None), ("normal", 0)),
+        "wk": PSpec((d, hkv, dh), ("embed", "kv_heads", None), ("normal", 0)),
+        "wv": PSpec((d, hkv, dh), ("embed", "kv_heads", None), ("normal", 0)),
+        "wo": PSpec((hq, dh, cfg.d_model), ("heads", None, "embed"), ("normal", 0)),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = PSpec((hq, dh), ("heads", None), ("const", 0.0))
+        specs["bk"] = PSpec((hkv, dh), ("kv_heads", None), ("const", 0.0))
+        specs["bv"] = PSpec((hkv, dh), ("kv_heads", None), ("const", 0.0))
+    if cfg.qk_norm:
+        specs["q_norm"] = norm_spec(dh)
+        specs["k_norm"] = norm_spec(dh)
+    return specs
+
+
+class KVSlice(NamedTuple):
+    """Per-layer KV cache slice carried through the layer scan."""
+    k: jnp.ndarray          # (B, S_cache, Hkv, Dh)
+    v: jnp.ndarray
+    # absolute position stored in each slot; -1 = empty (for SWA rolling)
+    slot_pos: jnp.ndarray   # (B, S_cache) int32
+
+
+def qkv_project(p, x, cfg: ArchConfig, positions):
+    """x: (B,S,D) -> q (B,S,Hq,Dh), k,v (B,S,Hkv,Dh), roped."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    p, x, cfg: ArchConfig, ctx=None, *,
+    mode: str,                       # train | prefill | decode
+    cache: Optional[KVSlice] = None,
+    pos: Optional[jnp.ndarray] = None,   # (B,) next position (decode) or 0-base
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[KVSlice]]:
+    """Full attention sublayer.  Returns (out (B,S,D), updated cache)."""
+    B, S, _ = x.shape
+    window = cfg.sliding_window
+
+    # Attention parallelism: shard heads over the model axis when the head
+    # count divides it (Megatron TP).  Otherwise (56/40-head archs on a
+    # 16-wide axis) fall back to context parallelism: q/out sharded along
+    # the sequence, KV replicated — each shard computes its q rows against
+    # the full KV.  Without either, GSPMD replicates heads AND seq and the
+    # score matrices blow past HBM.
+    msz = ctx.model_size() if ctx is not None else 1
+    heads_div = msz <= 1 or (cfg.num_heads % msz == 0)
+
+    def head_shard(t):
+        if ctx is None:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, ctx.sharding(("batch", None, "heads", None), t.shape)
+        )
+
+    def seq_shard(t):
+        if ctx is None:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, ctx.sharding(("batch", "act_seq", None, None), t.shape)
+        )
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(S)[None, :]
+        if heads_div and ctx is not None:
+            # Megatron-SP all-gather placement: restore full-seq *before*
+            # the QKV projection so its output lands head-sharded directly.
+            # Resharding seq->heads after the fact makes GSPMD fall back to
+            # "involuntary full rematerialization" (replicate + repartition).
+            x = jax.lax.with_sharding_constraint(
+                x, ctx.sharding(("batch", None, None), x.shape)
+            )
+        q, k, v = qkv_project(p, x, cfg, positions)
+        G = cfg.num_heads // max(cfg.num_kv_heads, 1)
+        if G > 1:
+            # expand KV to full heads so the head dim (divisible by the
+            # model axis) shards; the expansion is local under head sharding
+            ke = jnp.repeat(k, G, axis=2)
+            ve = jnp.repeat(v, G, axis=2)
+        else:
+            ke, ve = k, v
+        if heads_div:
+            q, ke, ve = head_shard(q), head_shard(ke), head_shard(ve)
+            out = chunked_attention(
+                q, ke, ve, causal=causal, window=window,
+                q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+                unroll=cfg.unroll_attn,
+            )
+            out = head_shard(out)
+        else:
+            q, ke, ve = seq_shard(q), ke, ve
+            # single q chunk: q stays sequence-sharded through the whole
+            # attention (no per-chunk dynamic-slice resharding)
+            out = chunked_attention(
+                q, ke, ve, causal=causal, window=window, q_chunk=S,
+                kv_chunk=cfg.attn_kv_chunk, unroll=cfg.unroll_attn,
+            )
+            out = seq_shard(out)
+        new_cache = None
+        if mode == "prefill":
+            assert cache is not None
+            S_c = cache.k.shape[1]
+            if S_c >= S:
+                kpad = jnp.zeros((B, S_c - S) + k.shape[2:], k.dtype)
+                new_cache = KVSlice(
+                    k=jnp.concatenate([k, kpad], axis=1),
+                    v=jnp.concatenate([v, kpad], axis=1),
+                    slot_pos=jnp.where(
+                        jnp.arange(S_c)[None] < S,
+                        jnp.arange(S_c)[None],
+                        -1,
+                    ) * jnp.ones((B, 1), jnp.int32),
+                )
+            else:
+                # rolling (SWA) cache: keep the last S_c positions
+                new_cache = KVSlice(
+                    k=k[:, -S_c:], v=v[:, -S_c:],
+                    slot_pos=(jnp.arange(S - S_c, S)[None]
+                              * jnp.ones((B, 1), jnp.int32)),
+                )
+    elif mode == "decode":
+        assert cache is not None and pos is not None
+        positions = pos[:, None]                              # (B,1)
+        q, k, v = qkv_project(p, x, cfg, positions)           # S == 1
+        S_c = cache.k.shape[1]
+        use_sharded = (
+            cfg.sharded_decode and ctx is not None and cfg.decode_kv_shard_seq
+            # batch must shard over the data axes, else the manual path
+            # replicates per-rank work that pjit-auto handles better (B=1
+            # long-context cells)
+            and B % max(ctx.dp_size(), 1) == 0
+        )
+        if use_sharded:
+            from repro.models.sharded_decode import sharded_decode_attention
+            try:
+                out, new_cache = sharded_decode_attention(
+                    ctx, q, cache, k, v, pos, window=window
+                )
+            except ValueError:       # cache seq not actually sharded
+                use_sharded = False
+        if not use_sharded:
+            if window is not None and S_c <= window:
+                slot = (pos % S_c)                            # rolling buffer
+            else:
+                slot = jnp.minimum(pos, S_c - 1)
+            bidx = jnp.arange(B)
+            k_c = cache.k.at[bidx, slot].set(k[:, 0])
+            v_c = cache.v.at[bidx, slot].set(v[:, 0])
+            sp = cache.slot_pos.at[bidx, slot].set(pos)
+            kv_len = pos + 1
+            out = decode_attention_ref(
+                q, k_c, v_c, kv_len, window=window, slot_pos=sp
+            )
+            new_cache = KVSlice(k=k_c, v=v_c, slot_pos=sp)
+    else:
+        raise ValueError(mode)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def kv_slice_specs(cfg: ArchConfig, batch: int, max_len: int) -> KVSlice:
+    """PSpec tree for one layer's KV cache slice.
+
+    The cache sequence dim carries the ``kv_seq`` logical axis (sharded over
+    data/model per the rules — distributed decode), or ``kv_heads`` when
+    ``cfg.decode_kv_shard_seq`` is off.
+    """
+    S_c = max_len if cfg.sliding_window is None else min(max_len, cfg.sliding_window)
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.decode_kv_shard_seq:
+        axes = ("batch", "kv_seq", None, None)
+    else:
+        axes = ("batch", None, "kv_heads", None)
+    return KVSlice(
+        k=PSpec((batch, S_c, hkv, dh), axes, ("const", 0.0)),
+        v=PSpec((batch, S_c, hkv, dh), axes, ("const", 0.0)),
+        slot_pos=PSpec((batch, S_c), ("batch", axes[1] if axes[1] == "kv_seq" else None),
+                       ("const", -1), dtype="int32"),
+    )
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None, d_in: Optional[int] = None) -> dict:
+    d, f = d_in or cfg.d_model, d_ff or cfg.d_ff
+    if cfg.gated_mlp:
+        return {
+            "w_gate": PSpec((d, f), ("embed", "ffn"), ("normal", 0)),
+            "w_up": PSpec((d, f), ("embed", "ffn"), ("normal", 0)),
+            "w_down": PSpec((f, d), ("ffn", "embed"), ("normal", 0)),
+        }
+    return {
+        "w_up": PSpec((d, f), ("embed", "ffn"), ("normal", 0)),
+        "w_down": PSpec((f, d), ("ffn", "embed"), ("normal", 0)),
+    }
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sq_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def mlp_block(p, x, cfg: ArchConfig):
+    act = _act(cfg.act)
+    if cfg.gated_mlp:
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / logits / loss
+# --------------------------------------------------------------------------
+def pad_vocab(vocab: int, multiple: int) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def embed_spec(vocab_padded: int, d: int) -> PSpec:
+    return PSpec((vocab_padded, d), ("vocab", "embed"), ("normal", 1))
+
+
+def out_spec(d: int, vocab_padded: int) -> PSpec:
+    return PSpec((d, vocab_padded), ("embed", "vocab"), ("normal", 0))
+
+
+def logits_fn(x, out_w, real_vocab: int):
+    """x: (B,S,D) -> fp32 logits with padded-vocab tail masked."""
+    logits = jnp.einsum("bsd,dv->bsv", x, out_w).astype(F32)
+    V = logits.shape[-1]
+    if V != real_vocab:
+        mask = jnp.arange(V) < real_vocab
+        logits = jnp.where(mask, logits, NEG_INF)
+    return logits
+
+
+def softmax_xent(logits, labels, z_loss: float = 0.0):
+    """fp32 cross entropy; labels (B,S) int32; returns scalar mean.
+
+    The label logit is picked with a one-hot einsum (a vocab-dim reduction)
+    rather than ``take_along_axis`` — GSPMD keeps the vocab dimension
+    sharded for reductions, while a sharded-dim gather forces a full
+    rematerialization of the (B, S, V) logits on every device.
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.bfloat16)
+    ll = jnp.einsum("bsv,bsv->bs", logits, oh.astype(logits.dtype))
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss

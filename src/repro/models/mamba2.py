@@ -1,0 +1,234 @@
+"""Mamba-2 (SSD, state-space duality) blocks.
+
+The scan is computed in the **chunked matmul form** of the SSD paper
+[arXiv:2405.21060] — intra-chunk dense matmuls (MXU-friendly on TPU) plus a
+cheap inter-chunk recurrence over per-chunk states — not a per-step
+sequential scan.  Group dims (ngroups) are kept un-broadcast so B/C are
+never materialized per-head.
+
+Layout (per block):
+  in projections  wz, wx : (D, d_inner)   wB, wC : (D, G*N)   wdt : (D, H)
+  causal conv (k taps) over [x, B, C] segments (separate weights per segment)
+  SSD over heads (H = d_inner / head_dim)
+  gated RMSNorm (norm(y * silu(z))), out projection d_inner -> D.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.param import PSpec
+from repro.models.layers import rms_norm
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+def mamba_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.ngroups, s.d_state, s.d_conv
+
+
+def mamba_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_inner, H, G, N, K = mamba_dims(cfg)
+    return {
+        "wz": PSpec((d, d_inner), ("embed", "inner"), ("normal", 0)),
+        "wx": PSpec((d, d_inner), ("embed", "inner"), ("normal", 0)),
+        "wB": PSpec((d, G * N), ("embed", None), ("normal", 0)),
+        "wC": PSpec((d, G * N), ("embed", None), ("normal", 0)),
+        "wdt": PSpec((d, H), ("embed", "ssm_heads"), ("normal", 0)),
+        "dt_bias": PSpec((H,), ("ssm_heads",), ("dt_bias",), dtype="float32"),
+        "A_log": PSpec((H,), ("ssm_heads",), ("alog",), dtype="float32"),
+        "D_skip": PSpec((H,), ("ssm_heads",), ("const", 1.0), dtype="float32"),
+        "conv_x": PSpec((K, d_inner), (None, "inner"), ("normal", 0)),
+        "conv_B": PSpec((K, G * N), (None, None), ("normal", 0)),
+        "conv_C": PSpec((K, G * N), (None, None), ("normal", 0)),
+        "gate_norm": PSpec((d_inner,), ("inner",), ("const", 1.0)),
+        "out_proj": PSpec((d_inner, d), ("inner", "embed"), ("normal", 0)),
+    }
+
+
+class MambaState(NamedTuple):
+    """Decode-time state for one layer."""
+    conv: jnp.ndarray   # (B, K-1, d_inner + 2*G*N) trailing pre-conv inputs
+    ssm: jnp.ndarray    # (B, H, P, N) fp32
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    d_inner, H, G, N, K = mamba_dims(cfg)
+    P_ = cfg.ssm.head_dim
+    return MambaState(
+        conv=jnp.zeros((batch, K - 1, d_inner + 2 * G * N), dtype),
+        ssm=jnp.zeros((batch, H, P_, N), F32),
+    )
+
+
+# --------------------------------------------------------------------------
+# SSD chunked scan (pure jnp oracle; the Pallas kernel mirrors this)
+# --------------------------------------------------------------------------
+def _segsum(x):
+    """x: (..., Q) log-decays -> (..., Q, Q) with [i,j] = sum_{j<k<=i} x_k."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, B_in, C_in, *, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None):
+    """SSD in chunked matmul form.
+
+    x: (B, S, H, P)    dt: (B, S, H) (post-softplus, >0)
+    A_log: (H,) (A = -exp(A_log))    B_in, C_in: (B, S, G, N)
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32).
+    """
+    Bb, S, H, P_ = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    HG = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    A = -jnp.exp(A_log.astype(F32))                       # (H,)
+    dA = dt.astype(F32) * A                               # (B,S,H) log-decay
+    xw = (x.astype(F32) * dt.astype(F32)[..., None])      # dt-weighted input
+
+    # chunk views; head dim split into (G, HG)
+    xc = xw.reshape(Bb, nc, Q, G, HG, P_)
+    dAc = dA.reshape(Bb, nc, Q, H).transpose(0, 3, 1, 2)  # (B,H,nc,Q)
+    dAc = dAc.reshape(Bb, G, HG, nc, Q)
+    Bc = B_in.astype(F32).reshape(Bb, nc, Q, G, N)
+    Cc = C_in.astype(F32).reshape(Bb, nc, Q, G, N)
+
+    A_cs = jnp.cumsum(dAc, axis=-1)                       # (B,G,HG,nc,Q)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dAc))                             # (B,G,HG,nc,Q,Q)
+    scores = jnp.einsum("bcqgn,bckgn->bgcqk", Cc, Bc)     # (B,G,nc,Q,K)
+    M = scores[:, :, None] * L                            # (B,G,HG,nc,Q,K)
+    y_diag = jnp.einsum("bghcqk,bckghp->bcqghp", M, xc)
+
+    # 2) per-chunk states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)         # (B,G,HG,nc,Q)
+    states = jnp.einsum(
+        "bcqgn,bghcq,bcqghp->bcghpn", Bc, decay_states, xc
+    )                                                     # (B,nc,G,HG,P,N)
+
+    # 3) inter-chunk recurrence (associative scan over chunks)
+    chunk_decay = jnp.exp(A_cs[..., -1])                  # (B,G,HG,nc)
+    if initial_state is None:
+        initial_state = jnp.zeros((Bb, H, P_, N), F32)
+    init = initial_state.reshape(Bb, G, HG, P_, N)
+
+    a_seq = chunk_decay.transpose(3, 0, 1, 2)[..., None, None]  # (nc,B,G,HG,1,1)
+    s_seq = states.transpose(1, 0, 2, 3, 4, 5)                  # (nc,B,G,HG,P,N)
+
+    def combine(c1, c2):
+        a1, h1 = c1
+        a2, h2 = c2
+        return a1 * a2, h1 * a2 + h2
+
+    a_all, h_all = jax.lax.associative_scan(combine, (a_seq, s_seq), axis=0)
+    # state entering chunk c = init*prod(a<=c-1) + h_all[c-1]
+    prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:1]), h_all[:-1]], axis=0
+    ) + jnp.concatenate(
+        [jnp.ones_like(a_all[:1]), a_all[:-1]], axis=0
+    ) * init[None]
+    prev = prev.transpose(1, 0, 2, 3, 4, 5)               # (B,nc,G,HG,P,N)
+    final = (h_all[-1] + a_all[-1] * init).reshape(Bb, H, P_, N)
+
+    # 4) state -> output
+    out_decay = jnp.exp(A_cs)                             # (B,G,HG,nc,Q)
+    y_off = jnp.einsum(
+        "bcqgn,bcghpn,bghcq->bcqghp", Cc, prev, out_decay
+    )
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P_)
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A_log, B_in, C_in):
+    """One-token SSD update.  x: (B,1,H,P); state: (B,H,P,N) fp32."""
+    Bb, _, H, P_ = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    HG = H // G
+    A = -jnp.exp(A_log.astype(F32))
+    dA = jnp.exp(dt[:, 0].astype(F32) * A)                # (B,H)
+    xg = (x[:, 0].astype(F32) * dt[:, 0][..., None]).reshape(Bb, G, HG, P_)
+    dBx = jnp.einsum("bgn,bghp->bghpn", B_in[:, 0].astype(F32), xg)
+    new_state = state * dA[..., None, None] + dBx.reshape(Bb, H, P_, N)
+    y = jnp.einsum("bgn,bghpn->bghp", C_in[:, 0].astype(F32),
+                   new_state.reshape(Bb, G, HG, P_, N))
+    return y.reshape(Bb, 1, H, P_), new_state
+
+
+# --------------------------------------------------------------------------
+# full block
+# --------------------------------------------------------------------------
+def _causal_conv(seq, w, conv_state=None):
+    """Depthwise causal conv.  seq: (B,S,C); w: (K,C).  Returns (y, new_state)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = conv_state.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)            # (B, S+K-1, C)
+    y = sum(full[:, i : i + seq.shape[1]] * w[i] for i in range(K))
+    new_state = full[:, -(K - 1):] if K > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def mamba_block(p, x, cfg: ArchConfig, *, mode: str,
+                state: Optional[MambaState] = None
+                ) -> Tuple[jnp.ndarray, Optional[MambaState]]:
+    """x: (B, S, D).  Returns (y (B,S,D), new state or None)."""
+    s = cfg.ssm
+    d_inner, H, G, N, K = mamba_dims(cfg)
+    P_ = s.head_dim
+    Bb, S, _ = x.shape
+
+    z = x @ p["wz"]                                        # (B,S,d_inner)
+    xs = x @ p["wx"]
+    Bm = x @ p["wB"]                                       # (B,S,G*N)
+    Cm = x @ p["wC"]
+    dt_raw = x @ p["wdt"]                                  # (B,S,H)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"].astype(F32))
+
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    conv_in = state.conv if (state is not None and mode == "decode") else None
+    xbc_conv, new_conv = _causal_conv(xbc, conv_w, conv_in)
+    xbc_conv = jax.nn.silu(xbc_conv)
+    xs_c = xbc_conv[..., :d_inner]
+    Bm_c = xbc_conv[..., d_inner : d_inner + G * N].reshape(Bb, S, G, N)
+    Cm_c = xbc_conv[..., d_inner + G * N :].reshape(Bb, S, G, N)
+    xh = xs_c.reshape(Bb, S, H, P_)
+
+    if mode == "decode":
+        assert state is not None
+        y, new_ssm = ssd_decode_step(state.ssm, xh, dt, p["A_log"], Bm_c, Cm_c)
+        new_state = MambaState(conv=new_conv, ssm=new_ssm)
+    else:
+        init = state.ssm if state is not None else None
+        y, final = ssd_chunked(
+            xh, dt, p["A_log"], Bm_c, Cm_c, chunk=s.chunk, initial_state=init
+        )
+        new_state = (
+            MambaState(conv=new_conv, ssm=final) if mode == "prefill" else None
+        )
+
+    y = y + xh.astype(F32) * p["D_skip"][None, None, :, None].astype(F32)
+    y = y.reshape(Bb, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                 p["gate_norm"], cfg.rms_eps)
+    return y @ p["out_proj"], new_state

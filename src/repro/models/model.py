@@ -1,0 +1,476 @@
+"""Model assembly: ArchConfig -> init / loss / prefill / decode programs.
+
+One :class:`Model` per (arch, shard-ctx).  All families share the same
+public surface so Cells, the dry-run, and the benchmarks treat every
+architecture uniformly:
+
+  param_specs / init / abstract_params / params_pspecs
+  loss(params, batch)                                    (train shapes)
+  prefill(params, batch)            -> (logits, cache)   (prefill shapes)
+  decode(params, cache, batch)      -> (logits, cache)   (decode shapes)
+  cache_specs(batch, max_len) / batch_specs(shape)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tfm
+from repro.models import zamba2 as zmb
+from repro.models.layers import (
+    embed_spec,
+    kv_slice_specs,
+    logits_fn,
+    norm_spec,
+    out_spec,
+    pad_vocab,
+    rms_norm,
+    softmax_xent,
+)
+from repro.models.mamba2 import mamba_dims
+from repro.models.param import (
+    PSpec,
+    abstract_params,
+    count_params,
+    init_params,
+    is_pspec,
+    tree_map_pspec,
+)
+from repro.sharding.rules import ShardCtx
+
+F32 = jnp.float32
+
+
+def stack_specs(specs, n: int):
+    """Stack per-layer PSpecs along a leading 'layers' dim."""
+    def bump(s: PSpec) -> PSpec:
+        init = s.init
+        if init[0] == "normal" and init[1] >= 0:
+            init = ("normal", init[1] + 1)
+        return PSpec((n,) + s.shape, ("layers",) + s.logical, init, s.dtype)
+    return tree_map_pspec(bump, specs)
+
+
+def _policy(name: str):
+    if name == "nothing_saveable":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(name)
+
+
+def _scan_stack(fn, x, stacked, cache, *, remat: bool, policy: str,
+                constrain=None, gather=None):
+    """Scan fn(x, layer_params, cache_slice)->(x, new_slice, aux) over layers.
+
+    Megatron-SP residual handling: the scan carry (and the remat-saved
+    layer input) is kept sequence-sharded via ``constrain`` at the layer
+    exit; ``gather`` all-gathers the sequence at layer ENTRY — *inside*
+    the remat body so the gathered copy is recomputed in the backward
+    rather than saved.  Without the entry gather, GSPMD sees seq-sharded
+    activations against model-sharded weights in the dW einsums and
+    replicates full weight gradients per layer step.
+    """
+    def wrapped(h, lp, csl):
+        if gather is not None:
+            h = gather(h)
+        return fn(h, lp, csl)
+
+    body_fn = jax.checkpoint(wrapped, policy=_policy(policy)) if remat else wrapped
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, csl = xs
+        h, ncsl, a = body_fn(h, lp, csl)
+        if constrain is not None:
+            h = constrain(h)
+        return (h, aux + a), ncsl
+
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0.0)), (stacked, cache))
+    return x, new_cache, aux
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, ctx: ShardCtx):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.vocab_padded = pad_vocab(cfg.vocab, cfg.vocab_pad_multiple)
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------
+    # parameter specs
+    # ------------------------------------------------------------------
+    def param_specs(self) -> Dict[str, Any]:
+        cfg, ctx = self.cfg, self.ctx
+        d, L = cfg.d_model, cfg.num_layers
+        specs: Dict[str, Any] = {
+            "embed": embed_spec(self.vocab_padded, d),
+            "final_norm": norm_spec(d),
+        }
+        if not cfg.tie_embeddings:
+            specs["out"] = out_spec(d, self.vocab_padded)
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            specs["layers"] = stack_specs(tfm.dense_layer_specs(cfg), L)
+        elif fam == "moe":
+            fd = cfg.moe.first_dense_layers
+            if fd:
+                specs["dense_layers"] = stack_specs(
+                    tfm.dense_layer_specs(cfg, d_ff=cfg.moe.dense_d_ff), fd
+                )
+            specs["moe_layers"] = stack_specs(tfm.moe_layer_specs(cfg, ctx), L - fd)
+        elif fam == "ssm":
+            specs["mamba_layers"] = stack_specs(zmb.mamba_layer_specs(cfg), L)
+        elif fam == "hybrid":
+            every = cfg.hybrid_attn_every
+            ngroups = L // every
+            inner = stack_specs(zmb.mamba_layer_specs(cfg), every)
+            specs["groups"] = stack_specs(inner, ngroups)
+            specs["shared"] = zmb.shared_block_specs(cfg)
+        elif fam == "encdec":
+            specs["src_proj"] = PSpec((d, d), ("embed", None), ("normal", 0))
+            specs["enc_layers"] = stack_specs(
+                encdec_mod.enc_layer_specs(cfg), cfg.encoder_layers
+            )
+            specs["enc_norm"] = norm_spec(d)
+            specs["dec_layers"] = stack_specs(encdec_mod.dec_layer_specs(cfg), L)
+        else:
+            raise ValueError(fam)
+        return specs
+
+    def init(self, rng):
+        return init_params(self.param_specs(), rng, self.cfg.dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs(), self.cfg.dtype)
+
+    def params_pspecs(self):
+        return self.ctx.params_pspecs(self.param_specs())
+
+    def n_params(self) -> int:
+        return count_params(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        fam = cfg.family
+        L = cfg.num_layers
+        if fam in ("dense", "vlm"):
+            return {"layers": stack_specs(kv_slice_specs(cfg, batch, max_len), L)}
+        if fam == "moe":
+            fd = cfg.moe.first_dense_layers
+            out = {"moe_layers": stack_specs(kv_slice_specs(cfg, batch, max_len), L - fd)}
+            if fd:
+                out["dense_layers"] = stack_specs(kv_slice_specs(cfg, batch, max_len), fd)
+            return out
+        if fam == "ssm":
+            return {"mamba_layers": stack_specs(self._mamba_state_specs(batch), L)}
+        if fam == "hybrid":
+            every = cfg.hybrid_attn_every
+            ngroups = L // every
+            return {
+                "groups": zmb.ZambaGroupCache(
+                    mamba=stack_specs(
+                        stack_specs(self._mamba_state_specs(batch), every), ngroups
+                    ),
+                    shared=stack_specs(
+                        kv_slice_specs(cfg, batch, max_len), ngroups
+                    ),
+                )
+            }
+        if fam == "encdec":
+            s_src = self.source_len(max_len)
+            hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+            cross_axes = ("batch", "kv_seq", None, None)
+            return {
+                "dec_layers": encdec_mod.DecCache(
+                    self_kv=stack_specs(kv_slice_specs(cfg, batch, max_len), L),
+                    cross_k=PSpec((L, batch, s_src, hkv, dh),
+                                  ("layers",) + cross_axes, ("const", 0.0)),
+                    cross_v=PSpec((L, batch, s_src, hkv, dh),
+                                  ("layers",) + cross_axes, ("const", 0.0)),
+                )
+            }
+        raise ValueError(fam)
+
+    def _mamba_state_specs(self, batch: int):
+        cfg = self.cfg
+        d_inner, H, G, N, K = mamba_dims(cfg)
+        P_ = cfg.ssm.head_dim
+        from repro.models.mamba2 import MambaState
+        return MambaState(
+            conv=PSpec((batch, K - 1, d_inner + 2 * G * N),
+                       ("batch", None, "inner"), ("const", 0.0)),
+            ssm=PSpec((batch, H, P_, N),
+                      ("batch", "ssm_heads", None, None), ("const", 0.0),
+                      dtype="float32"),
+        )
+
+    def init_cache(self, batch: int, max_len: int):
+        return init_params(self.cache_specs(batch, max_len), jax.random.PRNGKey(0), self.cfg.dtype)
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return abstract_params(self.cache_specs(batch, max_len), self.cfg.dtype)
+
+    def cache_pspecs(self, batch: int, max_len: int):
+        return self.ctx.params_pspecs(self.cache_specs(batch, max_len))
+
+    def source_len(self, seq_len: int) -> int:
+        """Encoder source length for encdec shapes (audio capped at 4k frames)."""
+        return int(min(seq_len, 4096) * self.cfg.source_len_ratio)
+
+    # ------------------------------------------------------------------
+    # batches
+    # ------------------------------------------------------------------
+    def batch_specs(self, shape: ShapeConfig):
+        """(ShapeDtypeStruct tree, PartitionSpec tree) for a workload shape."""
+        cfg, ctx = self.cfg, self.ctx
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+        out: Dict[str, Any] = {}
+        pspecs: Dict[str, Any] = {}
+
+        def add(name, sds, logical):
+            out[name] = sds
+            pspecs[name] = ctx.pspec(logical, sds.shape)
+
+        if shape.kind == "train":
+            add("tokens", tok(B, S), ("batch", None))
+            add("labels", tok(B, S), ("batch", None))
+        elif shape.kind == "prefill":
+            add("tokens", tok(B, S), ("batch", None))
+        else:  # decode
+            add("tokens", tok(B, 1), ("batch", None))
+            add("pos", tok(B), ("batch",))
+        if cfg.family == "encdec" and shape.kind != "decode":
+            s_src = self.source_len(S)
+            add("src", jax.ShapeDtypeStruct((B, s_src, cfg.d_model), self.dtype),
+                ("batch", None, None))
+        return out, pspecs
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+    def _embed_tokens(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        x = jax.lax.with_sharding_constraint(
+            x, self.ctx.sharding(("batch", None, None), x.shape)
+        )
+        return x
+
+    def _logits(self, params, x):
+        w = params["embed"].T if self.cfg.tie_embeddings else params["out"]
+        logits = logits_fn(x, w, self.cfg.vocab)
+        # vocab-parallel logits (Megatron): never materialize the full vocab
+        # dim on one device — the xent reductions then psum over the model
+        # axis instead of all-gathering (B, S, V).
+        return jax.lax.with_sharding_constraint(
+            logits, self.ctx.sharding(("batch", None, "vocab"), logits.shape)
+        )
+
+
+    def _act_constrain(self):
+        mode = self.cfg.activation_shard
+        if mode is None:
+            return None
+        logical = (
+            ("batch", "act_seq", None) if mode == "seq"
+            else ("batch", None, "act_embed")
+        )
+
+        def f(h):
+            return jax.lax.with_sharding_constraint(
+                h, self.ctx.sharding(logical, h.shape)
+            )
+        return f
+
+    def _act_gather(self):
+        """Layer-entry resharding: batch-sharded only (full seq/embed)."""
+        if self.cfg.activation_shard is None:
+            return None
+
+        def f(h):
+            return jax.lax.with_sharding_constraint(
+                h, self.ctx.sharding(("batch", None, None), h.shape)
+            )
+        return f
+
+    def _backbone(self, params, x, *, mode: str, cache=None, pos=None, x0=None):
+        """Shared decoder trunk for non-encdec families."""
+        cfg, ctx = self.cfg, self.ctx
+        remat = mode == "train"
+        pol = cfg.remat_policy
+        aux_total = jnp.float32(0.0)
+        new_cache: Dict[str, Any] = {}
+        constrain = self._act_constrain()
+        gather = None  # entry-gather measured WORSE (see EXPERIMENTS.md §Perf)
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            fn = lambda h, lp, csl: tfm.dense_layer(lp, h, cfg, ctx, mode=mode, cache=csl, pos=pos)
+            x, nc, aux = _scan_stack(fn, x, params["layers"],
+                                     None if cache is None else cache["layers"],
+                                     remat=remat, policy=pol, constrain=constrain, gather=gather)
+            new_cache["layers"] = nc
+            aux_total += aux
+        elif fam == "moe":
+            fd = cfg.moe.first_dense_layers
+            if fd:
+                fn = lambda h, lp, csl: tfm.dense_layer(lp, h, cfg, ctx, mode=mode, cache=csl, pos=pos)
+                x, nc, aux = _scan_stack(fn, x, params["dense_layers"],
+                                         None if cache is None else cache.get("dense_layers"),
+                                         remat=remat, policy=pol, constrain=constrain, gather=gather)
+                new_cache["dense_layers"] = nc
+                aux_total += aux
+            fn = lambda h, lp, csl: tfm.moe_layer(lp, h, cfg, ctx, mode=mode, cache=csl, pos=pos)
+            x, nc, aux = _scan_stack(fn, x, params["moe_layers"],
+                                     None if cache is None else cache["moe_layers"],
+                                     remat=remat, policy=pol, constrain=constrain, gather=gather)
+            new_cache["moe_layers"] = nc
+            aux_total += aux
+        elif fam == "ssm":
+            fn = lambda h, lp, csl: zmb.mamba_layer(lp, h, cfg, mode=mode, state=csl)
+            x, nc, aux = _scan_stack(fn, x, params["mamba_layers"],
+                                     None if cache is None else cache["mamba_layers"],
+                                     remat=remat, policy=pol, constrain=constrain, gather=gather)
+            new_cache["mamba_layers"] = nc
+            aux_total += aux
+        elif fam == "hybrid":
+            shared = params["shared"]
+
+            def group_fn(h, gp, gcsl):
+                m_cache = None if gcsl is None else gcsl.mamba
+                inner = lambda hh, lp, csl: zmb.mamba_layer(lp, hh, cfg, mode=mode, state=csl)
+                h, n_m, aux = _scan_stack(inner, h, gp, m_cache, remat=False, policy=pol)
+                h, n_s = zmb.shared_block(
+                    shared, h, x0, cfg, self.ctx, mode=mode,
+                    cache=None if gcsl is None else gcsl.shared, pos=pos,
+                )
+                ncache = zmb.ZambaGroupCache(mamba=n_m, shared=n_s) if gcsl is not None else None
+                return h, ncache, aux
+
+            x, nc, aux = _scan_stack(group_fn, x, params["groups"],
+                                     None if cache is None else cache["groups"],
+                                     remat=remat, policy=pol, constrain=constrain, gather=gather)
+            new_cache["groups"] = nc
+            aux_total += aux
+        else:
+            raise ValueError(fam)
+        return x, new_cache, aux_total
+
+    def _encode(self, params, src, *, remat: bool = False):
+        cfg = self.cfg
+        x = (src.astype(self.dtype) @ params["src_proj"])
+        fn = lambda h, lp, _csl: encdec_mod.enc_layer(lp, h, cfg, self.ctx)
+        x, _, _ = _scan_stack(fn, x, params["enc_layers"], None,
+                              remat=remat, policy=cfg.remat_policy,
+                              constrain=self._act_constrain(),
+                              gather=self._act_gather())
+        return rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+    def _decode_stack(self, params, x, *, mode, memory=None, cache=None, pos=None):
+        cfg = self.cfg
+        fn = lambda h, lp, csl: encdec_mod.dec_layer(
+            lp, h, cfg, self.ctx, mode=mode, memory=memory, cache=csl, pos=pos
+        )
+        remat = mode == "train"
+        x, nc, aux = _scan_stack(fn, x, params["dec_layers"],
+                                 None if cache is None else cache["dec_layers"],
+                                 remat=remat, policy=cfg.remat_policy,
+                                 constrain=self._act_constrain(),
+                                 gather=self._act_gather())
+        return x, ({"dec_layers": nc} if cache is not None else {}), aux
+
+    # ------------------------------------------------------------------
+    # public programs
+    # ------------------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            memory = self._encode(params, batch["src"], remat=True)
+            x = self._embed_tokens(params, batch["tokens"])
+            x, _, aux = self._decode_stack(params, x, mode="train", memory=memory)
+        else:
+            x = self._embed_tokens(params, batch["tokens"])
+            x0 = x
+            x, _, aux = self._backbone(params, x, mode="train", x0=x0)
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        if self.ctx.dp_over_model and x.shape[1] >= 1024:
+            # ZeRO-3 layout: the vocab dim can't shard (the model axis backs
+            # the batch), so never materialize full-seq logits — scan the
+            # head over sequence chunks with remat
+            xent = self._chunked_xent(params, x, batch["labels"])
+        else:
+            logits = self._logits(params, x)
+            xent = softmax_xent(logits, batch["labels"])
+        loss = xent + 0.01 * aux
+        return loss, {"loss": loss, "xent": xent, "aux": aux}
+
+    def _chunked_xent(self, params, x, labels, chunk: int = 512):
+        B, S, D = x.shape
+        n = S // chunk
+        assert S % chunk == 0
+        xs = (
+            x.reshape(B, n, chunk, D).swapaxes(0, 1),
+            labels.reshape(B, n, chunk).swapaxes(0, 1),
+        )
+
+        def body(tot, xs_c):
+            xc, lc = xs_c
+            logits = self._logits(params, xc)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            oh = jax.nn.one_hot(lc, logits.shape[-1], dtype=jnp.bfloat16)
+            ll = jnp.einsum("bsv,bsv->bs", logits, oh.astype(logits.dtype))
+            return tot + (lse - ll).sum(), None
+
+        body = jax.checkpoint(body, policy=_policy(self.cfg.remat_policy))
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+        return total / (B * S)
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            memory = self._encode(params, batch["src"])
+            x = self._embed_tokens(params, batch["tokens"])
+            x, new_cache, _ = self._decode_stack(
+                params, x, mode="prefill", memory=memory, cache=cache
+            )
+        else:
+            x = self._embed_tokens(params, batch["tokens"])
+            x0 = x
+            x, new_cache, _ = self._backbone(
+                params, x, mode="prefill", cache=cache, x0=x0
+            )
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch["tokens"])     # (B,1,D)
+        pos = batch["pos"]
+        if cfg.family == "encdec":
+            x, new_cache, _ = self._decode_stack(
+                params, x, mode="decode", cache=cache, pos=pos
+            )
+        else:
+            x0 = x
+            x, new_cache, _ = self._backbone(
+                params, x, mode="decode", cache=cache, pos=pos, x0=x0
+            )
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+
+def build_model(cfg: ArchConfig, ctx: ShardCtx) -> Model:
+    return Model(cfg, ctx)

@@ -1,0 +1,94 @@
+"""Parameter specification trees.
+
+A model is described by a pytree of :class:`PSpec` leaves.  From that one
+tree we derive (a) real initialized parameters, (b) abstract
+``ShapeDtypeStruct`` stand-ins for dry-run lowering, and (c) logical-axis
+trees that the sharding rules resolve into ``PartitionSpec``s.  This keeps
+shape, init, and sharding in one place per parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """One parameter: shape + logical axes + initializer."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: Tuple[Any, ...] = ("normal", -2)  # ("normal", fan_in_axis) | ("const", v) | ("alog",) | ("dt_bias",)
+    dtype: Optional[str] = None          # None -> model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def tree_map_pspec(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_pspec)
+
+
+def _resolve_dtype(spec: PSpec, default_dtype: str):
+    return jnp.dtype(spec.dtype or default_dtype)
+
+
+def abstract_params(spec_tree, default_dtype: str):
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return tree_map_pspec(
+        lambda s: jax.ShapeDtypeStruct(s.shape, _resolve_dtype(s, default_dtype)),
+        spec_tree,
+    )
+
+
+def logical_axes(spec_tree):
+    """Tree of logical-axis tuples (resolved by sharding rules)."""
+    return tree_map_pspec(lambda s: s.logical, spec_tree)
+
+
+def _init_leaf(spec: PSpec, key, default_dtype: str):
+    dtype = _resolve_dtype(spec, default_dtype)
+    kind = spec.init[0]
+    if kind == "normal":
+        fan_axis = spec.init[1]
+        fan_in = spec.shape[fan_axis]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+    if kind == "const":
+        return jnp.full(spec.shape, spec.init[1], dtype)
+    if kind == "alog":
+        # Mamba A_log: A ~ Uniform[1, 16), stored as log
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(jnp.float32)  # keep fp32 for stability
+    if kind == "dt_bias":
+        # Mamba dt bias: softplus^-1 of dt ~ LogUniform[1e-3, 1e-1]
+        dt = jnp.exp(
+            jax.random.uniform(key, spec.shape, jnp.float32)
+            * (math.log(1e-1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        inv = dt + jnp.log(-jnp.expm1(-dt))
+        return inv.astype(jnp.float32)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(spec_tree, key, default_dtype: str):
+    """Materialize real parameters (used by tests/examples, not dry-run)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, default_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_pspec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))

@@ -1,0 +1,61 @@
+"""Decoder layer definitions for dense / MoE transformer families."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    KVSlice,
+    attention_block,
+    attn_specs,
+    mlp_block,
+    mlp_specs,
+    norm_spec,
+    rms_norm,
+)
+from repro.sharding.rules import ShardCtx
+
+
+def dense_layer_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
+    return {
+        "attn_norm": norm_spec(cfg.d_model),
+        "attn": attn_specs(cfg),
+        "mlp_norm": norm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg, d_ff=d_ff),
+    }
+
+
+def moe_layer_specs(cfg: ArchConfig, ctx: ShardCtx) -> dict:
+    return {
+        "attn_norm": norm_spec(cfg.d_model),
+        "attn": attn_specs(cfg),
+        "mlp_norm": norm_spec(cfg.d_model),
+        "moe": moe_mod.moe_specs(cfg, ctx),
+    }
+
+
+def dense_layer(
+    lp, x, cfg: ArchConfig, ctx=None, *, mode: str,
+    cache: Optional[KVSlice] = None, pos=None,
+) -> Tuple[jnp.ndarray, Optional[KVSlice], jnp.ndarray]:
+    h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+    a, new_cache = attention_block(lp["attn"], h, cfg, ctx, mode=mode, cache=cache, pos=pos)
+    x = x + a
+    h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+    x = x + mlp_block(lp["mlp"], h, cfg)
+    return x, new_cache, jnp.float32(0.0)
+
+
+def moe_layer(
+    lp, x, cfg: ArchConfig, ctx: ShardCtx, *, mode: str,
+    cache: Optional[KVSlice] = None, pos=None,
+) -> Tuple[jnp.ndarray, Optional[KVSlice], jnp.ndarray]:
+    h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+    a, new_cache = attention_block(lp["attn"], h, cfg, ctx, mode=mode, cache=cache, pos=pos)
+    x = x + a
+    h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+    y, aux = moe_mod.moe_block(lp["moe"], h, cfg, ctx, train=(mode == "train"))
+    return x + y, new_cache, aux

@@ -1,0 +1,117 @@
+"""Continuous batcher: slot-based request scheduling for decode.
+
+A fixed-width decode batch (B slots) over a shared-shape KV cache; requests
+join free slots, run until EOS/max_tokens, and free their slot.  Per-slot
+positions (``pos`` is a vector) let slots be at different depths — the
+model's decode path masks per-slot.  This is the serving front used by the
+serving cells and the tail-latency benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a single decode program."""
+
+    def __init__(self, model, params, *, batch_slots: int, max_len: int,
+                 temperature: float = 0.0, eos_token: Optional[int] = None):
+        from repro.serve.serve_step import build_serve_step
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.cur_tok = np.zeros(batch_slots, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: deque = deque()
+        self.done: List[Request] = []
+        self._step = jax.jit(build_serve_step(model, temperature), donate_argnums=(1,))
+        self._rng = jax.random.PRNGKey(0)
+
+    # -- request management --------------------------------------------
+    def submit(self, req: Request):
+        req.submitted_at = req.submitted_at or time.monotonic()
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                req.started_at = time.monotonic()
+                # the prompt is consumed token-at-a-time through the decode
+                # path (shared cache keeps slot shapes uniform)
+                self.slot_req[slot] = req
+                self.pos[slot] = 0
+                self.cur_tok[slot] = int(req.prompt[0]) if len(req.prompt) else 0
+                req._prompt_cursor = 1  # type: ignore[attr-defined]
+
+    # -- one decode step over all busy slots -----------------------------
+    def step(self) -> int:
+        self._admit()
+        busy = [s for s in range(self.B) if self.slot_req[s] is not None]
+        if not busy:
+            return 0
+        batch = {
+            "tokens": jnp.asarray(self.cur_tok[:, None]),
+            "pos": jnp.asarray(self.pos),
+        }
+        self._rng, sub = jax.random.split(self._rng)
+        toks, _logits, self.cache = self._step(self.params, self.cache, batch, sub)
+        toks = np.asarray(toks)
+        now = time.monotonic()
+        for s in busy:
+            req = self.slot_req[s]
+            self.pos[s] += 1
+            cursor = getattr(req, "_prompt_cursor", len(req.prompt))
+            if cursor < len(req.prompt):
+                # still consuming the prompt: feed next prompt token
+                self.cur_tok[s] = int(req.prompt[cursor])
+                req._prompt_cursor = cursor + 1  # type: ignore[attr-defined]
+                continue
+            tok = int(toks[s])
+            req.output.append(tok)
+            self.cur_tok[s] = tok
+            finished = (
+                len(req.output) >= req.max_new_tokens
+                or (self.eos is not None and tok == self.eos)
+                or self.pos[s] >= self.max_len - 1
+            )
+            if finished:
+                req.finished_at = now
+                self.done.append(req)
+                self.slot_req[s] = None
+        return len(busy)
+
+    def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done

@@ -1,0 +1,37 @@
+"""Serving programs: prefill + decode with sampling."""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+F32 = jnp.float32
+
+
+def sample_tokens(logits, rng, temperature: float = 0.0):
+    """logits (B, V) -> token ids (B,).  temperature 0 = greedy."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits.astype(F32) / temperature).astype(jnp.int32)
+
+
+def build_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        return logits, cache
+    return prefill_step
+
+
+def build_serve_step(model: Model, temperature: float = 0.0) -> Callable:
+    """serve_step(params, cache, batch) -> (next_tokens, logits, cache).
+
+    ``batch`` = {tokens (B,1), pos (B,)}; the KV cache is donated by callers.
+    """
+    def serve_step(params, cache, batch, rng):
+        logits, cache = model.decode(params, cache, batch)
+        toks = sample_tokens(logits, rng, temperature)
+        return toks, logits, cache
+    return serve_step

@@ -1,0 +1,126 @@
+"""AdamW + schedules, implemented from scratch (optax is not available).
+
+States are plain pytrees so they shard exactly like their parameters
+(m/v inherit the param's PartitionSpec) — ZeRO-style optimizer sharding
+falls out of the param sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # memory knobs for the big archs
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray       # () int32
+    m: Any                  # pytree like params
+    v: Any
+
+
+def cosine_schedule(cfg: OptConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        step = step.astype(F32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+        return cfg.lr * warm * frac
+    return sched
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype), tree), norm
+
+
+def init_adam_state(params, cfg: OptConfig) -> AdamState:
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.m_dtype)), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.v_dtype)), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def abstract_adam_state(abstract_params, cfg: OptConfig) -> AdamState:
+    m = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(cfg.m_dtype)), abstract_params
+    )
+    v = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(cfg.v_dtype)), abstract_params
+    )
+    return AdamState(step=jax.ShapeDtypeStruct((), jnp.int32), m=m, v=v)
+
+
+def adam_state_pspecs(param_pspecs) -> AdamState:
+    from jax.sharding import PartitionSpec as P
+    return AdamState(
+        step=P(),
+        m=jax.tree.map(lambda s: s, param_pspecs),
+        v=jax.tree.map(lambda s: s, param_pspecs),
+    )
+
+
+def adamw_update(
+    params, grads, state: AdamState, cfg: OptConfig
+) -> Tuple[Any, AdamState, dict]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    sched = cosine_schedule(cfg)
+    lr = sched(step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(F32)
+    bc2 = 1 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(F32)
+        m_new = b1 * m.astype(F32) + (1 - b1) * g32
+        v_new = b2 * v.astype(F32) + (1 - b2) * jnp.square(g32)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        # weight decay on matrices only (ndim >= 2), standard practice
+        if p.ndim >= 2 and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        p_new = (p.astype(F32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr,
+    }

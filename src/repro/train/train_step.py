@@ -1,0 +1,126 @@
+"""Train step builder: loss -> grads (microbatched) -> AdamW update.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches so activation
+memory is bounded by one microbatch; the grad buffers stay sharded like the
+params (ZeRO).  Optional int8 error-feedback gradient compression slots in
+between accumulation and the optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train import grad_compress
+from repro.train.optimizer import (
+    AdamState,
+    OptConfig,
+    abstract_adam_state,
+    adam_state_pspecs,
+    adamw_update,
+    init_adam_state,
+)
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    ef: Optional[Any] = None      # error-feedback buffers (grad compression)
+
+
+def init_train_state(model: Model, rng, opt_cfg: OptConfig, *, compress: bool = False) -> TrainState:
+    params = model.init(rng)
+    return TrainState(
+        params=params,
+        opt=init_adam_state(params, opt_cfg),
+        ef=grad_compress.init_ef_state(params) if compress else None,
+    )
+
+
+def abstract_train_state(model: Model, opt_cfg: OptConfig, *, compress: bool = False) -> TrainState:
+    params = model.abstract_params()
+    return TrainState(
+        params=params,
+        opt=abstract_adam_state(params, opt_cfg),
+        ef=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16), params)
+        if compress else None,
+    )
+
+
+def train_state_pspecs(model: Model, *, compress: bool = False) -> TrainState:
+    pp = model.params_pspecs()
+    return TrainState(
+        params=pp,
+        opt=adam_state_pspecs(pp),
+        ef=jax.tree.map(lambda s: s, pp) if compress else None,
+    )
+
+
+def _split_microbatches(batch, n: int):
+    """(B, ...) -> (n, B/n, ...) for every leaf."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def resolve_microbatch(want: int, global_batch: int, dp: int) -> int:
+    """Largest n <= want with n | B and dp | (B/n) (shardable microbatches)."""
+    for n in range(min(want, max(global_batch // max(dp, 1), 1)), 0, -1):
+        if global_batch % n == 0 and (global_batch // n) % max(dp, 1) == 0:
+            return n
+    return 1
+
+
+def build_train_step(
+    model: Model, opt_cfg: OptConfig, *, compress: bool = False
+) -> Callable[[TrainState, Any], Tuple[TrainState, dict]]:
+    """Returns train_step(state, batch) -> (state, metrics).  jit-ready."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        params = state.params
+        global_batch = jax.tree.leaves(batch)[0].shape[0]
+        n_micro = resolve_microbatch(
+            max(model.cfg.microbatch, 1), global_batch, model.ctx.dp_size()
+        )
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, n_micro)
+
+            def body(carry, mb):
+                acc = carry
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(F32) / n_micro, acc, g
+                )
+                return acc, (l, m)
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, mbs)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), metricses)
+
+        ef = state.ef
+        if compress:
+            grads, ef = grad_compress.apply_ef_compression(grads, ef)
+
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics, **opt_metrics, loss_step=loss)
+        return TrainState(params=new_params, opt=new_opt, ef=ef), metrics
+
+    return train_step

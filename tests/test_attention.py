@@ -1,0 +1,79 @@
+"""Model-level attention: chunked-jnp baseline vs naive, masks, decode."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import (
+    chunked_attention,
+    decode_attention_ref,
+)
+
+
+def naive(q, k, v, causal=True, window=None):
+    B, Sq, Hq, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kf = jnp.repeat(k, G, axis=2)
+    vf = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m &= qp >= kp
+    if window is not None:
+        m &= kp > qp - window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("causal,window,qc,kc", [
+    (True, None, 32, 32),
+    (True, None, 128, 16),
+    (True, 24, 16, 16),
+    (False, None, 32, 64),
+])
+def test_chunked_attention_vs_naive(causal, window, qc, kc):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=qc, kv_chunk=kc)
+    ref = naive(q, k, v, causal, window)
+    rel = float(jnp.abs(out - ref).max() / jnp.abs(ref).max())
+    assert rel < 1e-5, rel
+
+
+def test_chunked_attention_unroll_equals_scan():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 2, 16))
+    v = jax.random.normal(ks[2], (1, 64, 2, 16))
+    a = chunked_attention(q, k, v, q_chunk=16, kv_chunk=16, unroll=False)
+    b = chunked_attention(q, k, v, q_chunk=16, kv_chunk=16, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_decode_ref_respects_rolling_slot_positions():
+    """SWA rolling buffer: only positions within the window attend."""
+    B, S, H, Dh = 1, 8, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, H, Dh))
+    v = jax.random.normal(ks[2], (B, S, H, Dh))
+    # slots hold absolute positions 8..15 (a full rolling window of 8)
+    slot_pos = jnp.arange(8, 16)[None, :]
+    kv_len = jnp.array([16])
+    out_win = decode_attention_ref(q, k, v, kv_len, window=4, slot_pos=slot_pos)
+    # mask manually: positions > 15-4=11 -> slots 4..7
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) / 4.0
+    s = jnp.where((slot_pos > 11)[:, None, None], s, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v.astype(jnp.float32))
+    rel = float(jnp.abs(out_win - ref).max() / jnp.abs(ref).max())
+    assert rel < 1e-5

@@ -1,0 +1,56 @@
+"""Checkpoint save/restore: round-trip, async, bf16, cross-structure."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.bfloat16) * 1.5,
+              "d": jnp.array(7, jnp.int32)},
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    out = ckpt.restore(str(tmp_path), 3, jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_async_save(tmp_path):
+    fut = ckpt.save(str(tmp_path), 1, _tree(), blocking=False)
+    fut.result(timeout=30)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_latest_step_ignores_partial(tmp_path):
+    ckpt.save(str(tmp_path), 5, _tree())
+    os.makedirs(tmp_path / "step_9", exist_ok=True)   # no meta.json: partial
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 2, _tree())
+    bad_target = {"only": jax.ShapeDtypeStruct((3, 4), jnp.float32)}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 2, bad_target)
+
+
+def test_multiple_steps_and_overwrite(tmp_path):
+    for s in (10, 20, 30):
+        ckpt.save(str(tmp_path), s, _tree())
+    assert ckpt.latest_step(str(tmp_path)) == 30
+    ckpt.save(str(tmp_path), 30, _tree())   # overwrite OK (atomic replace)
+    assert ckpt.latest_step(str(tmp_path)) == 30

@@ -1,0 +1,166 @@
+"""IFTS core units: control plane, guard, elastic policy, accounting."""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accounting import CellAccounting, collective_bytes
+from repro.core.channels import ChannelError, ControlPlane
+from repro.core.elastic import ElasticPolicy, ThresholdScheduler
+from repro.core.guard import BoundaryGuard, BoundaryViolation
+
+
+# ---------------------------------------------------------------------------
+# control plane (FICM analogue)
+# ---------------------------------------------------------------------------
+def test_control_plane_unicast_multicast_broadcast():
+    cp = ControlPlane()
+    for n in ("sup", "a", "b", "c"):
+        cp.register(n)
+    cp.unicast("sup", "a", "resize", {"ncols": 3})
+    m = cp.poll("a")
+    assert m.kind == "resize" and m.payload["ncols"] == 3 and m.src == "sup"
+    assert cp.poll("a") is None
+
+    cp.multicast("sup", ["a", "b"], "ping")
+    assert cp.poll("a").kind == "ping" and cp.poll("b").kind == "ping"
+    assert cp.poll("c") is None
+
+    cp.broadcast("a", "hello")
+    assert {n for n in ("sup", "b", "c") if cp.poll(n)} == {"sup", "b", "c"}
+    assert cp.poll("a") is None          # no self-delivery
+
+    with pytest.raises(ChannelError):
+        cp.unicast("sup", "ghost", "x")
+
+    cp.unregister("b")
+    with pytest.raises(ChannelError):
+        cp.unicast("sup", "b", "x")
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes HLO parser
+# ---------------------------------------------------------------------------
+SAMPLE_HLO = """
+  %ag = bf16[8,128]{1,0} all-gather(%p0), replica_groups={{0,1}}, dimensions={0}
+  %ar.1 = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = bf16[4,64]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = s32[16]{0} all-to-all(%z), dimensions={0}
+  %cp = bf16[2,2]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ars = (f32[512]{0}, f32[512]{0}) all-reduce-start(%v), to_apply=%add
+  %ard = f32[512]{0} all-reduce-done(%ars)
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(SAMPLE_HLO)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 1024 * 4 + 2 * 512 * 4   # start counted once
+    assert out["reduce-scatter"] == 4 * 64 * 2
+    assert out["all-to-all"] == 16 * 4
+    assert out["collective-permute"] == 2 * 2 * 2
+
+
+def test_collective_bytes_on_real_compile():
+    """A single-device program has no collectives."""
+    f = jax.jit(lambda x: (x @ x).sum())
+    hlo = f.lower(jnp.ones((8, 8))).compile().as_text()
+    assert collective_bytes(hlo) == {}
+
+
+def test_accounting_totals():
+    acc = CellAccounting("c")
+    f = jax.jit(lambda x: (x @ x).sum())
+    compiled = f.lower(jnp.ones((16, 16))).compile()
+    pc = acc.register_program("step", compiled)
+    assert pc.flops_per_device > 0
+    acc.record_invocation("step", 10)
+    t = acc.totals()
+    assert t["flops"] == pc.flops_per_device * 10
+
+
+# ---------------------------------------------------------------------------
+# boundary guard
+# ---------------------------------------------------------------------------
+class _FakeSharding:
+    def __init__(self, ids):
+        self.mesh = type("M", (), {"devices": np.array(
+            [type("D", (), {"id": i})() for i in ids], dtype=object)})()
+
+
+class _FakeCompiled:
+    def __init__(self, ids):
+        self.input_shardings = ([_FakeSharding(ids)], {})
+        self.output_shardings = [_FakeSharding(ids)]
+
+
+def test_guard_accepts_confined_executable():
+    g = BoundaryGuard(lambda: None)
+    g.validate_devices(_FakeCompiled([0, 1, 2]), [0, 1, 2, 3], "cell")
+
+
+def test_guard_rejects_out_of_zone_executable():
+    g = BoundaryGuard(lambda: None)
+    with pytest.raises(BoundaryViolation):
+        g.validate_devices(_FakeCompiled([0, 7]), [0, 1, 2, 3], "cell")
+
+
+def test_guard_rejects_stale_epoch():
+    class Cell:
+        name = "c"
+        bound_epoch = 3
+        zone_epoch = 5     # zone changed since compile
+        mesh = type("M", (), {"devices": np.array([], dtype=object)})()
+
+    g = BoundaryGuard(lambda: None)
+    with pytest.raises(BoundaryViolation):
+        g.validate(Cell(), _FakeCompiled([]))
+
+
+# ---------------------------------------------------------------------------
+# elastic threshold policy
+# ---------------------------------------------------------------------------
+class _MockSup:
+    def __init__(self):
+        self.cells = {
+            "srv": type("C", (), {"zone": type("Z", (), {"ncols": 2})()})(),
+            "don": type("C", (), {"zone": type("Z", (), {"ncols": 4})()})(),
+        }
+        self.calls = []
+
+    def transfer_columns(self, src, dst, n=1):
+        self.calls.append((src, dst, n))
+        self.cells[src].zone.ncols -= n
+        self.cells[dst].zone.ncols += n
+        return {}
+
+
+def test_threshold_scheduler_grow_shrink_cooldown():
+    sup = _MockSup()
+    sched = ThresholdScheduler(
+        sup, "srv", "don",
+        ElasticPolicy(lt=0.1, ut=0.2, window=10, cooldown=100.0,
+                      min_server_cols=1, min_donor_cols=1),
+    )
+    for _ in range(10):
+        sched.observe(0.5)                       # way above ut
+    act = sched.maybe_act(now=0.0)
+    assert act and act["kind"] == "grow_server"
+    assert sup.calls == [("don", "srv", 1)]
+
+    for _ in range(10):
+        sched.observe(0.5)
+    assert sched.maybe_act(now=50.0) is None     # cooldown holds
+
+    for _ in range(10):
+        sched.observe(0.01)                      # below lt
+    act = sched.maybe_act(now=200.0)
+    assert act and act["kind"] == "shrink_server"
+
+    # respect min_server_cols
+    sup.cells["srv"].zone.ncols = 1
+    for _ in range(10):
+        sched.observe(0.01)
+    assert sched.maybe_act(now=400.0) is None

@@ -1,0 +1,144 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref, lse_combine
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.moe_gmm import gmm, gmm_ref
+from repro.kernels.ssd_scan import ssd
+from repro.models.mamba2 import ssd_chunked
+
+
+def _rel(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.abs(a - b).max() / (np.abs(b).max() + 1e-9)
+
+
+FLASH_CASES = [
+    # B, Hq, Hkv, Sq, Skv, Dh, causal, window, dtype
+    (2, 4, 2, 128, 128, 64, True, None, jnp.float32),
+    (1, 8, 8, 256, 256, 64, True, None, jnp.bfloat16),
+    (2, 4, 1, 128, 128, 32, True, 64, jnp.bfloat16),   # MQA + sliding window
+    (1, 2, 2, 128, 256, 64, True, None, jnp.float32),  # q suffix of longer kv
+    (2, 4, 2, 128, 128, 64, False, None, jnp.float32), # bidirectional
+    (1, 4, 4, 64, 64, 128, True, None, jnp.float32),   # big head dim
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_oracle(case):
+    B, Hq, Hkv, Sq, Skv, Dh, causal, win, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, Dh), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, Dh), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, Dh), jnp.float32).astype(dt)
+    out = flash_attention(q, k, v, causal=causal, window=win, block_q=64, block_k=64)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, window=win,
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    assert _rel(out, ref) < tol, case
+
+
+def test_flash_attention_block_shape_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    outs = [
+        flash_attention(q, k, v, block_q=bq, block_k=bk)
+        for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]
+    ]
+    for o in outs[1:]:
+        assert _rel(o, outs[0]) < 1e-5
+
+
+DECODE_CASES = [
+    (2, 8, 2, 512, 64, jnp.float32),
+    (4, 4, 4, 256, 128, jnp.bfloat16),
+    (1, 16, 2, 1024, 64, jnp.bfloat16),
+    (3, 2, 1, 128, 32, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_oracle(case):
+    B, Hq, Hkv, S, Dh, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, Dh), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh), jnp.float32).astype(dt)
+    kv_len = (jnp.arange(B, dtype=jnp.int32) * 37 + S // 3) % S + 1
+    out = decode_attention(q, k, v, kv_len, block_k=64)
+    ref = decode_attention_ref(q[:, 0], k, v, kv_len)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    assert _rel(out[:, 0], ref) < tol, case
+
+
+def test_lse_combine_equals_monolithic():
+    """Split-KV partials merged with lse_combine == one-shot softmax."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    S, Dh = 128, 32
+    q = jax.random.normal(ks[0], (Dh,))
+    k = jax.random.normal(ks[1], (S, Dh))
+    v = jax.random.normal(ks[2], (S, Dh))
+    s = k @ q / np.sqrt(Dh)
+    ref = jax.nn.softmax(s) @ v
+    ms, ls, accs = [], [], []
+    for i in range(4):
+        si = s[i * 32:(i + 1) * 32]
+        m = si.max()
+        p = jnp.exp(si - m)
+        ms.append(m)
+        ls.append(p.sum())
+        accs.append(p @ v[i * 32:(i + 1) * 32])
+    out = lse_combine(jnp.stack(ms), jnp.stack(ls), jnp.stack(accs))
+    assert _rel(out, ref) < 1e-5
+
+
+def test_ssd_kernel_matches_chunked_oracle():
+    Bb, S, H, P, G, N = 2, 128, 4, 16, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (Bb, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H)) * 0.5)
+    A_log = jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.5)
+    B = jax.random.normal(ks[3], (Bb, S, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bb, S, G, N)) * 0.3
+    for chunk in (16, 32, 64):
+        y_k, h_k = ssd(x, dt, A_log, B, C, chunk=chunk)
+        y_r, h_r = ssd_chunked(x, dt, A_log, B, C, chunk=chunk)
+        assert _rel(y_k, y_r) < 1e-5, chunk
+        assert _rel(h_k, h_r) < 1e-5, chunk
+
+
+def test_ssd_kernel_initial_state():
+    Bb, S, H, P, G, N = 1, 64, 2, 8, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    x = jax.random.normal(ks[0], (Bb, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H)) * 0.5)
+    A_log = jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.0)
+    B = jax.random.normal(ks[3], (Bb, S, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bb, S, G, N)) * 0.3
+    init = jax.random.normal(ks[5], (Bb, H, P, N)) * 0.2
+    y_k, _ = ssd(x, dt, A_log, B, C, chunk=16, initial_state=init)
+    y_r, _ = ssd_chunked(x, dt, A_log, B, C, chunk=16, initial_state=init)
+    assert _rel(y_k, y_r) < 1e-5
+
+
+@pytest.mark.parametrize("counts", [
+    [0, 5, 128, 256, 129, 200, 1, 64],
+    [0, 0, 0, 0, 0, 0, 0, 0],
+    [256] * 8,
+])
+def test_moe_gmm_matches_oracle(counts):
+    E, Cc, D, F = 8, 256, 128, 256
+    x = jax.random.normal(jax.random.PRNGKey(6), (E, Cc, D), jnp.float32).astype(jnp.bfloat16)
+    w = (jax.random.normal(jax.random.PRNGKey(7), (E, D, F)) * 0.05).astype(jnp.bfloat16)
+    c = jnp.array(counts, jnp.int32)
+    out = gmm(x, w, c, block_c=64, block_f=128)
+    ref = gmm_ref(x, w, c)
+    assert _rel(out, ref) < 2e-2

@@ -1,0 +1,133 @@
+"""Property tests for the PartitionTable (the IFTS shared descriptions)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.partition import PartitionError, PartitionTable, Zone
+
+
+GRID = (2, 16, 16)
+
+
+def fresh():
+    return PartitionTable(grid_shape=GRID)
+
+
+# ---------------------------------------------------------------------------
+# unit semantics
+# ---------------------------------------------------------------------------
+def test_carve_release_roundtrip():
+    t = fresh()
+    t, z = t.carve("a", 4)
+    assert z.ncols == 4 and t.epoch == 1
+    assert t.zone("a") == z
+    t = t.release("a")
+    assert not t.has_zone("a") and t.epoch == 2
+
+
+def test_carve_disjoint():
+    t = fresh()
+    t, za = t.carve("a", 8)
+    t, zb = t.carve("b", 8)
+    assert not (za.columns() & zb.columns())
+    with pytest.raises(PartitionError):
+        t.carve("c", 1)           # pod 0 full
+    t, zc = t.carve("c", 4, pods=(1,))
+    assert zc.pods == (1,)
+
+
+def test_carve_duplicate_name():
+    t = fresh()
+    t, _ = t.carve("a", 2)
+    with pytest.raises(PartitionError):
+        t.carve("a", 2)
+
+
+def test_resize_grow_shrink():
+    t = fresh()
+    t, _ = t.carve("a", 4)
+    t, z = t.resize("a", 8)
+    assert z.ncols == 8
+    t, z = t.resize("a", 2)
+    assert z.ncols == 2
+    t.check_invariants()
+
+
+def test_resize_refit_when_blocked():
+    t = fresh()
+    t, _ = t.carve("a", 4)       # cols 0..4
+    t, _ = t.carve("b", 4)       # cols 4..8
+    # "a" can't grow right (b) — allocator re-carves
+    t, z = t.resize("a", 6)
+    assert z.ncols == 6
+    t.check_invariants()
+
+
+def test_transfer_preserves_total():
+    t = fresh()
+    t, _ = t.carve("srv", 4)
+    t, _ = t.carve("bat", 8)
+    t, zs, zd = t.transfer("bat", "srv", 2)
+    assert zs.ncols == 6 and zd.ncols == 6
+    with pytest.raises(PartitionError):
+        t.transfer("bat", "srv", 6)     # would leave donor empty
+
+
+def test_mark_failed_evicts():
+    t = fresh()
+    t, z = t.carve("a", 4)
+    t2 = t.mark_failed(0, z.c0)
+    assert not t2.has_zone("a")
+    assert (0, z.c0) in t2.failed_columns
+    with pytest.raises(PartitionError):
+        # carving over the failed column must not happen: 16 free minus 1
+        t3 = t2
+        for i in range(16):      # can only fit 15 single columns now
+            t3, _ = t3.carve(f"z{i}", 1)
+
+
+def test_multipod_zone():
+    t = fresh()
+    t, z = t.carve("mp", 4, pods=(0, 1))
+    assert z.columns() == {(p, c) for p in (0, 1) for c in range(z.c0, z.c1)}
+
+
+# ---------------------------------------------------------------------------
+# property: random op sequences keep invariants + epochs strictly increase
+# ---------------------------------------------------------------------------
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("carve"), st.integers(0, 9), st.integers(1, 6)),
+        st.tuples(st.just("release"), st.integers(0, 9), st.integers(1, 6)),
+        st.tuples(st.just("resize"), st.integers(0, 9), st.integers(1, 8)),
+        st.tuples(st.just("fail"), st.integers(0, 1), st.integers(0, 15)),
+    ),
+    max_size=25,
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ops)
+def test_invariants_under_random_ops(seq):
+    t = fresh()
+    last_epoch = t.epoch
+    for op, a, b in seq:
+        prev = t
+        try:
+            if op == "carve":
+                t, _ = t.carve(f"z{a}", b)
+            elif op == "release":
+                t = t.release(f"z{a}")
+            elif op == "resize":
+                t, _ = t.resize(f"z{a}", b)
+            elif op == "fail":
+                t = t.mark_failed(a, b)
+        except PartitionError:
+            continue
+        t.check_invariants()
+        if t is not prev:   # no-op resize legitimately returns the same table
+            assert t.epoch > last_epoch, "every mutation must bump the epoch"
+        last_epoch = t.epoch
+        # no zone overlaps failed columns
+        for z in t.zones:
+            assert not (z.columns() & t.failed_columns)
