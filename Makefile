@@ -1,0 +1,15 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench
+
+# tier-1 verify (see ROADMAP.md)
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# colocated-vs-disaggregated serving latency, small shapes (CI-friendly)
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/disagg_serving.py --smoke
+
+# full benchmark harness (paper tables/figures)
+bench:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/run.py

@@ -1,0 +1,68 @@
+"""Disaggregated serving demo: prefill cell -> KV channel -> decode cell.
+
+The paper's "isolate first, then share on demand" applied to inference:
+two serving subOSes own their zones outright; the only coupling is the
+on-demand channels the supervisor opens between them — one to sync the
+weights (decode -> prefill), one to stream per-request KV-cache rows
+(prefill -> decode).  Prompts run as single chunked-prefill program
+invocations on the prefill cell; the decode cell only ever runs decode
+steps, so its per-token latency never queues behind prompt processing.
+
+Run:  PYTHONPATH=src python examples/serve_disagg.py
+(uses 8 virtual host devices so the two cells sit on disjoint zones)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+
+from repro.configs.base import smoke_config
+from repro.configs.registry import get_arch
+from repro.core import DeviceGrid, Supervisor
+from repro.serve.batcher import Request
+from repro.serve.disagg import DisaggServer
+
+
+def main():
+    grid = DeviceGrid.from_flat(jax.devices(), pods=1, rows=2, cols=4)
+    sup = Supervisor(grid)
+    arch = smoke_config(get_arch("qwen3-4b"))
+
+    # -- two isolated serving cells: prompts vs tokens
+    sup.create_cell("prefill", arch, "serve", ncols=2)
+    decode = sup.create_cell("decode", arch, "serve", ncols=1)
+    decode.init_serve(rng=jax.random.PRNGKey(0))
+    print(f"cells up: prefill={sup.cells['prefill'].zone.ncols} cols, "
+          f"decode={decode.zone.ncols} cols, epoch={sup.table.epoch}")
+
+    # -- share on demand: weight sync + KV handoff channels
+    srv = DisaggServer(sup, "prefill", "decode",
+                       batch_slots=4, max_len=64, chunk=16)
+    print(f"channels: {[(c.kind, c.src.name, '->', c.dst.name) for c in sup.channels]}")
+
+    # -- serve a burst of long-prompt requests
+    rng = np.random.RandomState(0)
+    for rid, L in enumerate([33, 40, 48, 35, 44, 38]):
+        srv.submit(Request(rid=rid, prompt=rng.randint(1, arch.vocab, size=L).astype(np.int32),
+                           max_new_tokens=8))
+    done = srv.run_until_drained()
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"  req {r.rid}: prompt={len(r.prompt)} toks "
+              f"ttft={r.ttft * 1e3:.1f}ms tpot={r.tpot * 1e3:.1f}ms -> {r.output}")
+
+    # -- the handoff in numbers: invocations, channel traffic, exact accounting
+    st = srv.stats()
+    print(f"prefill invocations: {st['prefill_invocations']} (1 per prompt; "
+          f"token-at-a-time would need {sum(len(r.prompt) for r in done)})")
+    print(f"decode invocations:  {st['decode_invocations']}")
+    print(f"kv channel: {st['kv_bytes'] / 1e6:.2f} MB over {st['kv_transfers']} "
+          f"transfers in {st['kv_seconds'] * 1e3:.1f} ms")
+    print(f"decode-cell serving summary: {st['decode_serving']}")
+    sup.destroy_cell("prefill")
+    sup.destroy_cell("decode")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,12 @@ from repro.core.partition import (  # noqa: F401
 )
 from repro.core.cell import Cell, CellError  # noqa: F401
 from repro.core.supervisor import Supervisor  # noqa: F401
-from repro.core.channels import ArrayChannel, ChannelError, ControlPlane  # noqa: F401
+from repro.core.channels import (  # noqa: F401
+    ArrayChannel,
+    ChannelError,
+    ControlPlane,
+    KVEnvelope,
+)
 from repro.core.elastic import ElasticPolicy, ThresholdScheduler  # noqa: F401
 from repro.core.guard import BoundaryGuard, BoundaryViolation  # noqa: F401
 from repro.core.accounting import CellAccounting, collective_bytes  # noqa: F401

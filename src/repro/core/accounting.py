@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 COLLECTIVE_OPS = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -62,6 +62,27 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return dict(out)
 
 
+def _normalize_cost_analysis(ca) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a dict on newer jax and a
+    per-device *list* of dicts on older releases (one entry per local
+    device, all identical under SPMD).  Normalize to one flat dict."""
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Per-request serving latencies (seconds), attributed to one cell."""
+    rid: int
+    ttft: Optional[float] = None     # submission -> first output token
+    tpot: Optional[float] = None     # per-token decode latency after that
+    prompt_len: int = 0
+    new_tokens: int = 0
+
+
 @dataclasses.dataclass
 class ProgramCost:
     name: str
@@ -83,9 +104,10 @@ class CellAccounting:
     def __init__(self, cell_name: str):
         self.cell = cell_name
         self.programs: Dict[str, ProgramCost] = {}
+        self.requests: List[RequestMetrics] = []
 
     def register_program(self, name: str, compiled, hlo_text: Optional[str] = None):
-        ca = compiled.cost_analysis() or {}
+        ca = _normalize_cost_analysis(compiled.cost_analysis())
         ma = compiled.memory_analysis()
         text = hlo_text if hlo_text is not None else compiled.as_text()
         pc = ProgramCost(
@@ -98,6 +120,26 @@ class CellAccounting:
         )
         self.programs[name] = pc
         return pc
+
+    def record_request(self, rid: int, *, ttft: Optional[float] = None,
+                       tpot: Optional[float] = None, prompt_len: int = 0,
+                       new_tokens: int = 0) -> RequestMetrics:
+        rm = RequestMetrics(rid=rid, ttft=ttft, tpot=tpot,
+                            prompt_len=prompt_len, new_tokens=new_tokens)
+        self.requests.append(rm)
+        return rm
+
+    def serving_summary(self) -> dict:
+        """p50/p99 TTFT and TPOT over every request this cell served."""
+        import numpy as np
+        ttfts = [r.ttft for r in self.requests if r.ttft is not None]
+        tpots = [r.tpot for r in self.requests if r.tpot is not None]
+        out = {"requests": len(self.requests)}
+        for key, xs in (("ttft", ttfts), ("tpot", tpots)):
+            if xs:
+                out[f"{key}_p50"] = float(np.percentile(xs, 50))
+                out[f"{key}_p99"] = float(np.percentile(xs, 99))
+        return out
 
     def record_invocation(self, name: str, n: int = 1):
         if name in self.programs:

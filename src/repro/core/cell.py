@@ -144,10 +144,7 @@ class Cell:
                 compiled = fn.lower(self.state, batch).compile()
                 from repro.core.guard import BoundaryGuard
                 BoundaryGuard(lambda: None).validate(self, compiled)
-                try:
-                    self.accounting.register_program("train_step", compiled)
-                except Exception:
-                    pass
+                self.accounting.register_program("train_step", compiled)
                 self._programs[key] = compiled
             self.state, metrics = self._programs[key](self.state, batch)
             self.step += 1
@@ -174,6 +171,7 @@ class Cell:
         from repro.serve.batcher import ContinuousBatcher
         if self.serve_params is None:
             self.init_serve()
+        kw.setdefault("accounting", self.accounting)
         return ContinuousBatcher(
             self.model, self.serve_params,
             batch_slots=batch_slots, max_len=max_len, **kw,

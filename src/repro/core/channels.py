@@ -91,20 +91,30 @@ class ControlPlane:
             out.append(m)
 
 
+@dataclasses.dataclass
+class KVEnvelope:
+    """One request's KV rows in flight on a channel (prefill -> decode)."""
+    meta: dict
+    cache: Any
+
+
 class ArrayChannel:
     """RFcom-style typed array channel between two cells.
 
     ``send``/``recv`` move pytrees onto the destination cell's mesh;
     ``map`` hands over the buffer without copy when the destination
-    sharding equals the source (zero-copy shared mapping).
+    sharding equals the source (zero-copy shared mapping); ``send_kv``/
+    ``recv_kv`` carry per-request KV-cache rows for the disaggregated
+    prefill-cell -> decode-cell handoff (see ``repro.serve.disagg``).
     """
 
     _ids = itertools.count()
 
-    def __init__(self, src_cell, dst_cell):
+    def __init__(self, src_cell, dst_cell, kind: str = "array"):
         self.cid = next(self._ids)
         self.src = src_cell
         self.dst = dst_cell
+        self.kind = kind
         self._inbox: deque = deque()
         self.bytes_sent = 0
         self.transfers = 0
@@ -115,9 +125,12 @@ class ArrayChannel:
         if not self.open:
             raise ChannelError("channel closed")
 
-    def send(self, tree: Any, target_shardings: Any = None) -> dict:
-        """Transfer a pytree to the destination cell's mesh."""
-        self._check_open()
+    def _shared_devices(self) -> bool:
+        src = {id(d) for d in self.src.mesh.devices.flat}
+        dst = {id(d) for d in self.dst.mesh.devices.flat}
+        return bool(src & dst)
+
+    def _transfer(self, tree: Any, target_shardings: Any = None):
         t0 = time.monotonic()
         if target_shardings is None:
             target_shardings = jax.tree.map(
@@ -130,13 +143,35 @@ class ArrayChannel:
         self.bytes_sent += nb
         self.transfers += 1
         self.seconds += dt
+        return out, {"bytes": nb, "seconds": dt, "gbps": nb / max(dt, 1e-9) / 1e9}
+
+    def send(self, tree: Any, target_shardings: Any = None) -> dict:
+        """Transfer a pytree to the destination cell's mesh."""
+        self._check_open()
+        out, stats = self._transfer(tree, target_shardings)
         self._inbox.append(out)
-        return {"bytes": nb, "seconds": dt, "gbps": nb / max(dt, 1e-9) / 1e9}
+        return stats
+
+    def send_kv(self, slot_cache: Any, target_shardings: Any = None,
+                *, meta: Optional[dict] = None) -> dict:
+        """Stream one request's per-slot KV rows onto the decode cell's
+        mesh (the share-on-demand handoff).  ``slot_cache`` is a 1-row
+        cache as produced by the prefill program / ``slice_cache_slots``;
+        ``meta`` carries the request bookkeeping (rid, first token, ...)."""
+        self._check_open()
+        out, stats = self._transfer(slot_cache, target_shardings)
+        self._inbox.append(KVEnvelope(meta=dict(meta or {}), cache=out))
+        return stats
 
     def map(self, tree: Any) -> dict:
         """Zero-copy publish (shared mapping analogue): the peer sees the
         same buffers.  Only valid when both zones share devices."""
         self._check_open()
+        if not self._shared_devices():
+            raise ChannelError(
+                f"map on channel {self.cid}: zones share no devices "
+                "(zero-copy mapping needs co-located cells; use send())"
+            )
         self._inbox.append(tree)
         self.transfers += 1
         return {"bytes": 0, "seconds": 0.0, "zero_copy": True}
@@ -146,6 +181,20 @@ class ArrayChannel:
         if not self._inbox:
             raise ChannelError("empty channel")
         return self._inbox.popleft()
+
+    def recv_kv(self) -> KVEnvelope:
+        """Pop the next in-flight KV envelope (meta + per-slot cache)."""
+        out = self.recv()
+        if not isinstance(out, KVEnvelope):
+            raise ChannelError("head of channel is not a KV envelope")
+        return out
+
+    def poll_kv(self) -> Optional[KVEnvelope]:
+        """Non-raising recv_kv: None when the channel is empty."""
+        self._check_open()
+        if not self._inbox:
+            return None
+        return self.recv_kv()
 
     def close(self):
         self.open = False

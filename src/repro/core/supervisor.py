@@ -192,10 +192,16 @@ class Supervisor:
     # ------------------------------------------------------------------
     # channels (on-demand sharing)
     # ------------------------------------------------------------------
-    def open_channel(self, src: str, dst: str) -> ArrayChannel:
-        ch = ArrayChannel(self.cells[src], self.cells[dst])
+    def open_channel(self, src: str, dst: str, kind: str = "array") -> ArrayChannel:
+        """Open an on-demand data channel between two cells.
+
+        ``kind`` is a label for the event log / introspection: "array" for
+        generic pytree transfer (weight sync), "kv" for the disaggregated
+        prefill->decode KV handoff (see ``repro.serve.disagg``).
+        """
+        ch = ArrayChannel(self.cells[src], self.cells[dst], kind=kind)
         self.channels.append(ch)
-        self._log("open_channel", src=src, dst=dst, cid=ch.cid)
+        self._log("open_channel", src=src, dst=dst, cid=ch.cid, kind=kind)
         return ch
 
     # ------------------------------------------------------------------

@@ -1,0 +1,19 @@
+"""Version compatibility for Pallas TPU compiler params.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+installed version may carry either name.  All kernels construct their
+compiler params through :func:`tpu_compiler_params` so the resolution
+happens once.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either jax naming."""
+    return CompilerParams(**kwargs)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -102,7 +104,7 @@ def decode_attention_bhd(
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G, Dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

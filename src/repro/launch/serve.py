@@ -25,6 +25,8 @@ def main(argv=None):
     p.add_argument("--max-len", type=int, default=128)
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--prefill-chunk", type=int, default=32,
+                   help="chunked-prefill bucket size; 0 = token-at-a-time")
     args = p.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -36,7 +38,8 @@ def main(argv=None):
     cell = sup.create_cell(arch.name, arch, "serve", ncols=1)
     cell.init_serve()
     bat = cell.make_batcher(batch_slots=args.slots, max_len=args.max_len,
-                            temperature=args.temperature)
+                            temperature=args.temperature,
+                            prefill_chunk=args.prefill_chunk or None)
 
     rng = np.random.default_rng(0)
     t0 = time.time()

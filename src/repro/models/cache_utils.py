@@ -1,0 +1,77 @@
+"""KV-cache slot slicing / merging — the data plane of disaggregated serving.
+
+A continuous batcher's cache is a pytree whose leaves carry a batch ("slot")
+dimension at a family-dependent axis (layer-stacked KV slices put it at
+axis 1, doubly-stacked hybrid caches at axis 2, ...).  These helpers derive
+the batch-axis index per leaf from the cache *specs* (each :class:`PSpec`
+names its logical axes, so the position of ``"batch"`` is exact, not
+guessed) and then slice whole per-request rows out of one cache or merge
+them into free slots of another.
+
+This is what moves over an :class:`~repro.core.channels.ArrayChannel` in the
+prefill-cell -> decode-cell handoff: the prefill cell slices one request's
+KV rows, the channel reshards them onto the decode cell's mesh, and the
+decode cell merges them into a free batcher slot.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import KVSlice
+from repro.models.param import tree_map_pspec
+
+
+def cache_batch_axes(model, batch: int, max_len: int) -> Any:
+    """Tree (same structure as the cache) of per-leaf batch-axis indices."""
+    return tree_map_pspec(
+        lambda s: s.logical.index("batch"),
+        model.cache_specs(batch, max_len),
+    )
+
+
+def slice_cache_slots(cache: Any, axes: Any, slots: Sequence[int]) -> Any:
+    """Gather the given slot rows out of every cache leaf.
+
+    Returns a cache whose batch dimension is ``len(slots)``; the original
+    cache is untouched.
+    """
+    idx = jnp.asarray(slots, jnp.int32)
+    return jax.tree.map(lambda c, a: jnp.take(c, idx, axis=a), cache, axes)
+
+
+def merge_cache_slots(dst: Any, src: Any, axes: Any, slots: Sequence[int]) -> Any:
+    """Write ``src`` rows (batch dim == len(slots)) into ``dst`` at ``slots``.
+
+    Runs eagerly; on a multi-device cache the scatter may gather/reshard —
+    the handoff path sends per-request rows already placed on the
+    destination mesh, so this stays local in the common case.
+    """
+    idx = jnp.asarray(slots, jnp.int32)
+
+    def put(d, s, a):
+        return d.at[(slice(None),) * a + (idx,)].set(s)
+
+    return jax.tree.map(put, dst, src, axes)
+
+
+def mask_pad_slots(cache: Any, length: jnp.ndarray) -> Any:
+    """Invalidate cache slots beyond each row's true prompt length.
+
+    Chunked prefill pads prompts to a bucket length, so positions
+    ``length[b] .. S_pad-1`` hold garbage K/V.  Marking their ``slot_pos``
+    as -1 makes the decode attention mask them out (``valid &= pos >= 0``)
+    until the decode loop overwrites them with real tokens.
+    """
+    def fix(node):
+        if isinstance(node, KVSlice):
+            s_c = node.slot_pos.shape[-1]
+            valid = jnp.arange(s_c, dtype=jnp.int32) < length[:, None]
+            return node._replace(
+                slot_pos=jnp.where(valid, node.slot_pos, jnp.int32(-1))
+            )
+        return node
+
+    return jax.tree.map(fix, cache, is_leaf=lambda x: isinstance(x, KVSlice))

@@ -454,6 +454,37 @@ class Model:
         logits = self._logits(params, x)[:, 0]
         return logits, new_cache
 
+    def prefill_ranged(self, params, batch, cache):
+        """Chunked prefill: whole padded prompts in a single invocation.
+
+        ``batch`` = {tokens (B, S_pad) int32, length (B,) int32} where row b
+        holds a real prompt in ``tokens[b, :length[b]]`` and padding after.
+        Returns (logits (B, V) taken at each row's LAST REAL token, cache
+        with the pad slots' ``slot_pos`` masked to -1 so decode attention
+        never sees the padding K/V).
+
+        Only exact for families whose serve cache is pure KV (dense / vlm /
+        moe): recurrent state (ssm / hybrid) would integrate the pad tokens,
+        and encdec needs source features — those fall back to the
+        token-at-a-time path in the batcher.
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "vlm", "moe"):
+            raise NotImplementedError(
+                f"chunked prefill is KV-cache-only (family {cfg.family!r})"
+            )
+        x = self._embed_tokens(params, batch["tokens"])
+        x, new_cache, _ = self._backbone(
+            params, x, mode="prefill", cache=cache, x0=x
+        )
+        last = jnp.clip(batch["length"] - 1, 0, x.shape[1] - 1)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B,1,D)
+        x_last = rms_norm(x_last, params["final_norm"], cfg.rms_eps)
+        logits = self._logits(params, x_last)[:, 0]
+        from repro.models.cache_utils import mask_pad_slots
+        new_cache = mask_pad_slots(new_cache, batch["length"])
+        return logits, new_cache
+
     def decode(self, params, cache, batch):
         cfg = self.cfg
         x = self._embed_tokens(params, batch["tokens"])     # (B,1,D)

@@ -5,13 +5,24 @@ join free slots, run until EOS/max_tokens, and free their slot.  Per-slot
 positions (``pos`` is a vector) let slots be at different depths — the
 model's decode path masks per-slot.  This is the serving front used by the
 serving cells and the tail-latency benchmarks.
+
+Prompt consumption is CHUNKED-PREFILL by default: an admitted request's
+whole prompt runs through one bucket-padded prefill program invocation that
+writes its KV rows straight into the slot (O(1) invocations per prompt),
+and the first output token is sampled from the same invocation.  Families
+whose serve state is not a pure KV cache (ssm / hybrid / encdec) or rolling
+SWA caches fall back to the token-at-a-time decode loop.
+
+Slots can also be filled from OUTSIDE via :meth:`install_prefilled` — the
+disaggregated serving path (``repro.serve.disagg``) prefills on a separate
+cell and streams the KV rows over an ArrayChannel into a free slot here.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +36,7 @@ class Request:
     max_new_tokens: int = 16
     submitted_at: float = 0.0
     started_at: Optional[float] = None
+    first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     output: List[int] = dataclasses.field(default_factory=list)
 
@@ -34,18 +46,44 @@ class Request:
             return None
         return self.finished_at - self.submitted_at
 
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (submission -> first output token)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token over the decode phase; None when fewer
+        than two tokens were produced (there was no decode phase to
+        measure — a 0.0 would drag the percentiles toward zero)."""
+        if self.finished_at is None or self.first_token_at is None:
+            return None
+        n = len(self.output) - 1
+        if n < 1:
+            return None
+        return (self.finished_at - self.first_token_at) / n
+
 
 class ContinuousBatcher:
-    """Slot-based continuous batching over a single decode program."""
+    """Slot-based continuous batching over prefill + decode programs."""
 
     def __init__(self, model, params, *, batch_slots: int, max_len: int,
-                 temperature: float = 0.0, eos_token: Optional[int] = None):
-        from repro.serve.serve_step import build_serve_step
+                 temperature: float = 0.0, eos_token: Optional[int] = None,
+                 prefill_chunk: Optional[int] = 32, accounting=None):
+        from repro.models.cache_utils import cache_batch_axes
+        from repro.serve.serve_step import (
+            build_prefill_step,
+            build_serve_step,
+            supports_chunked_prefill,
+        )
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
         self.eos = eos_token
+        self.accounting = accounting
         self.cache = model.init_cache(batch_slots, max_len)
         self.pos = np.zeros(batch_slots, np.int32)
         self.cur_tok = np.zeros(batch_slots, np.int32)
@@ -54,19 +92,95 @@ class ContinuousBatcher:
         self.done: List[Request] = []
         self._step = jax.jit(build_serve_step(model, temperature), donate_argnums=(1,))
         self._rng = jax.random.PRNGKey(0)
+        self._cache_axes = cache_batch_axes(model, batch_slots, max_len)
+        self.prefill_chunk = prefill_chunk
+        self.chunked = (
+            prefill_chunk is not None
+            and supports_chunked_prefill(model.cfg, max_len)
+        )
+        self._prefill = (
+            jax.jit(build_prefill_step(model, temperature)) if self.chunked else None
+        )
+        self._scratch_cache = None       # lazily-built 1-row prefill cache
+        self.prefill_invocations = 0
+        self.decode_invocations = 0
 
     # -- request management --------------------------------------------
     def submit(self, req: Request):
         req.submitted_at = req.submitted_at or time.monotonic()
         self.queue.append(req)
 
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.B) if self.slot_req[s] is None]
+
+    def _finish(self, req: Request, now: float, slot: Optional[int] = None):
+        req.finished_at = now
+        self.done.append(req)
+        if slot is not None:
+            self.slot_req[slot] = None
+        if self.accounting is not None:
+            self.accounting.record_request(
+                req.rid, ttft=req.ttft, tpot=req.tpot,
+                prompt_len=len(req.prompt), new_tokens=len(req.output),
+            )
+
+    # -- chunked prefill ------------------------------------------------
+    def _prefill_request(self, req: Request):
+        """One bucket-padded prefill invocation -> (first_token, KV rows)."""
+        from repro.serve.serve_step import run_prefill_prompt
+        if self._scratch_cache is None:
+            self._scratch_cache = self.model.init_cache(1, self.max_len)
+        tok, row_cache, self._rng = run_prefill_prompt(
+            self._prefill, self.params, self._scratch_cache, req.prompt,
+            chunk=self.prefill_chunk, max_len=self.max_len, rng=self._rng,
+        )
+        self.prefill_invocations += 1
+        return tok, row_cache
+
+    def _install(self, slot: int, req: Request, row_cache, first_token: int):
+        """Write one request's prefilled KV rows + first token into a slot."""
+        from repro.models.cache_utils import merge_cache_slots
+        now = time.monotonic()
+        req.started_at = req.started_at or now
+        req.first_token_at = req.first_token_at or now
+        self.cache = merge_cache_slots(
+            self.cache, row_cache, self._cache_axes, [slot]
+        )
+        L = len(req.prompt)
+        self.pos[slot] = L
+        self.cur_tok[slot] = first_token
+        req.output.append(first_token)
+        finished = (
+            len(req.output) >= req.max_new_tokens
+            or (self.eos is not None and first_token == self.eos)
+            or L >= self.max_len - 1
+        )
+        if finished:
+            self._finish(req, now)
+        else:
+            self.slot_req[slot] = req
+
+    def install_prefilled(self, req: Request, row_cache, first_token: int) -> bool:
+        """Adopt an EXTERNALLY prefilled request (disaggregated serving):
+        ``row_cache`` is a 1-row cache already on this batcher's devices.
+        Returns False when no slot is free (caller retries later)."""
+        free = self.free_slots()
+        if not free:
+            return False
+        self._install(free[0], req, row_cache, first_token)
+        return True
+
     def _admit(self):
         for slot in range(self.B):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.popleft()
                 req.started_at = time.monotonic()
-                # the prompt is consumed token-at-a-time through the decode
-                # path (shared cache keeps slot shapes uniform)
+                if self.chunked and 0 < len(req.prompt) <= self.max_len - 1:
+                    tok, row_cache = self._prefill_request(req)
+                    self._install(slot, req, row_cache, tok)
+                    continue
+                # fallback: the prompt is consumed token-at-a-time through
+                # the decode path (shared cache keeps slot shapes uniform)
                 self.slot_req[slot] = req
                 self.pos[slot] = 0
                 self.cur_tok[slot] = int(req.prompt[0]) if len(req.prompt) else 0
@@ -84,6 +198,7 @@ class ContinuousBatcher:
         }
         self._rng, sub = jax.random.split(self._rng)
         toks, _logits, self.cache = self._step(self.params, self.cache, batch, sub)
+        self.decode_invocations += 1
         toks = np.asarray(toks)
         now = time.monotonic()
         for s in busy:
@@ -91,11 +206,18 @@ class ContinuousBatcher:
             self.pos[s] += 1
             cursor = getattr(req, "_prompt_cursor", len(req.prompt))
             if cursor < len(req.prompt):
+                if self.pos[s] >= self.max_len - 1:
+                    # prompt overran the cache: fail fast instead of
+                    # spinning forever past the last writable slot
+                    self._finish(req, now, slot=s)
+                    continue
                 # still consuming the prompt: feed next prompt token
                 self.cur_tok[s] = int(req.prompt[cursor])
                 req._prompt_cursor = cursor + 1  # type: ignore[attr-defined]
                 continue
             tok = int(toks[s])
+            if not req.output:
+                req.first_token_at = now
             req.output.append(tok)
             self.cur_tok[s] = tok
             finished = (
@@ -104,9 +226,7 @@ class ContinuousBatcher:
                 or self.pos[s] >= self.max_len - 1
             )
             if finished:
-                req.finished_at = now
-                self.done.append(req)
-                self.slot_req[s] = None
+                self._finish(req, now, slot=s)
         return len(busy)
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:

@@ -1,11 +1,27 @@
-"""Serving programs: prefill + decode with sampling."""
+"""Serving programs: chunked prefill + decode with sampling.
+
+Two programs back the serving stack:
+
+* ``prefill_step`` — consumes a whole (bucket-padded) prompt in ONE program
+  invocation, writes the KV cache directly, and samples the first output
+  token from the logits at the last real prompt position.  This is the
+  TTFT-critical path: O(prompt_len / chunk) invocations instead of the
+  O(prompt_len) decode calls of token-at-a-time prompt consumption.
+* ``serve_step`` — one decode step over all busy batcher slots.
+
+Prompts are padded to *chunk buckets* (multiples of the batcher's
+``prefill_chunk``) so the number of distinct compiled prefill programs is
+bounded by ``max_len / chunk`` rather than one per prompt length.
+"""
 from __future__ import annotations
 
 from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.configs.base import ArchConfig
 from repro.models.model import Model
 
 F32 = jnp.float32
@@ -18,11 +34,58 @@ def sample_tokens(logits, rng, temperature: float = 0.0):
     return jax.random.categorical(rng, logits.astype(F32) / temperature).astype(jnp.int32)
 
 
-def build_prefill_step(model: Model) -> Callable:
-    def prefill_step(params, batch, cache):
-        logits, cache = model.prefill(params, batch, cache)
-        return logits, cache
+def bucket_len(prompt_len: int, chunk: int, max_len: int) -> int:
+    """Pad a prompt length up to the next chunk multiple (capped at the
+    cache length) so prefill programs compile once per bucket.
+
+    The cap binds LAST: a bucket longer than the cache would push the
+    prefill attention into its rolling-cache branch and silently discard
+    the real prompt KV."""
+    b = -(-prompt_len // chunk) * chunk
+    return min(max(b, chunk), max_len)
+
+
+def supports_chunked_prefill(cfg: ArchConfig, max_len: int) -> bool:
+    """Chunked prefill is exact only for pure-KV-cache families with a
+    non-rolling cache (a rolling SWA buffer would retain the pad tail)."""
+    return cfg.family in ("dense", "vlm", "moe") and (
+        cfg.sliding_window is None or cfg.sliding_window >= max_len
+    )
+
+
+def build_prefill_step(model: Model, temperature: float = 0.0) -> Callable:
+    """prefill_step(params, cache, batch, rng) -> (first_tokens, logits, cache).
+
+    ``batch`` = {tokens (B, S_pad), length (B,)}; ``cache`` is a fresh
+    (B-row) cache whose buffers are NOT donated — callers reuse a scratch
+    cache across requests since prefill rebuilds every KV leaf.
+    """
+    def prefill_step(params, cache, batch, rng):
+        logits, cache = model.prefill_ranged(params, batch, cache)
+        toks = sample_tokens(logits, rng, temperature)
+        return toks, logits, cache
     return prefill_step
+
+
+def run_prefill_prompt(step_fn: Callable, params, scratch_cache, prompt,
+                       *, chunk: int, max_len: int, rng):
+    """Bucket-pad one prompt and run a jitted ``prefill_step`` over it.
+
+    Shared by the colocated batcher and the disaggregated PrefillWorker so
+    the pad/invoke/first-token sequence exists exactly once.  Returns
+    (first_token, 1-row KV cache, advanced rng).
+    """
+    L = len(prompt)
+    s_pad = bucket_len(L, chunk, max_len)
+    tokens = np.zeros((1, s_pad), np.int32)
+    tokens[0, :L] = prompt
+    batch = {
+        "tokens": jnp.asarray(tokens),
+        "length": jnp.asarray([L], jnp.int32),
+    }
+    rng, sub = jax.random.split(rng)
+    toks, _logits, row_cache = step_fn(params, scratch_cache, batch, sub)
+    return int(np.asarray(toks)[0]), row_cache, rng
 
 
 def build_serve_step(model: Model, temperature: float = 0.0) -> Callable:

@@ -1,6 +1,9 @@
 """Property tests for the PartitionTable (the IFTS shared descriptions)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")  # keep collection alive without the dep
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.partition import PartitionError, PartitionTable, Zone

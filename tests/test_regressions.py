@@ -1,0 +1,127 @@
+"""Regression pins for the seed-suite failure clusters.
+
+Each test pins one of the version-compat / correctness bugs fixed alongside
+the disaggregated-serving PR so they cannot silently reappear:
+  * Pallas TPU compiler-params rename (CompilerParams vs TPUCompilerParams)
+  * ``cost_analysis()`` returning a per-device list on older jax
+  * ``jax.sharding.AxisType`` absent on older jax (mesh construction)
+  * ``ArrayChannel.map`` silently allowing disjoint-device zero-copy
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+
+def test_tpu_compiler_params_resolves_on_this_jax():
+    from jax.experimental.pallas import tpu as pltpu
+
+    from repro.kernels._compat import tpu_compiler_params
+
+    cp = tpu_compiler_params(dimension_semantics=("parallel", "arbitrary"))
+    expected = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    assert isinstance(cp, expected)
+
+
+def test_kernels_run_under_interpret_mode():
+    """The four kernels construct their compiler params through the shim;
+    one representative call proves the pallas_call wiring still works."""
+    from repro.kernels.flash_attention import flash_attention
+
+    q = jnp.zeros((1, 8, 1, 8), jnp.float32)      # (B, S, H, Dh)
+    out = flash_attention(q, q, q, block_q=8, block_k=8)
+    assert out.shape == q.shape
+
+
+def test_cost_analysis_list_and_dict_normalized():
+    from repro.core.accounting import CellAccounting, _normalize_cost_analysis
+
+    assert _normalize_cost_analysis(None) == {}
+    assert _normalize_cost_analysis([]) == {}
+    assert _normalize_cost_analysis({"flops": 5.0}) == {"flops": 5.0}
+    assert _normalize_cost_analysis([{"flops": 5.0}]) == {"flops": 5.0}
+
+    class FakeCompiled:
+        def cost_analysis(self):
+            return [{"flops": 7.0, "bytes accessed": 3.0}]   # per-device list
+
+        def memory_analysis(self):
+            return None
+
+        def as_text(self):
+            return ""
+
+    pc = CellAccounting("c").register_program("p", FakeCompiled())
+    assert pc.flops_per_device == 7.0 and pc.bytes_per_device == 3.0
+
+
+def test_cell_accounting_is_exact_after_training():
+    """The old ``try/except: pass`` around register_program hid the crash
+    and silently disabled exact accounting; now training must register the
+    step program's real cost."""
+    from repro.configs.base import ShapeConfig, smoke_config
+    from repro.configs.registry import get_arch
+    from repro.core import DeviceGrid, Supervisor
+    from repro.data.pipeline import DataConfig, SyntheticPipeline
+
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=1)
+    sup = Supervisor(grid)
+    arch = smoke_config(get_arch("qwen3-4b"))
+    cell = sup.create_cell("t", arch, "train", ncols=1)
+    pipe = SyntheticPipeline(DataConfig(kind="bigram", vocab=arch.vocab), arch,
+                             ShapeConfig("t", "train", 2, 16))
+    cell.train_steps(pipe.get_batch, 2)
+    pc = cell.accounting.programs["train_step"]
+    assert pc.flops_per_device > 0 and pc.invocations == 2
+    assert cell.accounting.totals()["flops"] > 0
+
+
+def test_mesh_helpers_work_without_axis_type():
+    """mesh.py must construct meshes whether or not jax.sharding.AxisType
+    exists (it is absent on jax 0.4.x)."""
+    from repro.launch.mesh import _axis_types_kwargs, make_mesh_for_devices
+
+    kw = _axis_types_kwargs(2)
+    if hasattr(jax.sharding, "AxisType"):
+        assert kw == {"axis_types": (jax.sharding.AxisType.Auto,) * 2}
+    else:
+        assert kw == {}
+    mesh = make_mesh_for_devices(1, 1)
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_channel_map_requires_shared_devices():
+    from repro.core.channels import ArrayChannel, ChannelError
+
+    class FakeCell:
+        def __init__(self, devices):
+            self.mesh = type("M", (), {"devices": np.array(devices, dtype=object)})()
+
+    d0, d1 = object(), object()
+    shared = ArrayChannel(FakeCell([d0]), FakeCell([d0]))
+    assert shared.map({"x": 1})["zero_copy"]
+    assert shared.recv() == {"x": 1}
+
+    disjoint = ArrayChannel(FakeCell([d0]), FakeCell([d1]))
+    with pytest.raises(ChannelError):
+        disjoint.map({"x": 1})
+
+
+def test_collection_never_aborts_on_missing_hypothesis():
+    """test_partition / test_train importorskip hypothesis instead of
+    crashing collection (which killed the whole tier-1 -x run)."""
+    import ast
+    import os
+
+    here = os.path.dirname(__file__)
+    for mod in ("test_partition.py", "test_train.py"):
+        src = open(os.path.join(here, mod)).read()
+        tree = ast.parse(src)
+        calls = [
+            n for n in ast.walk(tree)
+            if isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "importorskip"
+        ]
+        assert calls, f"{mod} must importorskip hypothesis"

@@ -1,0 +1,236 @@
+"""Disaggregated serving: chunked prefill + prefill->decode KV handoff.
+
+Covers the tentpole of the disaggregated serving subsystem:
+  * ``Model.prefill_ranged`` — padded-prompt prefill matches the exact-length
+    prefill program at the last real token;
+  * chunked-prefill batcher — outputs identical to the token-at-a-time
+    prompt loop, with >= 4x fewer program invocations for prompts >= 32;
+  * prefill-cell -> decode-cell KV handoff over an ArrayChannel — outputs
+    identical to single-cell serving;
+  * the prompt-overflow fix and TTFT/TPOT request accounting.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import smoke_config
+from repro.configs.registry import get_arch
+from repro.core import DeviceGrid, Supervisor
+from repro.core.accounting import CellAccounting
+from repro.models.model import build_model
+from repro.serve.batcher import ContinuousBatcher, Request
+from repro.sharding.rules import single_device_ctx
+
+MAX_LEN = 48
+SLOTS = 3
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = smoke_config(get_arch("qwen3-4b"))
+    model = build_model(cfg, single_device_ctx())
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, vocab, size=L).astype(np.int32) for L in lens]
+
+
+def _requests(prompts, max_new=5):
+    return [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def test_bucket_len_cap_binds_last():
+    """Regression: chunk > max_len must cap at max_len, never pad past the
+    cache (which would silently discard the prompt KV via the rolling
+    branch of prefill attention)."""
+    from repro.serve.serve_step import bucket_len
+    assert bucket_len(5, 32, 16) == 16
+    assert bucket_len(5, 8, 64) == 8
+    assert bucket_len(33, 16, 64) == 48
+    assert bucket_len(63, 16, 64) == 64
+
+
+# ---------------------------------------------------------------------------
+# prefill program
+# ---------------------------------------------------------------------------
+def test_prefill_ranged_matches_exact_length_prefill(model_and_params):
+    model, params = model_and_params
+    (prompt,) = _prompts(model.cfg.vocab, [11])
+    L, s_pad = len(prompt), 16
+
+    # reference: the existing whole-prompt prefill at the exact length
+    ref_logits, _ = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, model.init_cache(1, MAX_LEN)
+    )
+
+    padded = np.zeros((1, s_pad), np.int32)
+    padded[0, :L] = prompt
+    got_logits, cache = model.prefill_ranged(
+        params,
+        {"tokens": jnp.asarray(padded), "length": jnp.asarray([L], jnp.int32)},
+        model.init_cache(1, MAX_LEN),
+    )
+    a, b = np.asarray(got_logits, np.float32), np.asarray(ref_logits, np.float32)
+    rel = np.abs(a - b).max() / (np.abs(b).max() + 1e-6)
+    assert rel < 5e-2, rel
+
+    # pad slots are invalidated so decode attention can never see them
+    sp = np.asarray(cache["layers"].slot_pos)          # (layers, 1, S_c)
+    assert (sp[:, 0, :L] == np.arange(L)).all()
+    assert (sp[:, 0, L:] == -1).all()
+
+
+def test_prefill_ranged_rejects_stateful_families():
+    cfg = smoke_config(get_arch("mamba2-2.7b"))
+    model = build_model(cfg, single_device_ctx())
+    with pytest.raises(NotImplementedError):
+        model.prefill_ranged(None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill batcher vs token-at-a-time
+# ---------------------------------------------------------------------------
+def test_chunked_prefill_matches_token_at_a_time(model_and_params):
+    model, params = model_and_params
+    prompts = _prompts(model.cfg.vocab, [3, 33, 40, 1, 17])
+
+    base = ContinuousBatcher(model, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                             prefill_chunk=None)
+    for r in _requests(prompts):
+        base.submit(r)
+    ref = {r.rid: r.output for r in base.run_until_drained()}
+    assert base.prefill_invocations == 0
+
+    chunked = ContinuousBatcher(model, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                                prefill_chunk=16)
+    assert chunked.chunked
+    for r in _requests(prompts):
+        chunked.submit(r)
+    got = {r.rid: r.output for r in chunked.run_until_drained()}
+
+    assert got == ref
+    assert chunked.prefill_invocations == len(prompts)
+    # prompt phase: 1 invocation per prompt instead of prompt_len
+    assert chunked.decode_invocations < base.decode_invocations
+
+
+def test_chunked_prefill_invocation_reduction(model_and_params):
+    """Acceptance: >= 4x fewer program invocations per prompt for L >= 32."""
+    model, params = model_and_params
+    prompts = _prompts(model.cfg.vocab, [32, 40])
+
+    def run(chunk):
+        bat = ContinuousBatcher(model, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                                prefill_chunk=chunk)
+        for r in _requests(prompts, max_new=2):
+            bat.submit(r)
+        bat.run_until_drained()
+        return bat.prefill_invocations + bat.decode_invocations
+
+    baseline, chunked = run(None), run(16)
+    assert baseline >= 4 * chunked, (baseline, chunked)
+
+
+def test_prompt_overflow_terminates(model_and_params):
+    """Regression: a prompt longer than the cache used to spin forever in
+    the token-at-a-time prompt loop (no pos cap check)."""
+    model, params = model_and_params
+    long_prompt = _prompts(model.cfg.vocab, [MAX_LEN + 20])[0]
+    bat = ContinuousBatcher(model, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                            prefill_chunk=None)
+    bat.submit(Request(rid=0, prompt=long_prompt, max_new_tokens=4))
+    done = bat.run_until_drained(max_steps=MAX_LEN * 3)
+    assert len(done) == 1 and done[0].finished_at is not None
+    # chunked batchers route oversized prompts to the same guarded fallback
+    bat2 = ContinuousBatcher(model, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                             prefill_chunk=16)
+    bat2.submit(Request(rid=1, prompt=long_prompt, max_new_tokens=4))
+    done2 = bat2.run_until_drained(max_steps=MAX_LEN * 3)
+    assert len(done2) == 1 and bat2.prefill_invocations == 0
+
+
+def test_request_metrics_recorded(model_and_params):
+    model, params = model_and_params
+    acc = CellAccounting("serve")
+    bat = ContinuousBatcher(model, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                            prefill_chunk=16, accounting=acc)
+    for r in _requests(_prompts(model.cfg.vocab, [5, 20]), max_new=3):
+        bat.submit(r)
+    done = bat.run_until_drained()
+    assert len(acc.requests) == 2
+    for r in done:
+        assert r.ttft is not None and r.ttft >= 0
+        assert r.tpot is not None and r.tpot >= 0
+    s = acc.serving_summary()
+    assert s["requests"] == 2 and "ttft_p50" in s and "tpot_p50" in s
+
+
+# ---------------------------------------------------------------------------
+# prefill cell -> decode cell handoff
+# ---------------------------------------------------------------------------
+def test_kv_handoff_roundtrip_matches_single_cell(model_and_params):
+    from repro.serve.disagg import DisaggServer
+
+    model, params = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=2,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    sup.create_cell("prefill", cfg, "serve", ncols=1)
+    dec = sup.create_cell("decode", cfg, "serve", ncols=1)
+    dec.init_serve(rng=jax.random.PRNGKey(0))
+
+    srv = DisaggServer(sup, "prefill", "decode", batch_slots=SLOTS,
+                       max_len=MAX_LEN, chunk=16)
+    prompts = _prompts(cfg.vocab, [3, 33, 17, 40])
+    for r in _requests(prompts):
+        srv.submit(r)
+    got = {r.rid: r.output for r in srv.run_until_drained()}
+
+    # weight sync + KV handoff both went through supervisor-opened channels
+    kinds = [e.get("kind") for e in sup.events if e["op"] == "open_channel"]
+    assert kinds == ["array", "kv"]
+    assert srv.channel.transfers == len(prompts)
+    assert srv.channel.bytes_sent > 0
+
+    # single-cell reference on the same weights (token-at-a-time)
+    ref_bat = ContinuousBatcher(dec.model, dec.serve_params, batch_slots=SLOTS,
+                                max_len=MAX_LEN, prefill_chunk=None)
+    for r in _requests(prompts):
+        ref_bat.submit(r)
+    ref = {r.rid: r.output for r in ref_bat.run_until_drained()}
+    assert got == ref
+
+    # TTFT/TPOT land in the DECODE cell's accounting (it owns the slots)
+    assert dec.accounting.serving_summary()["requests"] == len(prompts)
+
+
+def test_disagg_unservable_prompts_do_not_stall_the_loop(model_and_params):
+    """An empty or cache-overflowing prompt must finish (empty output)
+    instead of raising mid-pump and starving every other request."""
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=2,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    sup.create_cell("prefill", cfg, "serve", ncols=1)
+    sup.create_cell("decode", cfg, "serve", ncols=1).init_serve(
+        rng=jax.random.PRNGKey(0)
+    )
+    srv = DisaggServer(sup, "prefill", "decode", batch_slots=2,
+                       max_len=32, chunk=8)
+    good = _prompts(cfg.vocab, [5])[0]
+    srv.submit(Request(rid=0, prompt=np.array([], np.int32), max_new_tokens=3))
+    srv.submit(Request(rid=1, prompt=good, max_new_tokens=3))
+    srv.submit(Request(rid=2, prompt=np.ones(40, np.int32), max_new_tokens=3))
+    done = {r.rid: r.output for r in srv.run_until_drained()}
+    assert set(done) == {0, 1, 2}
+    assert done[0] == [] and done[2] == [] and len(done[1]) == 3
