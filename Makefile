@@ -1,10 +1,14 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench
+.PHONY: test lint bench-smoke bench
 
 # tier-1 verify (see ROADMAP.md)
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# ruff (pinned in requirements-dev.txt; config in ruff.toml)
+lint:
+	ruff check src tests benchmarks examples
 
 # colocated-vs-disaggregated serving latency, small shapes (CI-friendly)
 bench-smoke:

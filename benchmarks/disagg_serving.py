@@ -10,8 +10,10 @@ MEASURED on this host (single CPU device; cells are logical zones over it):
     cell (the RainForest share-on-demand pattern applied to inference),
     with per-request KV rows streamed into free batcher slots.
 
-Also exercises the elastic ``ThresholdScheduler`` between the two cells:
-when decode-side TTFT crosses the upper threshold, a column moves from the
+Also exercises the declarative elastic loop between the two cells: the
+decode cell's live TTFT accounting feeds a ``ReconcilePolicy``; when the
+tail crosses the upper threshold the policy rescales the ClusterSpec and
+``Supervisor.apply`` turns the diff into a column transfer from the
 prefill cell to the decode cell (live reshard on both) — the Fig 10/11
 elasticity loop applied to the serving split.
 
@@ -52,7 +54,14 @@ def run(rows: List[dict], smoke: bool = True):
 
     from repro.configs.base import smoke_config
     from repro.configs.registry import get_arch
-    from repro.core import DeviceGrid, ElasticPolicy, Supervisor, ThresholdScheduler
+    from repro.core import (
+        CellSpec,
+        ClusterSpec,
+        DeviceGrid,
+        ElasticPolicy,
+        ReconcilePolicy,
+        Supervisor,
+    )
     from repro.serve.batcher import ContinuousBatcher
     from repro.serve.disagg import DisaggServer
 
@@ -73,7 +82,9 @@ def run(rows: List[dict], smoke: bool = True):
                                     allow_reuse=True)
     can_resize = len({id(d) for d in grid.devices.flat}) == grid.devices.size
     sup = Supervisor(grid)
-    solo = sup.create_cell("solo", cfg, "serve", ncols=1)
+    spec = ClusterSpec(cells=(CellSpec("solo", cfg, "serve", ncols=1),))
+    sup.apply(spec)
+    solo = sup.cells["solo"]
     solo.init_serve(rng=jax.random.PRNGKey(0))
 
     # -- baseline: token-at-a-time prompt loop --------------------------
@@ -122,8 +133,13 @@ def run(rows: List[dict], smoke: bool = True):
     )
 
     # -- disaggregated: prefill cell -> decode cell ---------------------
-    sup.create_cell("prefill", cfg, "serve", ncols=2 if can_resize else 1)
-    dec = sup.create_cell("decode", cfg, "serve", ncols=1)
+    spec = (spec
+            .with_cell(CellSpec("prefill", cfg, "serve",
+                                ncols=2 if can_resize else 1, min_ncols=1))
+            .with_cell(CellSpec("decode", cfg, "serve", ncols=1,
+                                min_ncols=1, max_ncols=2)))
+    sup.apply(spec)
+    dec = sup.cells["decode"]
     dec.init_serve(rng=jax.random.PRNGKey(0))
     srv = DisaggServer(sup, "prefill", "decode", batch_slots=slots,
                        max_len=max_len, chunk=chunk)
@@ -155,14 +171,14 @@ def run(rows: List[dict], smoke: bool = True):
 
     # -- elastic loop: decode cell grows off the prefill cell -----------
     if can_resize:
-        sched = ThresholdScheduler(
+        sched = ReconcilePolicy(
             sup, "decode", "prefill",
             ElasticPolicy(lt=1e-4, ut=5e-3, window=10, cooldown=0.0,
-                          min_server_cols=1, min_donor_cols=1),
+                          metric="ttft"),
         )
-        for r in reqs:
-            if r.ttft is not None:
-                sched.observe(r.ttft)
+        # maybe_act() pulls the disagg run's TTFTs straight out of the
+        # decode cell's CellAccounting; top up if the window is short
+        sched.pull()
         while len(sched.samples) < 10:
             sched.observe(s["ttft_p50_ms"] / 1e3)
         t0 = time.perf_counter()

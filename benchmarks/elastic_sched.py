@@ -1,11 +1,16 @@
 """Paper Figs 10/11 + Table 5 — (lt,ut) elastic scheduling under a trace.
 
 Replays a fluctuating request-rate trace against a serving cell co-located
-with a batch cell (12 "columns" total).  The ThresholdScheduler policy from
-``repro.core.elastic`` decides column transfers; each system pays its own
-resize cost and interference (calibrated SystemModel).  Outputs the
-Table-5 analogue: batch progress, p99, throughput, #transfers.
-MODELED (latencies) + the policy/table code paths exercised for real.
+with a batch cell (12 "columns" total), driven by the DECLARATIVE control
+plane: desired state is a ClusterSpec (server bounded [3,10] cols, batch
+[2,10]); each tick the modeled p99 is recorded into the server cell's
+real ``CellAccounting`` and a :class:`ReconcilePolicy` pulls it, rescales
+the spec, and ``apply``s — the real :class:`Reconciler` plans the column
+``transfer``s against a bookkeeping-only supervisor (instant primitives;
+the resize *cost* is charged per the calibrated SystemModel).  Outputs
+the Table-5 analogue: batch progress, p99, throughput, #transfers.
+MODELED (latencies) + the policy/spec/reconciler code paths exercised for
+real — zero direct ``transfer_columns`` calls in this file.
 """
 from __future__ import annotations
 
@@ -13,29 +18,9 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.simlib import SYSTEMS, p99, simulate_serving
-from repro.core.elastic import ElasticPolicy, ThresholdScheduler
-from repro.core.partition import PartitionTable
-
-
-class _SimCell:
-    def __init__(self, ncols):
-        self.zone = type("Z", (), {"ncols": ncols})()
-
-
-class _SimSupervisor:
-    """Duck-typed Supervisor for the scheduler: instant bookkeeping, the
-    resize *cost* is charged by the caller per the system model."""
-
-    def __init__(self, server_cols, donor_cols):
-        self.cells = {"server": _SimCell(server_cols), "batch": _SimCell(donor_cols)}
-        self.transfers = 0
-
-    def transfer_columns(self, src, dst, n=1):
-        self.cells[src].zone.ncols -= n
-        self.cells[dst].zone.ncols += n
-        self.transfers += 1
-        return {"ncols": n}
+from benchmarks.simlib import SYSTEMS, SimCell, SimSupervisor, p99, simulate_serving
+from repro.core.elastic import ElasticPolicy, ReconcilePolicy
+from repro.core.spec import CellSpec, ClusterSpec
 
 
 def trace_rate(t: float) -> float:
@@ -46,18 +31,27 @@ def trace_rate(t: float) -> float:
 
 def run_system(sys_name: str, duration=2250.0, dt=10.0, seed=0):
     sm = SYSTEMS[sys_name]
-    sup = _SimSupervisor(server_cols=6, donor_cols=6)
-    # the scheduler consumes one p99 observation per tick; median over the
-    # last 6 ticks (1 min) decides moves, floor of 3 columns prevents
-    # shrink-into-overload oscillation
-    sched = ThresholdScheduler(
+    sup = SimSupervisor(SimCell("server", 6, "serve"),
+                        SimCell("batch", 6, "train"))
+    # desired state: the policy may move the server within [3,10] columns
+    # (floor of 3 prevents shrink-into-overload oscillation), the batch
+    # donor keeps at least 2
+    spec = ClusterSpec(cells=(
+        CellSpec("server", None, "serve", ncols=6, min_ncols=3, max_ncols=10),
+        CellSpec("batch", None, "train", ncols=6, min_ncols=2, max_ncols=10),
+    ))
+    plan = sup.apply(spec)
+    assert plan.empty                  # observed already matches desired
+    # the policy consumes one p99 observation per tick via the server
+    # cell's accounting; median over the last 6 ticks (1 min) decides moves
+    sched = ReconcilePolicy(
         sup, "server", "batch",
         ElasticPolicy(lt=0.160, ut=0.200, window=6, percentile=50.0,
-                      cooldown=40.0, min_server_cols=3, min_donor_cols=2),
+                      cooldown=40.0, metric="ttft"),
     )
-    rng = np.random.default_rng(seed)
     batch_work = 0.0
     tails, t = [], 0.0
+    rid = 0
     resize_downtime = 0.0
     can_resize = sm.resize_seconds > 0 or sys_name in ("lxc", "linux")
     while t < duration:
@@ -72,7 +66,10 @@ def run_system(sys_name: str, duration=2250.0, dt=10.0, seed=0):
         )
         tail = p99(lat)
         tails.append(tail)
-        sched.observe(tail)
+        # live accounting feed: the tick's tail lands in the server cell's
+        # CellAccounting; sched.maybe_act() pulls it from there
+        sup.cells["server"].accounting.record_request(rid, ttft=tail)
+        rid += 1
         if sys_name != "linux" and can_resize:     # linux: no partition control
             act = sched.maybe_act(now=t)
             if act:

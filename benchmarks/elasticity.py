@@ -3,6 +3,9 @@
 Creates/destroys/resizes real cells on 8 host CPU devices in a subprocess
 (this process must keep seeing a single device) and reports wall times —
 the analogue of the paper's create/destroy/online/offline measurements.
+Every lifecycle change goes through the declarative path
+(``Supervisor.apply`` of a rescaled ClusterSpec -> reconcile -> primitive),
+so the timings include the spec-diff overhead applications actually pay.
 Paper reference points (seconds): LXC create 2.1 / cpu 0.002; Xen create
 14.2 / cpu 0.126; RainForest create 6.1 / cpu-online 0.066 / offline 0.054.
 """
@@ -22,7 +25,7 @@ sys.path.insert(0, "src")
 import jax
 from repro.configs.base import smoke_config, ShapeConfig
 from repro.configs.registry import get_arch
-from repro.core import DeviceGrid, Supervisor
+from repro.core import CellSpec, ClusterSpec, DeviceGrid, Supervisor
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.train.optimizer import OptConfig
 
@@ -32,9 +35,14 @@ cfg = smoke_config(get_arch("qwen3-4b"))
 pipe = SyntheticPipeline(DataConfig(kind="uniform", vocab=256), cfg,
                          ShapeConfig("t", "train", 32, 8))
 out = {}
+spec = ClusterSpec(cells=(
+    CellSpec("c", cfg, "train", ncols=2, min_ncols=1, max_ncols=3,
+             opt_cfg=OptConfig()),
+))
 
 t0 = time.monotonic()
-cell = sup.create_cell("c", cfg, "train", ncols=2, opt_cfg=OptConfig())
+sup.apply(spec)                                    # create via reconcile
+cell = sup.cells["c"]
 cell.train_steps(lambda s: pipe.get_batch(s), 1)   # includes first compile
 out["create_and_first_step_s"] = time.monotonic() - t0
 
@@ -43,21 +51,22 @@ cell.train_steps(lambda s: pipe.get_batch(s), 1)
 out["steady_step_s"] = time.monotonic() - t0
 
 t0 = time.monotonic()
-stats = sup.resize_cell("c", 3)                    # grow: "cpu online"
+plan = sup.apply(spec.scale("c", 3))               # grow: "cpu online"
 out["grow_1col_s"] = time.monotonic() - t0
-out["grow_reshard_bytes"] = stats["bytes"]
+out["grow_reshard_bytes"] = plan.by_verb("grow")[0].result["bytes"]
 
 t0 = time.monotonic()
 cell.train_steps(lambda s: pipe.get_batch(s), 1)   # recompile on new mesh
 out["post_resize_step_s"] = time.monotonic() - t0
 
 t0 = time.monotonic()
-sup.resize_cell("c", 2)                            # shrink: "cpu offline"
+sup.apply(spec.scale("c", 2))                      # shrink: "cpu offline"
 out["shrink_1col_s"] = time.monotonic() - t0
 
 t0 = time.monotonic()
-sup.destroy_cell("c")
+sup.apply(ClusterSpec())                           # empty spec: destroy
 out["destroy_s"] = time.monotonic() - t0
+assert not sup.cells and sup.reconcile().empty
 
 print(json.dumps(out))
 """

@@ -26,7 +26,7 @@ __doc__ = globals().get("__doc__") or ""
 
 import argparse
 import json
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +39,8 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_m
 from repro.models import encdec as encdec_mod
 from repro.models import transformer as tfm
 from repro.models import zamba2 as zmb
-from repro.models.model import build_model, stack_specs
-from repro.models.param import abstract_params, count_params, is_pspec
+from repro.models.model import build_model
+from repro.models.param import abstract_params, is_pspec
 from repro.sharding.rules import make_ctx
 from repro.train.optimizer import OptConfig, adamw_update, abstract_adam_state
 from repro.train.train_step import resolve_microbatch

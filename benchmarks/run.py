@@ -8,7 +8,6 @@ host devices, while these benches must see the real single device).
 """
 from __future__ import annotations
 
-import sys
 import traceback
 from typing import List
 

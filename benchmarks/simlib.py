@@ -20,9 +20,84 @@ the paper's Figs 2b/7/8/9/12 shapes.  Calibration anchors:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# bookkeeping supervisor: the real Reconciler over instant primitives
+# ---------------------------------------------------------------------------
+class SimZone:
+    def __init__(self, ncols: int):
+        self.ncols = ncols
+
+
+class SimCell:
+    """Duck-typed cell: zone/role/status/accounting, no devices."""
+
+    def __init__(self, name: str, ncols: int, role: str = "serve", arch=None):
+        from repro.core.accounting import CellAccounting
+        self.name = name
+        self.zone = SimZone(ncols)
+        self.role = role
+        self.arch = arch
+        self.status = "running"
+        self.accounting = CellAccounting(name)
+
+
+class SimSupervisor:
+    """Duck-typed supervisor running the REAL Reconciler over instant
+    bookkeeping primitives — shared by the Table-5 trace benchmark and the
+    planner/policy unit tests, so the duck-typed supervisor contract lives
+    in exactly one place.  Primitive calls append to ``log``; transfers
+    also bump ``transfers`` (the executor *cost* is modeled by callers).
+    """
+
+    def __init__(self, *cells: SimCell):
+        self.cells = {c.name: c for c in cells}
+        self.desired = None
+        self.log = []
+        self.transfers = 0
+
+    # declarative surface -------------------------------------------------
+    def apply(self, spec):
+        self.desired = spec
+        return self.reconcile()
+
+    def reconcile(self):
+        from repro.core.reconciler import Reconciler
+        return Reconciler(self).reconcile(self.desired)
+
+    # primitive executor layer --------------------------------------------
+    def create_cell(self, name, arch, role, *, ncols, pods=(0,),
+                    opt_cfg=None, parent=None):
+        self.log.append(("create", name, ncols))
+        self.cells[name] = SimCell(name, ncols, role, arch)
+        return self.cells[name]
+
+    def destroy_cell(self, name):
+        self.log.append(("destroy", name))
+        del self.cells[name]
+
+    def resize_cell(self, name, ncols):
+        self.log.append(("resize", name, ncols))
+        self.cells[name].zone.ncols = ncols
+        return {"ncols": ncols}
+
+    def transfer_columns(self, src, dst, ncols=1):
+        self.log.append(("transfer", src, dst, ncols))
+        self.cells[src].zone.ncols -= ncols
+        self.cells[dst].zone.ncols += ncols
+        self.transfers += 1
+        return {"ncols": ncols}
+
+    def recover_cell(self, name, *, ncols=None, ckpt_dir=None):
+        self.log.append(("recover", name, ncols))
+        cell = self.cells[name]
+        cell.status = "running"
+        cell.zone.ncols = ncols
+        return cell
 
 
 @dataclasses.dataclass

@@ -1,8 +1,11 @@
-"""Quickstart: the IFTS runtime in ~60 lines.
+"""Quickstart: the IFTS runtime in ~60 lines, declaratively.
 
-Boots a supervisor over the local device grid, spawns a training cell
-(a subOS), trains a tiny model, resizes the cell on the fly, opens an
-on-demand channel to a serving cell, syncs weights, and serves a request.
+Boots a supervisor over the local device grid, applies a ClusterSpec
+(the desired state: one training cell), trains a tiny model, *rescales
+the spec* to grow the cell on the fly, adds a serving cell + weight-sync
+channel to the spec, and serves a request.  Every topology change goes
+through ``Supervisor.apply`` — the reconciler turns the spec diff into
+create/resize/channel primitives.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (uses 8 virtual host devices so resize/transfer are real)
@@ -15,7 +18,7 @@ import jax
 
 from repro.configs.base import ShapeConfig, smoke_config
 from repro.configs.registry import get_arch
-from repro.core import DeviceGrid, Supervisor
+from repro.core import CellSpec, ChannelSpec, ClusterSpec, DeviceGrid, Supervisor
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.serve.batcher import Request
 from repro.train.optimizer import OptConfig
@@ -27,26 +30,37 @@ def main():
     sup = Supervisor(grid)
     print(f"supervisor up: grid={grid.shape}, epoch={sup.table.epoch}")
 
-    # -- spawn a training cell (a subOS) on 2 columns (2x2 chips)
+    # -- desired state: one training cell (a subOS) on 2 columns
     arch = smoke_config(get_arch("qwen3-4b"))
-    trainer = sup.create_cell("trainer", arch, "train", ncols=2,
-                              opt_cfg=OptConfig(lr=1e-3, warmup_steps=20, total_steps=400))
+    spec = ClusterSpec(cells=(
+        CellSpec("trainer", arch, "train", ncols=2, min_ncols=1, max_ncols=3,
+                 opt_cfg=OptConfig(lr=1e-3, warmup_steps=20, total_steps=400)),
+    ))
+    plan = sup.apply(spec)
+    print(f"applied spec -> plan [{plan.summary()}], epoch={sup.table.epoch}")
+    trainer = sup.cells["trainer"]
     pipe = SyntheticPipeline(DataConfig(kind="bigram", vocab=256), arch,
                              ShapeConfig("t", "train", 32, 32))
     m = trainer.train_steps(pipe.get_batch, 20)
     print(f"trained 20 steps on {trainer.zone.ncols} cols: xent={m['xent']:.3f}")
 
-    # -- elastic resize: grow the cell, keep training (live reshard)
-    stats = sup.resize_cell("trainer", 3)
-    print(f"resized 2->3 cols in {stats['seconds']:.3f}s "
-          f"({stats['bytes']/1e6:.1f} MB resharded)")
+    # -- elastic grow: rewrite the DESIRED width; reconcile does the resize
+    spec = spec.scale("trainer", 3)
+    plan = sup.apply(spec)
+    grow = plan.by_verb("grow")[0]
+    print(f"rescaled 2->3 cols [{grow.status}] "
+          f"({grow.result['bytes']/1e6:.1f} MB resharded)")
     m = trainer.train_steps(pipe.get_batch, 10)
     print(f"10 more steps on 3 cols: xent={m['xent']:.3f}")
 
-    # -- spawn a serving cell and share weights over an on-demand channel
-    server = sup.create_cell("server", arch, "serve", ncols=1)
+    # -- add a serving cell + an on-demand weight channel to the spec
+    spec = spec.with_cell(CellSpec("server", arch, "serve", ncols=1)) \
+               .with_channel(ChannelSpec("trainer", "server"))
+    plan = sup.apply(spec)
+    print(f"applied serving spec -> plan [{plan.summary()}]")
+    server = sup.cells["server"]
     server.init_serve()
-    ch = sup.open_channel("trainer", "server")
+    ch = sup.find_channel("trainer", "server")
     shardings = jax.tree.map(
         lambda s: jax.sharding.NamedSharding(server.mesh, s),
         server.model.params_pspecs())
@@ -60,11 +74,13 @@ def main():
     done = bat.run_until_drained()
     print(f"served request -> tokens {done[0].output}")
 
-    # -- accounting: exact, per-cell (nothing is shared)
+    # -- converged: reconcile again is a no-op
+    print(f"reconcile converged: {sup.reconcile().empty}")
     print(f"events: {[e['op'] for e in sup.events]}")
-    print(f"final epoch: {sup.table.epoch}")
-    sup.destroy_cell("server")
-    sup.destroy_cell("trainer")
+
+    # -- empty spec tears everything down
+    sup.apply(ClusterSpec())
+    print(f"final epoch: {sup.table.epoch}, cells: {list(sup.cells)}")
     print("done.")
 
 

@@ -1,15 +1,17 @@
-"""Disaggregated serving demo: prefill cell -> KV channel -> decode cell.
+"""Disaggregated serving demo: prefill cell -> KV channels -> 2 decode replicas.
 
-The paper's "isolate first, then share on demand" applied to inference:
-two serving subOSes own their zones outright; the only coupling is the
-on-demand channels the supervisor opens between them — one to sync the
-weights (decode -> prefill), one to stream per-request KV-cache rows
-(prefill -> decode).  Prompts run as single chunked-prefill program
-invocations on the prefill cell; the decode cell only ever runs decode
-steps, so its per-token latency never queues behind prompt processing.
+The paper's "isolate first, then share on demand" applied to inference,
+declared as desired state: a ClusterSpec names one prefill cell (2 cols),
+a decode cell with ``replicas=2`` (two uniform 1-col cells), and one
+``kv`` ChannelSpec that expands to a channel per replica.  One
+``Supervisor.apply`` materializes all of it; the DisaggServer then routes
+each request to the decode replica with the most free slots, same-bucket
+prompts sharing ONE batched prefill invocation.  Weights flow on demand:
+decode/0 initializes them, decode/1 and the prefill cell pull them over
+array channels.
 
 Run:  PYTHONPATH=src python examples/serve_disagg.py
-(uses 8 virtual host devices so the two cells sit on disjoint zones)
+(uses 8 virtual host devices so the cells sit on disjoint zones)
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -19,7 +21,7 @@ import jax
 
 from repro.configs.base import smoke_config
 from repro.configs.registry import get_arch
-from repro.core import DeviceGrid, Supervisor
+from repro.core import CellSpec, ChannelSpec, ClusterSpec, DeviceGrid, Supervisor
 from repro.serve.batcher import Request
 from repro.serve.disagg import DisaggServer
 
@@ -29,16 +31,22 @@ def main():
     sup = Supervisor(grid)
     arch = smoke_config(get_arch("qwen3-4b"))
 
-    # -- two isolated serving cells: prompts vs tokens
-    sup.create_cell("prefill", arch, "serve", ncols=2)
-    decode = sup.create_cell("decode", arch, "serve", ncols=1)
-    decode.init_serve(rng=jax.random.PRNGKey(0))
+    # -- desired state: prompts vs tokens, decode scaled out to 2 replicas
+    spec = ClusterSpec(
+        cells=(CellSpec("prefill", arch, "serve", ncols=2),
+               CellSpec("decode", arch, "serve", ncols=1, replicas=2)),
+        channels=(ChannelSpec("prefill", "decode", kind="kv"),),
+    )
+    plan = sup.apply(spec)
+    print(f"applied spec -> plan [{plan.summary()}], epoch={sup.table.epoch}")
+    decode_names = spec.cell("decode").instances()
     print(f"cells up: prefill={sup.cells['prefill'].zone.ncols} cols, "
-          f"decode={decode.zone.ncols} cols, epoch={sup.table.epoch}")
+          f"decode replicas={decode_names}")
+    sup.cells[decode_names[0]].init_serve(rng=jax.random.PRNGKey(0))
 
-    # -- share on demand: weight sync + KV handoff channels
-    srv = DisaggServer(sup, "prefill", "decode",
-                       batch_slots=4, max_len=64, chunk=16)
+    # -- share on demand: weight fan-out + per-replica KV handoff channels
+    srv = DisaggServer(sup, "prefill", decode_names,
+                       batch_slots=2, max_len=64, chunk=16)
     print(f"channels: {[(c.kind, c.src.name, '->', c.dst.name) for c in sup.channels]}")
 
     # -- serve a burst of long-prompt requests
@@ -51,16 +59,21 @@ def main():
         print(f"  req {r.rid}: prompt={len(r.prompt)} toks "
               f"ttft={r.ttft * 1e3:.1f}ms tpot={r.tpot * 1e3:.1f}ms -> {r.output}")
 
-    # -- the handoff in numbers: invocations, channel traffic, exact accounting
+    # -- the handoff in numbers: invocations, routing, channel traffic
     st = srv.stats()
-    print(f"prefill invocations: {st['prefill_invocations']} (1 per prompt; "
-          f"token-at-a-time would need {sum(len(r.prompt) for r in done)})")
-    print(f"decode invocations:  {st['decode_invocations']}")
-    print(f"kv channel: {st['kv_bytes'] / 1e6:.2f} MB over {st['kv_transfers']} "
+    print(f"prefill invocations: {st['prefill_invocations']} (same-bucket "
+          f"prompts batched; token-at-a-time would need "
+          f"{sum(len(r.prompt) for r in done)})")
+    print(f"decode invocations:  {st['decode_invocations']} across "
+          f"{st['replicas']} replicas (requests per replica: "
+          f"{st['per_replica_requests']})")
+    print(f"kv channels: {st['kv_bytes'] / 1e6:.2f} MB over {st['kv_transfers']} "
           f"transfers in {st['kv_seconds'] * 1e3:.1f} ms")
-    print(f"decode-cell serving summary: {st['decode_serving']}")
-    sup.destroy_cell("prefill")
-    sup.destroy_cell("decode")
+    print(f"serving summary: {st['decode_serving']}")
+
+    # -- empty spec tears everything down
+    sup.apply(ClusterSpec())
+    print(f"cells after teardown: {list(sup.cells)}")
     print("done.")
 
 

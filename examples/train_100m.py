@@ -9,16 +9,14 @@ entropy floor.
 Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
 """
 import argparse
-import os
 import shutil
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import single_device_grid, DeviceGrid, Supervisor
+from repro.core import single_device_grid, Supervisor
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import abstract_train_state, train_state_pspecs

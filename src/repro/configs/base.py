@@ -8,7 +8,7 @@ as cache keys for compiled programs inside a Cell.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -1,4 +1,4 @@
-"""IFTS core: supervisor + cells (subOSes) + elastic partitions + channels."""
+"""IFTS core: supervisor + cells (subOSes) + declarative specs + channels."""
 from repro.core.partition import (  # noqa: F401
     DeviceGrid,
     PartitionError,
@@ -7,6 +7,14 @@ from repro.core.partition import (  # noqa: F401
     single_device_grid,
 )
 from repro.core.cell import Cell, CellError  # noqa: F401
+from repro.core.spec import (  # noqa: F401
+    CellSpec,
+    ChannelSpec,
+    ClusterSpec,
+    SLOTarget,
+    SpecError,
+)
+from repro.core.reconciler import Plan, PlanOp, Reconciler  # noqa: F401
 from repro.core.supervisor import Supervisor  # noqa: F401
 from repro.core.channels import (  # noqa: F401
     ArrayChannel,
@@ -14,7 +22,7 @@ from repro.core.channels import (  # noqa: F401
     ControlPlane,
     KVEnvelope,
 )
-from repro.core.elastic import ElasticPolicy, ThresholdScheduler  # noqa: F401
+from repro.core.elastic import ElasticPolicy, ReconcilePolicy  # noqa: F401
 from repro.core.guard import BoundaryGuard, BoundaryViolation  # noqa: F401
 from repro.core.accounting import CellAccounting, collective_bytes  # noqa: F401
 from repro.core.resharding import reshard_tree, tree_bytes  # noqa: F401

@@ -83,6 +83,20 @@ class RequestMetrics:
     new_tokens: int = 0
 
 
+def summarize_requests(requests) -> dict:
+    """p50/p99 TTFT/TPOT over any collection carrying .ttft/.tpot (the
+    per-cell request log, or a merged multi-replica one)."""
+    import numpy as np
+    ttfts = [r.ttft for r in requests if r.ttft is not None]
+    tpots = [r.tpot for r in requests if r.tpot is not None]
+    out = {"requests": len(requests)}
+    for key, xs in (("ttft", ttfts), ("tpot", tpots)):
+        if xs:
+            out[f"{key}_p50"] = float(np.percentile(xs, 50))
+            out[f"{key}_p99"] = float(np.percentile(xs, 99))
+    return out
+
+
 @dataclasses.dataclass
 class ProgramCost:
     name: str
@@ -131,15 +145,7 @@ class CellAccounting:
 
     def serving_summary(self) -> dict:
         """p50/p99 TTFT and TPOT over every request this cell served."""
-        import numpy as np
-        ttfts = [r.ttft for r in self.requests if r.ttft is not None]
-        tpots = [r.tpot for r in self.requests if r.tpot is not None]
-        out = {"requests": len(self.requests)}
-        for key, xs in (("ttft", ttfts), ("tpot", tpots)):
-            if xs:
-                out[f"{key}_p50"] = float(np.percentile(xs, 50))
-                out[f"{key}_p99"] = float(np.percentile(xs, 99))
-        return out
+        return summarize_requests(self.requests)
 
     def record_invocation(self, name: str, n: int = 1):
         if name in self.programs:

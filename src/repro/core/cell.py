@@ -3,13 +3,25 @@
 A cell *directly manages* its resources: it owns a mesh over its zone,
 compiles its own programs for that mesh, holds its train/serve state, and
 runs steps without any supervisor involvement on the step path.  The
-supervisor only creates/destroys/resizes it.
+supervisor only creates/destroys/resizes it — and applications do not
+call even those verbs directly: they declare a
+:class:`~repro.core.spec.CellSpec` (arch, role, ``[min,max]`` column
+bounds, replicas, SLO targets) inside a ClusterSpec, and the reconciler
+(``Supervisor.apply``/``reconcile``) drives the primitives that keep
+this cell converged to it.
 
 Paper §4.3 properties implemented here:
-  1. management facility      -> Supervisor.create/destroy/resize_cell
-  2. exact accounting         -> CellAccounting per compiled program
+  1. management facility      -> CellSpec desired state; the reconciler
+                                 executes create/destroy/resize_cell as
+                                 its plan-executor layer
+  2. exact accounting         -> CellAccounting per compiled program +
+                                 per-request TTFT/TPOT (what elastic
+                                 ReconcilePolicies read)
   3. IPC-like channels        -> ArrayChannel / ControlPlane endpoints
-  4. fork-like spawn          -> Cell.spawn_child (sub-zone carved from parent)
+                                 (declared via ChannelSpec or opened on
+                                 demand)
+  4. fork-like spawn          -> Supervisor.spawn_child (sub-zone carved
+                                 from the parent; lineage() walks it)
 """
 from __future__ import annotations
 
@@ -19,12 +31,12 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import numpy as np
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ArchConfig
 from repro.core.accounting import CellAccounting
 from repro.core.partition import DeviceGrid, Zone
 from repro.core.resharding import reshard_tree
-from repro.models.model import Model, build_model
-from repro.sharding.rules import ShardCtx, make_ctx
+from repro.models.model import build_model
+from repro.sharding.rules import make_ctx
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import (
     TrainState,

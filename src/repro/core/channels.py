@@ -20,7 +20,7 @@ import itertools
 import threading
 import time
 from collections import defaultdict, deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 

@@ -1,33 +1,55 @@
-"""Elastic (lt, ut) threshold scheduler — paper Fig 10/11.
+"""SLO-driven continuous elasticity — paper Fig 10/11, declaratively.
 
 The paper bounds a latency-critical workload's tail latency with two
-thresholds: if the p99 over the last window exceeds ``ut``, a CPU moves
+thresholds: if the tail over the last window exceeds ``ut``, a CPU moves
 from the batch OS instance to the serving instance; if it falls below
-``lt``, one moves back.  Here the unit is a mesh column and the move is
-``Supervisor.transfer_columns`` (live reshard on both cells).
+``lt``, one moves back.  Here the unit is a mesh column — but the policy
+never touches the transfer primitive.  :class:`ReconcilePolicy` pulls
+live per-request TTFT/TPOT samples out of the server cell's
+:class:`~repro.core.accounting.CellAccounting`, and when the tail
+crosses a threshold it rewrites the desired ``ncols`` of the server and
+donor :class:`~repro.core.spec.CellSpec`\\ s (within their
+``[min_ncols, max_ncols]`` bounds) and re-applies the spec; the
+reconciler turns the +1/-1 into a single column ``transfer`` with live
+resharding on both cells.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class ElasticPolicy:
-    lt: float                    # lower tail-latency threshold (seconds or ms)
+    """Threshold band + windowing for a :class:`ReconcilePolicy`.
+
+    Column bounds live on the :class:`~repro.core.spec.CellSpec`
+    (``min_ncols``/``max_ncols``), not here — the policy can only move
+    the desired state inside what the spec allows.
+    """
+
+    lt: float                    # lower tail-latency threshold (seconds)
     ut: float                    # upper threshold
     window: int = 50             # samples in the sliding window
     percentile: float = 99.0
     cooldown: float = 0.0        # min seconds between actions
-    min_server_cols: int = 1
-    min_donor_cols: int = 1
+    metric: str = "ttft"         # "ttft" | "tpot" (CellAccounting fields)
 
 
-class ThresholdScheduler:
+class ReconcilePolicy:
+    """Continuous elasticity: accounting -> spec ``ncols`` -> reconcile.
+
+    Reads new request samples from the server spec's cell(s) — all
+    replica instances feed one window — and on a threshold crossing
+    moves one desired column between ``server`` and ``donor`` specs,
+    then ``Supervisor.apply``s the updated spec.  Zero direct primitive
+    calls; the reconciler owns execution.
+    """
+
     def __init__(self, supervisor, server: str, donor: str, policy: ElasticPolicy):
         self.sup = supervisor
         self.server = server
@@ -36,8 +58,38 @@ class ThresholdScheduler:
         self.samples: Deque[float] = deque(maxlen=policy.window)
         self.last_action_ts = -1e9
         self.actions: List[dict] = []
+        self._cursors: Dict[str, int] = {}   # per-instance accounting cursor
+
+    # ------------------------------------------------------------------
+    def _server_instances(self) -> List[str]:
+        spec = getattr(self.sup, "desired", None)
+        if spec is not None and spec.has_cell(self.server):
+            return spec.cell(self.server).instances()
+        return [self.server]
+
+    def pull(self) -> int:
+        """Ingest new TTFT/TPOT samples from the server cells' accounting."""
+        n = 0
+        for inst in self._server_instances():
+            cell = self.sup.cells.get(inst)
+            if cell is None:
+                continue
+            reqs = cell.accounting.requests
+            # a recovered cell restarts with a fresh (shorter) log: read it
+            # from the beginning rather than skipping past its samples
+            start = self._cursors.get(inst, 0)
+            if len(reqs) < start:
+                start = 0
+            for r in reqs[start:]:
+                v = getattr(r, self.policy.metric, None)
+                if v is not None:
+                    self.samples.append(float(v))
+                    n += 1
+            self._cursors[inst] = len(reqs)
+        return n
 
     def observe(self, latency: float):
+        """Directly feed one sample (simulation / external metric path)."""
         self.samples.append(latency)
 
     def tail(self) -> Optional[float]:
@@ -45,22 +97,59 @@ class ThresholdScheduler:
             return None
         return float(np.percentile(np.asarray(self.samples), self.policy.percentile))
 
+    # ------------------------------------------------------------------
+    def _rescale(self, delta: int):
+        """Move ``delta`` desired columns per server replica, donor-funded.
+
+        Total columns are conserved: a server spec with R replicas takes
+        ``delta * R`` columns in aggregate, so the donor spec absorbs
+        exactly that many (scaled by its own replica count).  Returns the
+        executed plan, or None when either side is pinned at a bound or
+        the exchange cannot balance — desired state never changes unless
+        the whole swap fits."""
+        spec = self.sup.desired
+        if spec is None or not (spec.has_cell(self.server)
+                                and spec.has_cell(self.donor)):
+            return None                   # a later apply() dropped a cell
+        r_server = spec.cell(self.server).replicas
+        r_donor = spec.cell(self.donor).replicas
+        spec2, applied = spec.scale_by(self.server, delta)
+        if applied == 0:
+            return None
+        need = -applied * r_server        # aggregate columns the donor funds
+        if need % r_donor != 0:
+            return None
+        spec3, compensated = spec2.scale_by(self.donor, need // r_donor)
+        if compensated != need // r_donor:
+            return None
+        plan = self.sup.apply(spec3)
+        if plan.ops and all(op.status == "blocked" for op in plan.ops):
+            # nothing could move (e.g. no adjacent free columns): roll the
+            # desired state back so the miss is neither logged as an action
+            # nor arms the cooldown; observed state is unchanged
+            self.sup.desired = spec
+            return None
+        return plan
+
     def maybe_act(self, now: Optional[float] = None) -> Optional[dict]:
         now = time.monotonic() if now is None else now
+        self.pull()
         if now - self.last_action_ts < self.policy.cooldown:
             return None
         p = self.tail()
         if p is None:
             return None
-        server_cols = self.sup.cells[self.server].zone.ncols
-        donor_cols = self.sup.cells[self.donor].zone.ncols
         action = None
-        if p > self.policy.ut and donor_cols > self.policy.min_donor_cols:
-            stats = self.sup.transfer_columns(self.donor, self.server, 1)
-            action = {"kind": "grow_server", "p_tail": p, **stats}
-        elif p < self.policy.lt and server_cols > self.policy.min_server_cols:
-            stats = self.sup.transfer_columns(self.server, self.donor, 1)
-            action = {"kind": "shrink_server", "p_tail": p, **stats}
+        if p > self.policy.ut:
+            plan = self._rescale(+1)
+            if plan is not None:
+                action = {"kind": "grow_server", "p_tail": p,
+                          "plan": plan.summary()}
+        elif p < self.policy.lt:
+            plan = self._rescale(-1)
+            if plan is not None:
+                action = {"kind": "shrink_server", "p_tail": p,
+                          "plan": plan.summary()}
         if action:
             action["ts"] = now
             self.last_action_ts = now

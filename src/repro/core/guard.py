@@ -16,7 +16,7 @@ validation layer: it raises on violation rather than sandboxing XLA.
 """
 from __future__ import annotations
 
-from typing import Any, Iterable
+from typing import Iterable
 
 import jax
 
@@ -71,7 +71,6 @@ class BoundaryGuard:
 
     def validate_epoch(self, cell_name: str, bound_epoch: int):
         table = self._table()
-        zone_epochs = getattr(table, "_zone_epochs", None)
         # A cell's programs bind to the epoch at compile time.  Any table
         # mutation that touched this cell's zone bumps its bound epoch via
         # the supervisor; mismatch => stale program.

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, FrozenSet, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -122,7 +122,7 @@ class PartitionTable:
         )
 
     def release(self, name: str) -> "PartitionTable":
-        z = self.zone(name)
+        self.zone(name)                  # raises on unknown zone
         return self._bump(tuple(x for x in self.zones if x.name != name))
 
     def resize(self, name: str, new_ncols: int, *, shrink_side: str = "right"
@@ -198,6 +198,13 @@ class PartitionTable:
         )
         t.check_invariants()
         return t
+
+    def mark_restored(self, pod: int, col: int) -> "PartitionTable":
+        """Return a failed column to the allocatable pool (quarantine is
+        reversible: a repaired host rejoins; no-op when not failed)."""
+        if (pod, col) not in self.failed_columns:
+            return self
+        return self._bump(self.zones, failed=self.failed_columns - {(pod, col)})
 
 
 # ---------------------------------------------------------------------------

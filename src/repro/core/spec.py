@@ -1,0 +1,186 @@
+"""Declarative desired state: CellSpec / ClusterSpec.
+
+The paper's supervisor "can create, destroy, resize a subOS on-the-fly";
+the declarative layer turns those verbs into *state*: an application
+writes down the cells it wants (arch, role, column bounds, replicas, SLO
+targets) and the reconciler (``repro.core.reconciler``) continuously
+diffs that desired state against the observed cluster and executes the
+primitive ops that close the gap.  Nothing here touches devices — specs
+are plain immutable data, cheap to copy and diff.
+
+Conventions:
+
+* A :class:`CellSpec` with ``replicas == 1`` materializes as one cell
+  named ``spec.name``.  With ``replicas == N > 1`` it materializes as N
+  cells named ``"{name}/0" .. "{name}/N-1"`` — uniform instances that
+  share arch/role/bounds (the Nanvix-style "density from uniform
+  lifecycle" pattern); ``DisaggServer`` routes requests across them.
+* ``ncols`` is the *desired* column count; ``min_ncols``/``max_ncols``
+  bound what any policy may request and what a degraded cell may shrink
+  to.  Policies never call resize primitives — they rewrite ``ncols``
+  (see :class:`~repro.core.elastic.ReconcilePolicy`) and reconcile.
+* A :class:`ChannelSpec` between replicated specs expands to the cross
+  product of instances (one prefill cell fanning out to N decode cells
+  declares a single channel spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.train.optimizer import OptConfig
+
+
+class SpecError(Exception):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOTarget:
+    """Latency objectives a serving cell should hold (seconds).
+
+    ``ttft_p99``/``tpot_p99`` are upper bounds on the tail over the
+    policy window; a reconcile policy grows the cell while the tail is
+    above target and shrinks it when comfortably below (hysteresis is
+    the policy's, not the target's).
+    """
+
+    ttft_p99: Optional[float] = None
+    tpot_p99: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """Desired state of one (possibly replicated) cell."""
+
+    name: str
+    arch: Any                          # ArchConfig (opaque to the spec layer)
+    role: str                          # "train" | "serve"
+    ncols: int = 1
+    min_ncols: int = 1
+    max_ncols: Optional[int] = None
+    pods: Tuple[int, ...] = (0,)
+    replicas: int = 1
+    opt_cfg: Optional[OptConfig] = None
+    slo: Optional[SLOTarget] = None
+
+    def __post_init__(self):
+        if "/" in self.name:
+            raise SpecError(f"cell name {self.name!r} may not contain '/' "
+                            "(reserved for replica instances)")
+        if self.replicas < 1:
+            raise SpecError(f"{self.name}: replicas must be >= 1")
+        if self.min_ncols < 1:
+            raise SpecError(f"{self.name}: min_ncols must be >= 1")
+        if self.max_ncols is not None and self.max_ncols < self.min_ncols:
+            raise SpecError(f"{self.name}: max_ncols < min_ncols")
+        if not (self.min_ncols <= self.ncols
+                <= (self.max_ncols if self.max_ncols is not None else self.ncols)):
+            raise SpecError(
+                f"{self.name}: ncols={self.ncols} outside "
+                f"[{self.min_ncols}, {self.max_ncols}]"
+            )
+
+    # ------------------------------------------------------------------
+    def clamp(self, ncols: int) -> int:
+        hi = self.max_ncols if self.max_ncols is not None else ncols
+        return max(self.min_ncols, min(ncols, hi))
+
+    def with_ncols(self, ncols: int) -> "CellSpec":
+        return dataclasses.replace(self, ncols=self.clamp(ncols))
+
+    def instances(self) -> List[str]:
+        """Concrete cell names this spec materializes as."""
+        if self.replicas == 1:
+            return [self.name]
+        return [f"{self.name}/{i}" for i in range(self.replicas)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelSpec:
+    """Desired on-demand channel between two cell specs (by spec name)."""
+
+    src: str
+    dst: str
+    kind: str = "array"                # "array" | "kv"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """The whole desired world: named cell specs + channels between them.
+
+    ``Supervisor.apply(spec)`` adopts this as the desired state; every
+    ``reconcile()`` afterwards converges the cluster toward it.  Cells
+    not named here are destroyed by reconcile — the spec is total, not
+    additive.
+    """
+
+    cells: Tuple[CellSpec, ...] = ()
+    channels: Tuple[ChannelSpec, ...] = ()
+
+    def __post_init__(self):
+        names = [c.name for c in self.cells]
+        if len(names) != len(set(names)):
+            raise SpecError(f"duplicate cell specs: {names}")
+        for ch in self.channels:
+            for end in (ch.src, ch.dst):
+                if end not in names:
+                    raise SpecError(f"channel endpoint {end!r} names no cell spec")
+
+    # ---- queries ----------------------------------------------------------
+    def cell(self, name: str) -> CellSpec:
+        for c in self.cells:
+            if c.name == name:
+                return c
+        raise SpecError(f"no cell spec {name!r}")
+
+    def has_cell(self, name: str) -> bool:
+        return any(c.name == name for c in self.cells)
+
+    def instance_specs(self) -> Dict[str, CellSpec]:
+        """Expand replicas: concrete cell name -> its (shared) spec."""
+        out: Dict[str, CellSpec] = {}
+        for c in self.cells:
+            for inst in c.instances():
+                out[inst] = c
+        return out
+
+    def instance_channels(self) -> List[Tuple[str, str, str]]:
+        """Expand channels over replica instances: (src, dst, kind)."""
+        out = []
+        for ch in self.channels:
+            for s in self.cell(ch.src).instances():
+                for d in self.cell(ch.dst).instances():
+                    out.append((s, d, ch.kind))
+        return out
+
+    # ---- functional updates ----------------------------------------------
+    def with_cell(self, spec: CellSpec) -> "ClusterSpec":
+        """Add or replace the spec with the same name."""
+        rest = tuple(c for c in self.cells if c.name != spec.name)
+        return dataclasses.replace(self, cells=rest + (spec,))
+
+    def without_cell(self, name: str) -> "ClusterSpec":
+        cells = tuple(c for c in self.cells if c.name != name)
+        channels = tuple(ch for ch in self.channels
+                         if ch.src != name and ch.dst != name)
+        return dataclasses.replace(self, cells=cells, channels=channels)
+
+    def with_channel(self, channel: ChannelSpec) -> "ClusterSpec":
+        return dataclasses.replace(self, channels=self.channels + (channel,))
+
+    def scale(self, name: str, ncols: int) -> "ClusterSpec":
+        """Set a cell spec's desired ncols (clamped to its bounds)."""
+        return self.with_cell(self.cell(name).with_ncols(ncols))
+
+    def scale_by(self, name: str, delta: int) -> Tuple["ClusterSpec", int]:
+        """Adjust desired ncols by ``delta`` within bounds.
+
+        Returns ``(new_spec, applied_delta)`` — applied_delta is 0 when
+        the spec is already pinned at the relevant bound.
+        """
+        c = self.cell(name)
+        new = c.clamp(c.ncols + delta)
+        if new == c.ncols:
+            return self, 0
+        return self.with_cell(dataclasses.replace(c, ncols=new)), new - c.ncols

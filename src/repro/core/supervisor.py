@@ -1,22 +1,38 @@
 """Supervisor — discovers, monitors, and provisions; never on the step path.
 
-Owns the PartitionTable (epoch-versioned) and the cell registry; provides
-the paper's primitives: create / destroy / resize / transfer (preemption),
-fault detection via heartbeats, failed-column handling with
-checkpoint-restore recovery, and straggler mitigation by resizing away
-from slow columns.  Every operation is timestamped into an event log (the
-Table-4 elasticity measurements read from it).
+Owns the PartitionTable (epoch-versioned) and the cell registry.  Two API
+layers:
+
+* **Declarative control plane** (the one applications use):
+  :meth:`Supervisor.apply` adopts a :class:`~repro.core.spec.ClusterSpec`
+  as the desired state and :meth:`Supervisor.reconcile` continuously
+  converges the cluster toward it — diffing desired vs. observed (cells,
+  zones, health) and executing an ordered plan of primitive ops.  Elastic
+  policies (:class:`~repro.core.elastic.ReconcilePolicy`) never call
+  primitives; they rewrite the spec's desired ``ncols`` from live
+  TTFT/TPOT accounting and reconcile.
+* **Primitive plan-executor layer** (the paper's verbs): create /
+  destroy / resize / transfer (preemption), fault detection via
+  heartbeats, failed-column quarantine + checkpoint-restore recovery,
+  ``restore_column`` to lift a quarantine, and straggler mitigation by
+  resizing away from slow columns.  The reconciler is their only
+  in-tree caller outside benchmarks of the primitives themselves.
+
+Every operation is timestamped into an event log (the Table-4 elasticity
+measurements read from it).
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ArchConfig
 from repro.core.cell import Cell, CellError
 from repro.core.channels import ArrayChannel, ControlPlane
 from repro.core.guard import BoundaryGuard
-from repro.core.partition import DeviceGrid, PartitionError, PartitionTable, Zone
+from repro.core.partition import DeviceGrid, PartitionError, PartitionTable
+from repro.core.reconciler import Plan, Reconciler
+from repro.core.spec import ClusterSpec
 from repro.train.optimizer import OptConfig
 
 
@@ -31,6 +47,31 @@ class Supervisor:
         self.heartbeat_timeout = heartbeat_timeout
         self.events: List[dict] = []
         self.channels: List[ArrayChannel] = []
+        self.desired: Optional[ClusterSpec] = None
+
+    # ------------------------------------------------------------------
+    # declarative control plane
+    # ------------------------------------------------------------------
+    def apply(self, spec: ClusterSpec) -> Plan:
+        """Adopt ``spec`` as the desired state and reconcile toward it.
+
+        The spec is total: cells it does not name are destroyed.  Returns
+        the executed :class:`~repro.core.reconciler.Plan`.
+        """
+        self.desired = spec
+        self._log("apply", cells=[c.name for c in spec.cells])
+        return self.reconcile()
+
+    def reconcile(self) -> Plan:
+        """Converge observed state toward the last applied spec.
+
+        Safe to call in a loop: an empty plan means converged; degraded
+        cells keep a pending grow that lands once columns free up.
+        """
+        plan = Reconciler(self).reconcile(self.desired)
+        if not plan.empty:
+            self._log("reconcile", plan=plan.summary())
+        return plan
 
     # ------------------------------------------------------------------
     def _log(self, op: str, **kw):
@@ -67,7 +108,11 @@ class Supervisor:
         t0 = time.monotonic()
         cell = self.cells.pop(name)
         cell.destroy()
-        self.table = self.table.release(name)
+        for ch in self.channels:
+            if ch.open and (ch.src is cell or ch.dst is cell):
+                ch.close()
+        if self.table.has_zone(name):   # a failed cell's zone is already gone
+            self.table = self.table.release(name)
         self.control.unregister(name)
         self._log("destroy", cell=name, seconds=time.monotonic() - t0)
 
@@ -135,6 +180,19 @@ class Supervisor:
         self._log("fail_column", pod=pod, col=col, affected=affected)
         return affected
 
+    def restore_column(self, pod: int, col: int) -> bool:
+        """Lift the quarantine from ``fail_column``/``mitigate_straggler``.
+
+        Returns True when the column was quarantined.  The column is only
+        made allocatable again — run :meth:`reconcile` afterwards to grow
+        degraded cells back to their desired widths.
+        """
+        restored = (pod, col) in self.table.failed_columns
+        self.table = self.table.mark_restored(pod, col)
+        if restored:
+            self._log("restore_column", pod=pod, col=col)
+        return restored
+
     def recover_cell(self, name: str, *, ncols: Optional[int] = None,
                      ckpt_dir: Optional[str] = None) -> Cell:
         """Re-carve a zone for a failed cell and restore from checkpoint."""
@@ -142,6 +200,9 @@ class Supervisor:
         old = self.cells[name]
         arch, role, opt_cfg = old.arch, old.role, old.opt_cfg
         pods = old.zone.pods
+        for ch in self.channels:     # channels bound to the dead cell object
+            if ch.open and (ch.src is old or ch.dst is old):
+                ch.close()
         want = ncols if ncols is not None else old.zone.ncols
         if self.table.has_zone(name):
             self.table = self.table.release(name)
@@ -204,13 +265,37 @@ class Supervisor:
         self._log("open_channel", src=src, dst=dst, cid=ch.cid, kind=kind)
         return ch
 
+    def find_channel(self, src: str, dst: str, kind: str = "array"
+                     ) -> Optional[ArrayChannel]:
+        """First still-open channel matching (src, dst, kind), else None."""
+        for ch in self.channels:
+            if (ch.open and ch.kind == kind
+                    and ch.src.name == src and ch.dst.name == dst):
+                return ch
+        return None
+
     # ------------------------------------------------------------------
-    def validate_cell_programs(self, name: str):
-        """Run the BoundaryGuard over a cell's compiled programs."""
+    def lineage(self, name: str) -> List[str]:
+        """Fork ancestry of a cell: [name, parent, grandparent, ...]."""
+        out = [name]
         cell = self.cells[name]
-        for prog_name, prog in cell._programs.items():
-            # jitted callables cache compiled artifacts internally; guard
-            # checks are run at registration time in Cell; here we check
-            # epoch binding.
-            pass
+        while cell is not None and cell.parent is not None:
+            out.append(cell.parent)
+            cell = self.cells.get(cell.parent)
+        return out
+
+    def validate_cell_programs(self, name: str) -> int:
+        """Run the BoundaryGuard over a cell's compiled programs.
+
+        Jitted-but-not-yet-compiled entries carry no shardings and are
+        skipped; every compiled executable is checked for device
+        confinement + epoch freshness.  Returns the number validated.
+        """
+        cell = self.cells[name]
+        checked = 0
+        for prog in cell._programs.values():
+            if hasattr(prog, "input_shardings") or hasattr(prog, "output_shardings"):
+                self.guard.validate(cell, prog)
+                checked += 1
         self.guard.validate_epoch(name, cell.bound_epoch)
+        return checked

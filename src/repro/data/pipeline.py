@@ -14,7 +14,7 @@ round-robin to data shards by index, each host materializes only its rows
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,6 @@ class SyntheticPipeline:
         return float(h_rows.mean())
 
     def batches(self, start_step: int = 0) -> Iterator[Dict[str, jax.Array]]:
-        shape = self.shape
         step = start_step
         while True:
             yield self.get_batch(step)

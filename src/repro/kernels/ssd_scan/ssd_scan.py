@@ -22,7 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (TPU lowering registration)
 
 from repro.kernels._compat import tpu_compiler_params
 

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs.base import smoke_config, with_opt_level
 from repro.configs.registry import get_arch
-from repro.core import Supervisor, single_device_grid
+from repro.core import CellSpec, ClusterSpec, Supervisor, single_device_grid
 from repro.serve.batcher import Request
 
 
@@ -35,7 +35,8 @@ def main(argv=None):
     arch = with_opt_level(arch, True)
 
     sup = Supervisor(single_device_grid())
-    cell = sup.create_cell(arch.name, arch, "serve", ncols=1)
+    sup.apply(ClusterSpec(cells=(CellSpec(arch.name, arch, "serve", ncols=1),)))
+    cell = sup.cells[arch.name]
     cell.init_serve()
     bat = cell.make_batcher(batch_slots=args.slots, max_len=args.max_len,
                             temperature=args.temperature,

@@ -12,12 +12,10 @@ architecture uniformly:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import encdec as encdec_mod
@@ -39,7 +37,6 @@ from repro.models.param import (
     abstract_params,
     count_params,
     init_params,
-    is_pspec,
     tree_map_pspec,
 )
 from repro.sharding.rules import ShardCtx

@@ -56,9 +56,6 @@ def sharded_decode_attention(
     seq_axes = _seq_axes_of(kv_spec)
     if not seq_axes:
         raise ValueError("cache seq dim is not sharded; use the ref path")
-    batch_spec = ctx.pspec(("batch",), (B,))
-    b_axes = tuple(batch_spec[0]) if isinstance(batch_spec[0], tuple) else (
-        (batch_spec[0],) if batch_spec[0] else ())
     mesh_sizes = ctx.axis_sizes
     n_seq_shards = 1
     for a in seq_axes:

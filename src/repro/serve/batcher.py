@@ -9,9 +9,12 @@ serving cells and the tail-latency benchmarks.
 Prompt consumption is CHUNKED-PREFILL by default: an admitted request's
 whole prompt runs through one bucket-padded prefill program invocation that
 writes its KV rows straight into the slot (O(1) invocations per prompt),
-and the first output token is sampled from the same invocation.  Families
-whose serve state is not a pure KV cache (ssm / hybrid / encdec) or rolling
-SWA caches fall back to the token-at-a-time decode loop.
+and the first output token is sampled from the same invocation.  Requests
+admitted in the same scheduler tick whose prompts land in the SAME pad
+bucket share one (B, S_pad) prefill invocation — under bursty arrivals the
+prompt phase costs O(buckets) invocations per tick, not O(requests).
+Families whose serve state is not a pure KV cache (ssm / hybrid / encdec)
+or rolling SWA caches fall back to the token-at-a-time decode loop.
 
 Slots can also be filled from OUTSIDE via :meth:`install_prefilled` — the
 disaggregated serving path (``repro.serve.disagg``) prefills on a separate
@@ -22,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,8 +104,9 @@ class ContinuousBatcher:
         self._prefill = (
             jax.jit(build_prefill_step(model, temperature)) if self.chunked else None
         )
-        self._scratch_cache = None       # lazily-built 1-row prefill cache
+        self._scratch_caches: Dict[int, Any] = {}  # B -> B-row prefill cache
         self.prefill_invocations = 0
+        self.prefill_batch_sizes: List[int] = []   # prompts per invocation
         self.decode_invocations = 0
 
     # -- request management --------------------------------------------
@@ -125,40 +129,64 @@ class ContinuousBatcher:
             )
 
     # -- chunked prefill ------------------------------------------------
-    def _prefill_request(self, req: Request):
-        """One bucket-padded prefill invocation -> (first_token, KV rows)."""
-        from repro.serve.serve_step import run_prefill_prompt
-        if self._scratch_cache is None:
-            self._scratch_cache = self.model.init_cache(1, self.max_len)
-        tok, row_cache, self._rng = run_prefill_prompt(
-            self._prefill, self.params, self._scratch_cache, req.prompt,
+    def _scratch(self, batch: int):
+        """B-row prefill scratch cache, reused across invocations."""
+        if batch not in self._scratch_caches:
+            self._scratch_caches[batch] = self.model.init_cache(batch, self.max_len)
+        return self._scratch_caches[batch]
+
+    def _prefill_group(self, group):
+        """ONE prefill invocation over same-bucket (slot, request) pairs.
+
+        The batch dim is padded to the next power of two (dummy zero-length
+        rows, masked out and discarded) so compiled prefill variants stay
+        O(log slots) per bucket and scratch caches O(2B) rows total —
+        not one program + cache per distinct group size.
+        """
+        import numpy as np
+        from repro.models.cache_utils import slice_cache_slots
+        from repro.serve.serve_step import run_prefill_prompts
+        B = len(group)
+        b_pad = 1 << (B - 1).bit_length()
+        prompts = [req.prompt for _, req in group]
+        prompts += [np.zeros(0, np.int32)] * (b_pad - B)
+        toks, rows_cache, self._rng = run_prefill_prompts(
+            self._prefill, self.params, self._scratch(b_pad), prompts,
             chunk=self.prefill_chunk, max_len=self.max_len, rng=self._rng,
         )
+        if b_pad != B:
+            rows_cache = slice_cache_slots(rows_cache, self._cache_axes,
+                                           list(range(B)))
         self.prefill_invocations += 1
-        return tok, row_cache
+        self.prefill_batch_sizes.append(B)
+        self._install_rows([s for s, _ in group], [r for _, r in group],
+                           rows_cache, toks[:B])
 
-    def _install(self, slot: int, req: Request, row_cache, first_token: int):
-        """Write one request's prefilled KV rows + first token into a slot."""
+    def _install_rows(self, slots, reqs, rows_cache, first_tokens):
+        """Write prefilled KV rows + first tokens into free slots.
+
+        ``rows_cache`` has batch dim == len(slots); one scatter merges all
+        rows, then per-request bookkeeping runs on the host."""
         from repro.models.cache_utils import merge_cache_slots
         now = time.monotonic()
-        req.started_at = req.started_at or now
-        req.first_token_at = req.first_token_at or now
-        self.cache = merge_cache_slots(
-            self.cache, row_cache, self._cache_axes, [slot]
-        )
-        L = len(req.prompt)
-        self.pos[slot] = L
-        self.cur_tok[slot] = first_token
-        req.output.append(first_token)
-        finished = (
-            len(req.output) >= req.max_new_tokens
-            or (self.eos is not None and first_token == self.eos)
-            or L >= self.max_len - 1
-        )
-        if finished:
-            self._finish(req, now)
-        else:
-            self.slot_req[slot] = req
+        self.cache = merge_cache_slots(self.cache, rows_cache,
+                                       self._cache_axes, slots)
+        for slot, req, tok in zip(slots, reqs, first_tokens):
+            req.started_at = req.started_at or now
+            req.first_token_at = req.first_token_at or now
+            L = len(req.prompt)
+            self.pos[slot] = L
+            self.cur_tok[slot] = tok
+            req.output.append(tok)
+            finished = (
+                len(req.output) >= req.max_new_tokens
+                or (self.eos is not None and tok == self.eos)
+                or L >= self.max_len - 1
+            )
+            if finished:
+                self._finish(req, now, slot=slot)
+            else:
+                self.slot_req[slot] = req
 
     def install_prefilled(self, req: Request, row_cache, first_token: int) -> bool:
         """Adopt an EXTERNALLY prefilled request (disaggregated serving):
@@ -167,24 +195,33 @@ class ContinuousBatcher:
         free = self.free_slots()
         if not free:
             return False
-        self._install(free[0], req, row_cache, first_token)
+        self._install_rows([free[0]], [req], row_cache, [first_token])
         return True
 
     def _admit(self):
+        from repro.serve.serve_step import bucket_len
+        staged: List[tuple] = []        # chunked-eligible (slot, request)
         for slot in range(self.B):
-            if self.slot_req[slot] is None and self.queue:
-                req = self.queue.popleft()
-                req.started_at = time.monotonic()
-                if self.chunked and 0 < len(req.prompt) <= self.max_len - 1:
-                    tok, row_cache = self._prefill_request(req)
-                    self._install(slot, req, row_cache, tok)
-                    continue
-                # fallback: the prompt is consumed token-at-a-time through
-                # the decode path (shared cache keeps slot shapes uniform)
-                self.slot_req[slot] = req
-                self.pos[slot] = 0
-                self.cur_tok[slot] = int(req.prompt[0]) if len(req.prompt) else 0
-                req._prompt_cursor = 1  # type: ignore[attr-defined]
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            req.started_at = time.monotonic()
+            if self.chunked and 0 < len(req.prompt) <= self.max_len - 1:
+                staged.append((slot, req))
+                continue
+            # fallback: the prompt is consumed token-at-a-time through
+            # the decode path (shared cache keeps slot shapes uniform)
+            self.slot_req[slot] = req
+            self.pos[slot] = 0
+            self.cur_tok[slot] = int(req.prompt[0]) if len(req.prompt) else 0
+            req._prompt_cursor = 1  # type: ignore[attr-defined]
+        # same-bucket prompts admitted this tick share one invocation
+        groups: Dict[int, List[tuple]] = {}
+        for slot, req in staged:
+            b = bucket_len(len(req.prompt), self.prefill_chunk, self.max_len)
+            groups.setdefault(b, []).append((slot, req))
+        for _, group in sorted(groups.items()):
+            self._prefill_group(group)
 
     # -- one decode step over all busy slots -----------------------------
     def step(self) -> int:

@@ -1,48 +1,51 @@
-"""Disaggregated serving: a prefill cell feeding a decode cell's batcher.
+"""Disaggregated serving: a prefill cell feeding decode-cell replicas.
 
 The paper's "isolate first, then share on demand" applied to inference::
 
-    requests ->  [ prefill cell ]  --ArrayChannel(kind="kv")-->  [ decode cell ]
-                 whole prompts,        per-request KV rows          continuous
-                 1 invocation each     + first token (meta)         batching
+                                    +--kv channel-->  [ decode cell 0 ]
+    requests ->  [ prefill cell ]---+                    continuous
+                 whole prompts,     +--kv channel-->  [ decode cell 1 ]
+                 batched bucket        per-request KV    batching
+                 invocations           rows + meta
 
 Each cell is a subOS: it owns its zone/mesh outright and compiles its own
-programs.  The ONLY coupling is the on-demand KV channel opened through the
-supervisor — prefill never touches decode's devices except through
-``send_kv`` (device_put onto the decode mesh), mirroring RFcom's explicit
-resource-sharing surface.
+programs.  The ONLY coupling is the on-demand KV channels opened through
+the supervisor — prefill never touches a decode cell's devices except
+through ``send_kv`` (device_put onto that decode mesh), mirroring RFcom's
+explicit resource-sharing surface.
 
 Why disaggregate: prefill is compute-bound over whole prompts, decode is
 latency-bound per token.  Co-scheduling them on one cell head-of-line
 blocks decode steps behind prompt processing; isolating prefill keeps TPOT
-flat while TTFT scales with prefill-cell capacity — and the elastic
-``ThresholdScheduler`` can move columns between the two cells as the
-prompt/decode load mix shifts (see ``benchmarks/disagg_serving.py``).
+flat while TTFT scales with prefill-cell capacity.  Decode capacity scales
+out *declaratively*: a decode :class:`~repro.core.spec.CellSpec` with
+``replicas=N`` materializes N uniform decode cells and the server routes
+each request to the replica with the most free slots (per-request routing,
+round-robin on ties).  Same-bucket prompts waiting together are prefilled
+in ONE batched program invocation (see ``run_prefill_prompts``).
 
-Weight placement: both cells need the same parameters.  If the prefill
-cell has none, :class:`DisaggServer` syncs them from the decode cell over a
-second on-demand channel at construction time (share-on-demand for weights,
-too).
+Weight placement: every cell needs the same parameters.  Cells that have
+none sync them over on-demand array channels at construction time — decode
+replica 0 is the source of truth, further replicas and the prefill cell
+pull from it (share-on-demand for weights, too).
 
-Indicative numbers (``benchmarks/disagg_serving.py --smoke``, CPU host,
-prompts of 33-48 tokens): program invocations per prompt drop 39x (one
-bucket-padded prefill vs one decode call per prompt token), TTFT p50 drops
-~2.2x (3.38s -> 1.52s including compile), and the per-request KV handoff
-moves ~35 KB/request over the channel.  On accelerators the invocation
-count is the dominant TTFT term, so the reduction compounds.
+The elastic :class:`~repro.core.elastic.ReconcilePolicy` can rebalance
+columns between the prefill and decode specs from live TTFT/TPOT
+accounting (see ``benchmarks/disagg_serving.py``).
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 
 from repro.serve.batcher import ContinuousBatcher, Request
 from repro.serve.serve_step import (
     build_prefill_step,
-    run_prefill_prompt,
+    bucket_len,
+    run_prefill_prompts,
     supports_chunked_prefill,
 )
 
@@ -64,139 +67,258 @@ class PrefillWorker:
         self.max_len = max_len
         self.chunk = chunk
         self._step = jax.jit(build_prefill_step(self.model, temperature))
-        self._scratch_cache = None
+        self._scratch_caches: Dict[int, object] = {}
+        self._axes = None
         self._rng = jax.random.PRNGKey(0)
         self.invocations = 0
 
-    def prefill(self, req: Request):
-        """One program invocation -> (first_token, 1-row KV cache)."""
-        L = len(req.prompt)
-        if not 0 < L <= self.max_len - 1:
-            raise ValueError(f"prompt length {L} does not fit max_len={self.max_len}")
-        if self._scratch_cache is None:
-            self._scratch_cache = self.model.init_cache(1, self.max_len)
-        tok, row_cache, self._rng = run_prefill_prompt(
-            self._step, self.cell.serve_params, self._scratch_cache,
-            req.prompt, chunk=self.chunk, max_len=self.max_len, rng=self._rng,
-        )
-        self.invocations += 1
+    def _scratch(self, batch: int):
+        if batch not in self._scratch_caches:
+            self._scratch_caches[batch] = self.model.init_cache(batch, self.max_len)
+        return self._scratch_caches[batch]
+
+    def prefill_many(self, reqs: Sequence[Request]):
+        """Prefill a batch of requests, ONE invocation per pad bucket.
+
+        Batch dims are padded to the next power of two (dummy rows masked
+        and discarded) so compiled variants stay O(log capacity) per
+        bucket.  Returns ``[(req, first_token, 1-row cache), ...]`` in
+        input order.
+        """
+        import numpy as np
+        from repro.models.cache_utils import cache_batch_axes, slice_cache_slots
+        if self._axes is None:
+            self._axes = cache_batch_axes(self.model, 1, self.max_len)
+        groups: Dict[int, List[Request]] = {}
+        for req in reqs:
+            L = len(req.prompt)
+            if not 0 < L <= self.max_len - 1:
+                raise ValueError(
+                    f"prompt length {L} does not fit max_len={self.max_len}")
+            groups.setdefault(bucket_len(L, self.chunk, self.max_len), []
+                              ).append(req)
+        out = {}
+        for _, group in sorted(groups.items()):
+            b_pad = 1 << (len(group) - 1).bit_length()
+            prompts = [r.prompt for r in group]
+            prompts += [np.zeros(0, np.int32)] * (b_pad - len(group))
+            toks, cache, self._rng = run_prefill_prompts(
+                self._step, self.cell.serve_params, self._scratch(b_pad),
+                prompts, chunk=self.chunk, max_len=self.max_len, rng=self._rng,
+            )
+            self.invocations += 1
+            for i, (req, tok) in enumerate(zip(group, toks)):
+                out[req.rid] = (req, tok,
+                                slice_cache_slots(cache, self._axes, [i]))
         self.cell.heartbeat()
+        return [out[r.rid] for r in reqs]
+
+    def prefill(self, req: Request):
+        """One request -> (first_token, 1-row KV cache)."""
+        (_, tok, row_cache), = self.prefill_many([req])
         return tok, row_cache
 
 
-class DisaggServer:
-    """Prefill cell -> KV channel -> decode cell, behind one submit() front.
+class _DecodeReplica:
+    """One decode cell's serving surface: batcher + KV channel + shardings."""
 
-    The decode cell's batcher runs with ``prefill_chunk=None`` — it NEVER
-    prefills; every request's KV rows arrive over the channel.  TTFT is the
-    prefill invocation + one channel transfer; TPOT is pure decode.
+    def __init__(self, cell, channel, batcher, kv_shardings):
+        self.cell = cell
+        self.channel = channel
+        self.batcher = batcher
+        self.kv_shardings = kv_shardings
+        self.inflight: Dict[int, Request] = {}   # rid -> sent, not installed
+
+    def free_capacity(self) -> int:
+        return len(self.batcher.free_slots()) - len(self.inflight)
+
+
+class DisaggServer:
+    """Prefill cell -> KV channels -> decode replica(s), one submit() front.
+
+    ``decode_cells`` is a cell name or a list of replica cell names (e.g.
+    ``spec.cell("decode").instances()``).  Each replica's batcher runs
+    with ``prefill_chunk=None`` — it NEVER prefills; every request's KV
+    rows arrive over its channel.  TTFT is the (possibly batched) prefill
+    invocation + one channel transfer; TPOT is pure decode.
     """
 
-    def __init__(self, supervisor, prefill_cell: str, decode_cell: str, *,
+    def __init__(self, supervisor, prefill_cell: str,
+                 decode_cells: Union[str, Sequence[str]], *,
                  batch_slots: int, max_len: int, chunk: int = 32,
                  temperature: float = 0.0, eos_token: Optional[int] = None):
+        if isinstance(decode_cells, str):
+            decode_cells = [decode_cells]
+        if not decode_cells:
+            raise ValueError("need at least one decode cell")
         self.sup = supervisor
         self.prefill_cell = supervisor.cells[prefill_cell]
-        self.decode_cell = supervisor.cells[decode_cell]
         self.max_len = max_len
-        if self.decode_cell.serve_params is None:
-            self.decode_cell.init_serve()
+
+        primary = supervisor.cells[decode_cells[0]]
+        if primary.serve_params is None:
+            primary.init_serve()
+        # share-on-demand weight sync: primary decode -> later replicas,
+        # primary decode -> prefill (each over its own array channel)
+        sync_to = [n for n in decode_cells[1:]
+                   if supervisor.cells[n].serve_params is None]
         if self.prefill_cell.serve_params is None:
-            # share-on-demand weight sync: decode -> prefill
-            wch = supervisor.open_channel(decode_cell, prefill_cell, kind="array")
+            sync_to.append(prefill_cell)
+        for name in sync_to:
+            dst = supervisor.cells[name]
+            wch = (supervisor.find_channel(decode_cells[0], name, "array")
+                   or supervisor.open_channel(decode_cells[0], name, kind="array"))
             shardings = jax.tree.map(
-                lambda s: jax.sharding.NamedSharding(self.prefill_cell.mesh, s),
-                self.prefill_cell.model.params_pspecs(),
+                lambda s: jax.sharding.NamedSharding(dst.mesh, s),
+                dst.model.params_pspecs(),
             )
-            wch.send(self.decode_cell.serve_params, shardings)
-            self.prefill_cell.serve_params = wch.recv()
-            wch.close()
+            wch.send(primary.serve_params, shardings)
+            dst.serve_params = wch.recv()
+
         self.worker = PrefillWorker(
             self.prefill_cell, max_len=max_len, chunk=chunk,
             temperature=temperature,
         )
-        self.channel = supervisor.open_channel(prefill_cell, decode_cell, kind="kv")
-        self.batcher: ContinuousBatcher = self.decode_cell.make_batcher(
-            batch_slots=batch_slots, max_len=max_len, temperature=temperature,
-            eos_token=eos_token, prefill_chunk=None,
-        )
-        # per-request target shardings on the decode mesh (1-row cache)
-        self._kv_shardings = jax.tree.map(
-            lambda s: jax.sharding.NamedSharding(self.decode_cell.mesh, s),
-            self.decode_cell.model.cache_pspecs(1, max_len),
-        )
+        self.replicas: List[_DecodeReplica] = []
+        for name in decode_cells:
+            cell = supervisor.cells[name]
+            ch = (supervisor.find_channel(prefill_cell, name, "kv")
+                  or supervisor.open_channel(prefill_cell, name, kind="kv"))
+            batcher = cell.make_batcher(
+                batch_slots=batch_slots, max_len=max_len,
+                temperature=temperature, eos_token=eos_token,
+                prefill_chunk=None,
+            )
+            kv_shardings = jax.tree.map(
+                lambda s, m=cell.mesh: jax.sharding.NamedSharding(m, s),
+                cell.model.cache_pspecs(1, max_len),
+            )
+            self.replicas.append(_DecodeReplica(cell, ch, batcher, kv_shardings))
         self.pending: deque = deque()
-        self._inflight = {}           # rid -> Request (sent, not yet installed)
+        self.rejected: List[Request] = []   # unservable, never routed
+        self._rr = 0                    # round-robin cursor for routing ties
+
+    # -- legacy single-replica surface ---------------------------------
+    @property
+    def decode_cell(self):
+        return self.replicas[0].cell
+
+    @property
+    def batcher(self) -> ContinuousBatcher:
+        return self.replicas[0].batcher
+
+    @property
+    def channel(self):
+        return self.replicas[0].channel
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         req.submitted_at = req.submitted_at or time.monotonic()
         self.pending.append(req)
 
-    def _free_capacity(self) -> int:
-        return len(self.batcher.free_slots()) - len(self._inflight)
+    def _route(self, capacity: Dict[int, int]) -> Optional[int]:
+        """Pick the replica with the most free capacity (per-request
+        routing); round-robin breaks ties so uniform load spreads."""
+        best, best_cap = None, 0
+        n = len(self.replicas)
+        for off in range(n):
+            i = (self._rr + off) % n
+            if capacity[i] > best_cap:
+                best, best_cap = i, capacity[i]
+        if best is not None:
+            self._rr = (best + 1) % n
+        return best
 
     def pump(self) -> int:
-        """Prefill waiting requests (up to the decode cell's free capacity),
-        stream their KV over the channel, and install arrivals into free
+        """Prefill waiting requests (up to the replicas' free capacity,
+        batching same-bucket prompts into one invocation), stream their KV
+        over the per-replica channels, and install arrivals into free
         slots.  Returns the number of requests installed.
 
         Unservable prompts (empty, or longer than the decode cache) are
         finished immediately with empty output rather than poisoning the
         loop — one bad request must not stall every other request."""
-        n = self._free_capacity()
-        while self.pending and n > 0:
+        capacity = {i: r.free_capacity() for i, r in enumerate(self.replicas)}
+        budget = sum(c for c in capacity.values() if c > 0)
+        taking: List[Request] = []
+        while self.pending and len(taking) < budget:
             req = self.pending.popleft()
             req.started_at = req.started_at or time.monotonic()
             if not 0 < len(req.prompt) <= self.max_len - 1:
-                self.batcher._finish(req, time.monotonic())
+                # never reached a replica: finish with empty output here so
+                # per-replica stats/accounting only count routed traffic
+                req.finished_at = time.monotonic()
+                self.rejected.append(req)
                 continue
-            tok, row_cache = self.worker.prefill(req)
-            self.channel.send_kv(
-                row_cache, self._kv_shardings,
-                meta={"rid": req.rid, "first_token": tok,
-                      "prompt_len": len(req.prompt)},
-            )
-            self._inflight[req.rid] = req
-            n -= 1
+            taking.append(req)
+        if taking:
+            for req, tok, row_cache in self.worker.prefill_many(taking):
+                i = self._route(capacity)
+                assert i is not None, "capacity budget guarantees a replica"
+                capacity[i] -= 1
+                rep = self.replicas[i]
+                rep.channel.send_kv(
+                    row_cache, rep.kv_shardings,
+                    meta={"rid": req.rid, "first_token": tok,
+                          "prompt_len": len(req.prompt)},
+                )
+                rep.inflight[req.rid] = req
         installed = 0
-        while True:
-            env = self.channel.poll_kv()
-            if env is None:
-                break
-            req = self._inflight.pop(env.meta["rid"])
-            ok = self.batcher.install_prefilled(
-                req, env.cache, env.meta["first_token"]
-            )
-            assert ok, "pump() never sends more KV than there are free slots"
-            installed += 1
+        for rep in self.replicas:
+            while True:
+                env = rep.channel.poll_kv()
+                if env is None:
+                    break
+                req = rep.inflight.pop(env.meta["rid"])
+                ok = rep.batcher.install_prefilled(
+                    req, env.cache, env.meta["first_token"]
+                )
+                assert ok, "pump() never sends more KV than there are free slots"
+                installed += 1
         return installed
 
     def step(self) -> int:
-        """One scheduler tick: pump the handoff, then one decode step."""
+        """One scheduler tick: pump the handoff, then one decode step on
+        every replica with busy slots."""
         self.pump()
-        n = self.batcher.step()
-        self.decode_cell.heartbeat()
+        n = 0
+        for rep in self.replicas:
+            n += rep.batcher.step()
+            rep.cell.heartbeat()
         return n
+
+    def _busy(self) -> bool:
+        return bool(
+            self.pending
+            or any(rep.inflight for rep in self.replicas)
+            or any(r is not None for rep in self.replicas
+                   for r in rep.batcher.slot_req)
+        )
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0
-        while (self.pending or self._inflight
-               or any(r is not None for r in self.batcher.slot_req)) and steps < max_steps:
+        while self._busy() and steps < max_steps:
             self.step()
             steps += 1
-        return self.batcher.done
+        return self.done
 
     @property
     def done(self) -> List[Request]:
-        return self.batcher.done
+        out: List[Request] = list(self.rejected)
+        for rep in self.replicas:
+            out.extend(rep.batcher.done)
+        return out
 
     def stats(self) -> dict:
+        from repro.core.accounting import summarize_requests
         return {
+            "decode_serving": summarize_requests(self.done),
             "prefill_invocations": self.worker.invocations,
-            "decode_invocations": self.batcher.decode_invocations,
-            "kv_bytes": self.channel.bytes_sent,
-            "kv_transfers": self.channel.transfers,
-            "kv_seconds": self.channel.seconds,
-            "decode_serving": self.decode_cell.accounting.serving_summary(),
+            "decode_invocations": sum(r.batcher.decode_invocations
+                                      for r in self.replicas),
+            "kv_bytes": sum(r.channel.bytes_sent for r in self.replicas),
+            "kv_transfers": sum(r.channel.transfers for r in self.replicas),
+            "kv_seconds": sum(r.channel.seconds for r in self.replicas),
+            "replicas": len(self.replicas),
+            "per_replica_requests": [len(r.batcher.done) for r in self.replicas],
         }

@@ -15,7 +15,7 @@ bounded by ``max_len / chunk`` rather than one per prompt length.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -67,25 +67,43 @@ def build_prefill_step(model: Model, temperature: float = 0.0) -> Callable:
     return prefill_step
 
 
-def run_prefill_prompt(step_fn: Callable, params, scratch_cache, prompt,
-                       *, chunk: int, max_len: int, rng):
-    """Bucket-pad one prompt and run a jitted ``prefill_step`` over it.
+def run_prefill_prompts(step_fn: Callable, params, scratch_cache, prompts,
+                        *, chunk: int, max_len: int, rng):
+    """Bucket-pad B same-bucket prompts and run ONE jitted ``prefill_step``.
 
-    Shared by the colocated batcher and the disaggregated PrefillWorker so
-    the pad/invoke/first-token sequence exists exactly once.  Returns
-    (first_token, 1-row KV cache, advanced rng).
+    All prompts must share a bucket (``bucket_len`` of each equals the
+    bucket of the longest) so a batch compiles to one (B, S_pad) program;
+    ``scratch_cache`` is a B-row cache reused across invocations.  Rows
+    are independent under prefill attention, so the batched invocation is
+    bit-equivalent to B single-row invocations.  Returns
+    (first_tokens list, B-row KV cache, advanced rng).
     """
-    L = len(prompt)
-    s_pad = bucket_len(L, chunk, max_len)
-    tokens = np.zeros((1, s_pad), np.int32)
-    tokens[0, :L] = prompt
+    B = len(prompts)
+    s_pad = bucket_len(max(len(p) for p in prompts), chunk, max_len)
+    tokens = np.zeros((B, s_pad), np.int32)
+    lengths = np.zeros((B,), np.int32)
+    for i, p in enumerate(prompts):
+        tokens[i, :len(p)] = p
+        lengths[i] = len(p)
     batch = {
         "tokens": jnp.asarray(tokens),
-        "length": jnp.asarray([L], jnp.int32),
+        "length": jnp.asarray(lengths),
     }
     rng, sub = jax.random.split(rng)
-    toks, _logits, row_cache = step_fn(params, scratch_cache, batch, sub)
-    return int(np.asarray(toks)[0]), row_cache, rng
+    toks, _logits, cache = step_fn(params, scratch_cache, batch, sub)
+    return [int(t) for t in np.asarray(toks)], cache, rng
+
+
+def run_prefill_prompt(step_fn: Callable, params, scratch_cache, prompt,
+                       *, chunk: int, max_len: int, rng):
+    """Single-prompt wrapper over :func:`run_prefill_prompts`.
+
+    Returns (first_token, 1-row KV cache, advanced rng)."""
+    toks, row_cache, rng = run_prefill_prompts(
+        step_fn, params, scratch_cache, [prompt],
+        chunk=chunk, max_len=max_len, rng=rng,
+    )
+    return toks[0], row_cache, rng
 
 
 def build_serve_step(model: Model, temperature: float = 0.0) -> Callable:

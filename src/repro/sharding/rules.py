@@ -26,7 +26,7 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.param import is_pspec, tree_map_pspec
+from repro.models.param import tree_map_pspec
 
 
 Axes = Tuple[str, ...]

@@ -12,7 +12,7 @@ numerically identical to compressing before a linear psum.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

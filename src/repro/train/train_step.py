@@ -7,7 +7,6 @@ between accumulation and the optimizer.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,15 +1,15 @@
 """IFTS core units: control plane, guard, elastic policy, accounting."""
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from benchmarks.simlib import SimCell, SimSupervisor
 from repro.core.accounting import CellAccounting, collective_bytes
 from repro.core.channels import ChannelError, ControlPlane
-from repro.core.elastic import ElasticPolicy, ThresholdScheduler
+from repro.core.elastic import ElasticPolicy, ReconcilePolicy
 from repro.core.guard import BoundaryGuard, BoundaryViolation
+from repro.core.spec import CellSpec, ClusterSpec
 
 
 # ---------------------------------------------------------------------------
@@ -120,35 +120,36 @@ def test_guard_rejects_stale_epoch():
 
 
 # ---------------------------------------------------------------------------
-# elastic threshold policy
+# elastic reconcile policy (spec-driven, fed by CellAccounting)
 # ---------------------------------------------------------------------------
-class _MockSup:
-    def __init__(self):
-        self.cells = {
-            "srv": type("C", (), {"zone": type("Z", (), {"ncols": 2})()})(),
-            "don": type("C", (), {"zone": type("Z", (), {"ncols": 4})()})(),
-        }
-        self.calls = []
-
-    def transfer_columns(self, src, dst, n=1):
-        self.calls.append((src, dst, n))
-        self.cells[src].zone.ncols -= n
-        self.cells[dst].zone.ncols += n
-        return {}
+def _mock_sup():
+    return SimSupervisor(SimCell("srv", 2, "serve"),
+                         SimCell("don", 4, "train"))
 
 
-def test_threshold_scheduler_grow_shrink_cooldown():
-    sup = _MockSup()
-    sched = ThresholdScheduler(
+def _mock_spec():
+    return ClusterSpec(cells=(
+        CellSpec("srv", None, "serve", ncols=2, min_ncols=1, max_ncols=6),
+        CellSpec("don", None, "train", ncols=4, min_ncols=1, max_ncols=6),
+    ))
+
+
+def test_reconcile_policy_grow_shrink_cooldown():
+    sup = _mock_sup()
+    assert sup.apply(_mock_spec()).empty          # observed matches desired
+    sched = ReconcilePolicy(
         sup, "srv", "don",
-        ElasticPolicy(lt=0.1, ut=0.2, window=10, cooldown=100.0,
-                      min_server_cols=1, min_donor_cols=1),
+        ElasticPolicy(lt=0.1, ut=0.2, window=10, cooldown=100.0),
     )
     for _ in range(10):
         sched.observe(0.5)                       # way above ut
     act = sched.maybe_act(now=0.0)
     assert act and act["kind"] == "grow_server"
-    assert sup.calls == [("don", "srv", 1)]
+    # the policy rewrote the spec; the reconciler executed one transfer
+    assert sup.desired.cell("srv").ncols == 3
+    assert sup.desired.cell("don").ncols == 3
+    assert sup.log == [("transfer", "don", "srv", 1)]
+    assert sup.cells["srv"].zone.ncols == 3
 
     for _ in range(10):
         sched.observe(0.5)
@@ -158,9 +159,75 @@ def test_threshold_scheduler_grow_shrink_cooldown():
         sched.observe(0.01)                      # below lt
     act = sched.maybe_act(now=200.0)
     assert act and act["kind"] == "shrink_server"
+    assert sup.cells["srv"].zone.ncols == 2
 
-    # respect min_server_cols
-    sup.cells["srv"].zone.ncols = 1
+    # respect the spec's min_ncols: pin srv at 1 and try to shrink below
+    sup.apply(sup.desired.scale("srv", 1).scale("don", 5))
     for _ in range(10):
         sched.observe(0.01)
     assert sched.maybe_act(now=400.0) is None
+    assert sup.cells["srv"].zone.ncols == 1
+
+
+def test_reconcile_policy_conserves_columns_with_replicas():
+    """Regression: growing a replicated server by 1 col/replica must take
+    exactly replicas * 1 columns from the donor — or do nothing at all."""
+    sup = SimSupervisor(SimCell("dec/0", 1, "serve"),
+                        SimCell("dec/1", 1, "serve"),
+                        SimCell("don", 4, "train"))
+    spec = ClusterSpec(cells=(
+        CellSpec("dec", None, "serve", ncols=1, min_ncols=1, max_ncols=3,
+                 replicas=2),
+        CellSpec("don", None, "train", ncols=4, min_ncols=1, max_ncols=6),
+    ))
+    assert sup.apply(spec).empty
+    sched = ReconcilePolicy(
+        sup, "dec", "don",
+        ElasticPolicy(lt=0.1, ut=0.2, window=10, cooldown=0.0),
+    )
+    for _ in range(10):
+        sched.observe(0.5)
+    act = sched.maybe_act(now=0.0)
+    assert act and act["kind"] == "grow_server"
+    # 2 replicas x +1 col, donor funded both: 1+1+4 == 2+2+2
+    assert sup.desired.cell("dec").ncols == 2
+    assert sup.desired.cell("don").ncols == 2
+    assert [c.zone.ncols for c in sup.cells.values()] == [2, 2, 2]
+    assert sup.reconcile().empty
+
+    # donor too small to fund a whole replica set: no action, spec untouched
+    for _ in range(10):
+        sched.observe(0.5)
+    before = sup.desired
+    assert sched.maybe_act(now=10.0) is None     # don at 2, min 1: can give 1 < 2
+    assert sup.desired is before
+
+
+def test_reconcile_policy_pulls_live_accounting():
+    """The policy reads TTFT samples straight out of CellAccounting —
+    no manual observe() feed."""
+    sup = _mock_sup()
+    sup.apply(_mock_spec())
+    sched = ReconcilePolicy(
+        sup, "srv", "don",
+        ElasticPolicy(lt=0.1, ut=0.2, window=10, cooldown=0.0, metric="ttft"),
+    )
+    acc = sup.cells["srv"].accounting
+    for rid in range(10):
+        acc.record_request(rid, ttft=0.5, tpot=0.01)
+    act = sched.maybe_act(now=0.0)
+    assert act and act["kind"] == "grow_server"
+    # samples were consumed exactly once (cursor advanced)
+    assert sched.pull() == 0
+    # a recovered cell restarts with a fresh, shorter log: its samples
+    # must be read from the beginning, not skipped past the stale cursor
+    sup.cells["srv"].accounting = CellAccounting("srv")
+    sup.cells["srv"].accounting.record_request(0, ttft=0.7)
+    assert sched.pull() == 1
+    # tpot metric path reads the other field
+    sched2 = ReconcilePolicy(
+        sup, "srv", "don",
+        ElasticPolicy(lt=0.1, ut=0.2, window=10, cooldown=0.0, metric="tpot"),
+    )
+    sched2.pull()
+    assert all(v == 0.01 for v in sched2.samples)

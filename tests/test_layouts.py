@@ -1,13 +1,12 @@
 """Layout switches: zero3, sharded decode, serve-fsdp, opt levels."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import smoke_config, with_opt_level
 from repro.configs.registry import ARCHS, get_arch
 from repro.models.model import build_model
-from repro.sharding.rules import ShardCtx, make_ctx, single_device_ctx
+from repro.sharding.rules import ShardCtx, single_device_ctx
 
 
 def test_opt_level_roundtrip():

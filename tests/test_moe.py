@@ -1,7 +1,6 @@
 """MoE block numerics vs a dense (no-capacity) reference."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import ArchConfig, MoEConfig

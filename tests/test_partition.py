@@ -6,7 +6,7 @@ pytest.importorskip("hypothesis")  # keep collection alive without the dep
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from repro.core.partition import PartitionError, PartitionTable, Zone
+from repro.core.partition import PartitionError, PartitionTable
 
 
 GRID = (2, 16, 16)
@@ -87,6 +87,22 @@ def test_mark_failed_evicts():
         t3 = t2
         for i in range(16):      # can only fit 15 single columns now
             t3, _ = t3.carve(f"z{i}", 1)
+
+
+def test_mark_restored_reopens_column():
+    t = fresh()
+    t, z = t.carve("a", 4)
+    t = t.mark_failed(0, z.c0)
+    assert (0, z.c0) in t.failed_columns
+    t2 = t.mark_restored(0, z.c0)
+    assert (0, z.c0) not in t2.failed_columns
+    assert t2.epoch == t.epoch + 1
+    # restored column is allocatable again: 16 single-column carves fit
+    t3 = t2
+    for i in range(16):
+        t3, _ = t3.carve(f"z{i}", 1)
+    # restoring a non-failed column is a no-op (same table, same epoch)
+    assert t2.mark_restored(0, z.c0) is t2
 
 
 def test_multipod_zone():

@@ -1,0 +1,328 @@
+"""Declarative control plane: ClusterSpec + reconciler.
+
+Planner-level tests run the real Reconciler against a bookkeeping-only
+supervisor (pure logic, no jax compiles); the end-to-end test drives a
+real Supervisor on 8 virtual host devices through apply/reconcile,
+column failure + degraded recovery + restore, and spawn_child lineage.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.simlib import SimCell, SimSupervisor
+from repro.core.spec import (
+    CellSpec,
+    ChannelSpec,
+    ClusterSpec,
+    SLOTarget,
+    SpecError,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# spec semantics
+# ---------------------------------------------------------------------------
+def test_cellspec_validation():
+    with pytest.raises(SpecError):
+        CellSpec("a/b", None, "serve")             # reserved separator
+    with pytest.raises(SpecError):
+        CellSpec("a", None, "serve", replicas=0)
+    with pytest.raises(SpecError):
+        CellSpec("a", None, "serve", ncols=5, max_ncols=3)
+    with pytest.raises(SpecError):
+        ClusterSpec(cells=(CellSpec("a", None, "serve"),
+                           CellSpec("a", None, "train")))
+    with pytest.raises(SpecError):
+        ClusterSpec(cells=(CellSpec("a", None, "serve"),),
+                    channels=(ChannelSpec("a", "ghost"),))
+
+
+def test_spec_instances_and_scaling():
+    c = CellSpec("dec", None, "serve", ncols=2, min_ncols=1, max_ncols=4,
+                 replicas=3, slo=SLOTarget(ttft_p99=0.1))
+    assert c.instances() == ["dec/0", "dec/1", "dec/2"]
+    spec = ClusterSpec(cells=(c, CellSpec("pre", None, "serve")),
+                       channels=(ChannelSpec("pre", "dec", kind="kv"),))
+    assert set(spec.instance_specs()) == {"dec/0", "dec/1", "dec/2", "pre"}
+    assert spec.instance_channels() == [
+        ("pre", "dec/0", "kv"), ("pre", "dec/1", "kv"), ("pre", "dec/2", "kv")]
+
+    s2, d = spec.scale_by("dec", 10)               # clamped at max_ncols
+    assert d == 2 and s2.cell("dec").ncols == 4
+    s3, d = s2.scale_by("dec", -10)
+    assert d == -3 and s3.cell("dec").ncols == 1   # clamped at min_ncols
+    _, d = s3.scale_by("dec", -1)
+    assert d == 0                                   # pinned
+    assert spec.scale("pre", 1) is not spec
+    assert spec.without_cell("dec").channels == ()
+
+
+# ---------------------------------------------------------------------------
+# planner on the shared bookkeeping supervisor (benchmarks/simlib.py)
+# ---------------------------------------------------------------------------
+def _sup(**cols):
+    return SimSupervisor(*(SimCell(n, c) for n, c in cols.items()))
+
+
+def test_reconcile_converges_and_is_idempotent():
+    sup = _sup()
+    spec = ClusterSpec(cells=(
+        CellSpec("a", None, "serve", ncols=2),
+        CellSpec("b", None, "train", ncols=3),
+    ))
+    plan = sup.apply(spec)
+    assert [op.verb for op in plan.ops] == ["create", "create"]
+    assert all(op.status == "ok" for op in plan.ops)
+    # second reconcile: nothing to do
+    assert sup.reconcile().empty
+    assert sup.reconcile().empty
+
+
+def test_reconcile_pairs_shrink_and_grow_into_transfer():
+    sup = _sup(a=4, b=2)
+    spec = ClusterSpec(cells=(
+        CellSpec("a", None, "serve", ncols=2, min_ncols=1, max_ncols=6),
+        CellSpec("b", None, "serve", ncols=4, min_ncols=1, max_ncols=6),
+    ))
+    plan = sup.apply(spec)
+    assert [op.verb for op in plan.ops] == ["transfer"]
+    assert sup.log == [("transfer", "a", "b", 2)]
+    assert sup.reconcile().empty
+
+
+def test_reconcile_destroys_unmanaged_and_orders_ops():
+    sup = _sup(old=2, keep=1)
+    spec = ClusterSpec(cells=(
+        CellSpec("keep", None, "serve", ncols=3, max_ncols=3),
+        CellSpec("new", None, "serve", ncols=1),
+    ))
+    plan = sup.apply(spec)
+    assert [op.verb for op in plan.ops] == ["destroy", "grow", "create"]
+    assert set(sup.cells) == {"keep", "new"}
+    assert sup.reconcile().empty
+
+
+def test_unbalanced_shrink_plus_transfer_lands_on_desired():
+    """Regression: a donor that both shrinks AND funds a transfer must end
+    exactly at its desired width — the residual shrink accounts for the
+    columns the (later) transfer takes."""
+    sup = _sup(a=5, b=3)
+    spec = ClusterSpec(cells=(
+        CellSpec("a", None, "serve", ncols=2, min_ncols=2, max_ncols=6),
+        CellSpec("b", None, "serve", ncols=4, min_ncols=1, max_ncols=6),
+    ))
+    plan = sup.apply(spec)
+    assert [op.verb for op in plan.ops] == ["shrink", "transfer"]
+    assert plan.ops[0].args["ncols"] == 3        # 2 desired + 1 in transit
+    assert sup.cells["a"].zone.ncols == 2        # never below desired/min
+    assert sup.cells["b"].zone.ncols == 4
+    assert sup.reconcile().empty
+
+
+def test_blocked_create_blocks_channel_without_crashing():
+    """Regression: a blocked create must leave its declared channel op
+    'blocked' (retried later), not escape reconcile with a KeyError."""
+    from repro.core.partition import PartitionError
+
+    class _FullSup(SimSupervisor):
+        def create_cell(self, name, arch, role, **kw):
+            raise PartitionError("no free columns")
+
+        def find_channel(self, src, dst, kind="array"):
+            return None
+
+        def open_channel(self, src, dst, kind="array"):
+            raise AssertionError("must not be reached with a missing endpoint")
+
+    sup = _FullSup(SimCell("a", 1))
+    spec = ClusterSpec(
+        cells=(CellSpec("a", None, "serve", ncols=1, max_ncols=1),
+               CellSpec("b", None, "serve", ncols=1)),
+        channels=(ChannelSpec("a", "b"),),
+    )
+    plan = sup.apply(spec)                       # must not raise
+    by_verb = {op.verb: op.status for op in plan.ops}
+    assert by_verb == {"create": "blocked", "open_channel": "blocked"}
+
+
+def test_recreate_reopens_declared_channels():
+    """Regression: destroy+recreate (role change) closes the old channel
+    mid-plan; the same plan must schedule a fresh open_channel."""
+    class _ChanSup(SimSupervisor):
+        def __init__(self, *cells):
+            super().__init__(*cells)
+            self.channels = []
+
+        def find_channel(self, src, dst, kind="array"):
+            for c in self.channels:
+                if c == (src, dst, kind):
+                    return c
+            return None
+
+        def open_channel(self, src, dst, kind="array"):
+            self.channels.append((src, dst, kind))
+            return type("Ch", (), {"cid": len(self.channels)})()
+
+        def destroy_cell(self, name):
+            super().destroy_cell(name)
+            self.channels = [c for c in self.channels
+                             if name not in (c[0], c[1])]
+
+    sup = _ChanSup(SimCell("a", 1), SimCell("b", 1))
+    spec = ClusterSpec(
+        cells=(CellSpec("a", None, "serve", ncols=1, max_ncols=1),
+               CellSpec("b", None, "serve", ncols=1, max_ncols=1)),
+        channels=(ChannelSpec("a", "b", kind="kv"),),
+    )
+    sup.apply(spec)
+    assert sup.find_channel("a", "b", "kv") is not None
+    # converged: the open channel is not re-opened
+    assert sup.reconcile().empty
+    # now flip b's role: destroy+create closes the channel; same plan reopens
+    plan = sup.apply(spec.with_cell(
+        CellSpec("b", None, "train", ncols=1, max_ncols=1)))
+    assert [op.verb for op in plan.ops] == ["destroy", "create", "open_channel"]
+    assert sup.find_channel("a", "b", "kv") is not None
+    assert sup.reconcile().empty
+
+
+def test_reconcile_recovers_failed_cells():
+    sup = _sup(a=2)
+    sup.cells["a"].status = "failed"
+    spec = ClusterSpec(cells=(CellSpec("a", None, "serve", ncols=2, max_ncols=2),))
+    plan = sup.apply(spec)
+    assert [op.verb for op in plan.ops] == ["recover"]
+    assert sup.cells["a"].status == "running"
+    assert sup.reconcile().empty
+
+
+def test_reconcile_recreates_on_role_change():
+    sup = _sup(a=2)
+    spec = ClusterSpec(cells=(CellSpec("a", None, "train", ncols=2, max_ncols=2),))
+    plan = sup.apply(spec)
+    assert [op.verb for op in plan.ops] == ["destroy", "create"]
+    assert sup.cells["a"].role == "train"
+    assert sup.reconcile().empty
+
+
+def test_reconcile_expands_replicas():
+    sup = _sup()
+    spec = ClusterSpec(cells=(
+        CellSpec("dec", None, "serve", ncols=1, replicas=3),))
+    plan = sup.apply(spec)
+    assert sorted(op.cell for op in plan.ops) == ["dec/0", "dec/1", "dec/2"]
+    assert sup.reconcile().empty
+    # dropping a replica destroys exactly the orphaned instances
+    plan = sup.apply(ClusterSpec(cells=(
+        CellSpec("dec", None, "serve", ncols=1, replicas=2),)))
+    assert [(op.verb, op.cell) for op in plan.ops] == [("destroy", "dec/2")]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on a real Supervisor (8 virtual host devices, subprocess)
+# ---------------------------------------------------------------------------
+E2E = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from repro.configs.base import smoke_config
+from repro.configs.registry import get_arch
+from repro.core import CellSpec, ClusterSpec, DeviceGrid, Supervisor
+from repro.train.optimizer import OptConfig
+
+grid = DeviceGrid.from_flat(jax.devices(), pods=1, rows=2, cols=4)
+sup = Supervisor(grid)
+cfg = smoke_config(get_arch("qwen3-4b")).replace(num_layers=2, d_model=64,
+    d_ff=128, num_heads=2, num_kv_heads=2, head_dim=32, vocab=256)
+out = {}
+
+spec = ClusterSpec(cells=(
+    CellSpec("tr", cfg, "train", ncols=2, min_ncols=1, max_ncols=3,
+             opt_cfg=OptConfig()),
+    CellSpec("srv", cfg, "serve", ncols=1, min_ncols=1, max_ncols=2),
+))
+plan = sup.apply(spec)
+out["plan1"] = [op.verb for op in plan.ops]
+out["idempotent"] = sup.reconcile().empty and sup.reconcile().empty
+
+# declarative rescale: grow srv into the free column (tr [0,2) srv [2,3))
+plan = sup.apply(spec.scale("srv", 2))
+out["plan2"] = [(op.verb, op.status) for op in plan.ops]
+# then hand srv's extra column to tr: one paired transfer
+plan = sup.apply(spec.scale("tr", 3).scale("srv", 1))
+out["plan3"] = [(op.verb, op.status) for op in plan.ops]
+out["cols3"] = [sup.cells["tr"].zone.ncols, sup.cells["srv"].zone.ncols]
+out["idempotent3"] = sup.reconcile().empty
+
+# column failure -> degraded recovery through reconcile (tr wants 3 but
+# only 2 contiguous non-failed columns remain)
+affected = sup.fail_column(0, sup.cells["tr"].zone.c0)
+out["affected"] = affected
+out["tr_status"] = sup.cells["tr"].status
+plan = sup.reconcile()               # recover: re-carve what fits
+recov = [op for op in plan.ops if op.verb == "recover"]
+out["recover_status"] = [op.status for op in recov]
+out["tr_cols_degraded"] = sup.cells["tr"].zone.ncols
+
+# restore the quarantined column; reconcile grows the cell back to spec
+pod_col = sorted(sup.table.failed_columns)[0]
+assert sup.restore_column(*pod_col)
+plan = sup.reconcile()
+out["regrow"] = [(op.verb, op.status) for op in plan.ops]
+out["tr_cols_restored"] = sup.cells["tr"].zone.ncols
+out["converged"] = sup.reconcile().empty
+
+# spawn_child lineage (imperative fork below the declarative plane)
+sup.desired = None                   # detach so reconcile won't prune child
+child = sup.spawn_child("tr", "tr_child", cfg, "train", ncols=1)
+out["lineage"] = sup.lineage("tr_child")
+out["child_cols"] = child.zone.ncols
+out["parent_cols"] = sup.cells["tr"].zone.ncols
+
+# validate_cell_programs runs the guard over compiled programs
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.configs.base import ShapeConfig
+pipe = SyntheticPipeline(DataConfig(kind="bigram", vocab=128), cfg,
+                         ShapeConfig("t", "train", 8, 8))
+sup.cells["tr"].train_steps(pipe.get_batch, 1)
+out["validated"] = sup.validate_cell_programs("tr")
+out["events"] = sorted(set(e["op"] for e in sup.events))
+print(json.dumps(out))
+"""
+
+
+def test_reconcile_e2e_real_supervisor():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", E2E], capture_output=True, text=True,
+        cwd=ROOT, env=env, timeout=540,
+    )
+    assert proc.returncode == 0, proc.stderr[-2500:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert sorted(out["plan1"]) == ["create", "create"]
+    assert out["idempotent"]
+    assert out["plan2"] == [["grow", "ok"]]
+    assert out["plan3"] == [["transfer", "ok"]]
+    assert out["cols3"] == [3, 1]
+    assert out["idempotent3"]
+    # failure -> degraded recovery -> restore -> regrow to spec
+    assert out["affected"] == ["tr"]
+    assert out["tr_status"] == "failed"
+    assert out["recover_status"] == ["degraded"]
+    assert out["tr_cols_degraded"] == 2
+    assert out["regrow"] == [["grow", "ok"]]
+    assert out["tr_cols_restored"] == 3
+    assert out["converged"]
+    # lineage + guarded programs
+    assert out["lineage"] == ["tr_child", "tr"]
+    assert out["child_cols"] == 1
+    assert out["validated"] >= 1
+    assert "restore_column" in out["events"] and "recover" in out["events"]

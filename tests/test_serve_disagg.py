@@ -115,9 +115,38 @@ def test_chunked_prefill_matches_token_at_a_time(model_and_params):
     got = {r.rid: r.output for r in chunked.run_until_drained()}
 
     assert got == ref
-    assert chunked.prefill_invocations == len(prompts)
-    # prompt phase: 1 invocation per prompt instead of prompt_len
+    # at most 1 invocation per prompt; same-bucket prompts admitted in one
+    # tick share an invocation, so usually fewer
+    assert 0 < chunked.prefill_invocations <= len(prompts)
+    assert sum(chunked.prefill_batch_sizes) == len(prompts)
+    # prompt phase: O(buckets) invocations instead of prompt_len
     assert chunked.decode_invocations < base.decode_invocations
+
+
+def test_same_bucket_prompts_share_one_prefill_invocation(model_and_params):
+    """Satellite: B same-bucket prompts admitted together -> ONE (B, S_pad)
+    prefill invocation, outputs identical to per-prompt prefill."""
+    model, params = model_and_params
+    prompts = _prompts(model.cfg.vocab, [33, 35, 40])   # all bucket 48
+
+    batched = ContinuousBatcher(model, params, batch_slots=3, max_len=MAX_LEN,
+                                prefill_chunk=16)
+    for r in _requests(prompts):
+        batched.submit(r)
+    got = {r.rid: r.output for r in batched.run_until_drained()}
+    assert batched.prefill_invocations == 1
+    assert batched.prefill_batch_sizes == [3]
+    # batch dims pad to powers of two: bounded program variants + caches
+    assert set(batched._scratch_caches) == {4}
+
+    # reference: one slot at a time -> one invocation per prompt
+    solo = ContinuousBatcher(model, params, batch_slots=1, max_len=MAX_LEN,
+                             prefill_chunk=16)
+    for r in _requests(prompts):
+        solo.submit(r)
+    ref = {r.rid: r.output for r in solo.run_until_drained()}
+    assert solo.prefill_invocations == 3
+    assert got == ref
 
 
 def test_chunked_prefill_invocation_reduction(model_and_params):
@@ -211,6 +240,61 @@ def test_kv_handoff_roundtrip_matches_single_cell(model_and_params):
     assert dec.accounting.serving_summary()["requests"] == len(prompts)
 
 
+def test_decode_replica_fanout(model_and_params):
+    """replicas=2 decode spec: one prefill cell fans requests out across
+    two decode cells; every request is served and both replicas take load."""
+    from repro.core import CellSpec, ChannelSpec, ClusterSpec
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=3,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    spec = ClusterSpec(
+        cells=(CellSpec("prefill", cfg, "serve", ncols=1),
+               CellSpec("decode", cfg, "serve", ncols=1, replicas=2)),
+        channels=(ChannelSpec("prefill", "decode", kind="kv"),),
+    )
+    plan = sup.apply(spec)
+    assert {op.verb for op in plan.ops} == {"create", "open_channel"}
+    assert set(sup.cells) == {"prefill", "decode/0", "decode/1"}
+    sup.cells["decode/0"].init_serve(rng=jax.random.PRNGKey(0))
+
+    names = spec.cell("decode").instances()
+    srv = DisaggServer(sup, "prefill", names, batch_slots=2,
+                       max_len=MAX_LEN, chunk=16)
+    # kv channels were opened declaratively by reconcile; DisaggServer
+    # reuses them instead of opening duplicates
+    assert sup.find_channel("prefill", "decode/0", "kv") is srv.replicas[0].channel
+    assert len([c for c in sup.channels if c.kind == "kv"]) == 2
+
+    prompts = _prompts(cfg.vocab, [9, 33, 17, 21, 40, 12])
+    for r in _requests(prompts, max_new=3):
+        srv.submit(r)
+    done = {r.rid: r for r in srv.run_until_drained()}
+    assert set(done) == set(range(len(prompts)))
+    assert all(len(done[i].output) == 3 for i in done)
+    st = srv.stats()
+    assert st["replicas"] == 2
+    assert all(n > 0 for n in st["per_replica_requests"])  # both took load
+    assert sum(st["per_replica_requests"]) == len(prompts)
+    # replica weight fan-out went over an on-demand channel: decode/1 got
+    # its params from decode/0, not from init
+    kinds = [(e.get("kind"), e["src"], e["dst"]) for e in sup.events
+             if e["op"] == "open_channel"]
+    assert ("array", "decode/0", "decode/1") in kinds
+
+    # outputs identical to a single-cell reference on the same weights
+    dec = sup.cells["decode/0"]
+    ref_bat = ContinuousBatcher(dec.model, dec.serve_params, batch_slots=2,
+                                max_len=MAX_LEN, prefill_chunk=None)
+    for r in _requests(prompts, max_new=3):
+        ref_bat.submit(r)
+    ref = {r.rid: r.output for r in ref_bat.run_until_drained()}
+    assert {i: done[i].output for i in done} == ref
+
+
 def test_disagg_unservable_prompts_do_not_stall_the_loop(model_and_params):
     """An empty or cache-overflowing prompt must finish (empty output)
     instead of raising mid-pump and starving every other request."""
@@ -234,3 +318,9 @@ def test_disagg_unservable_prompts_do_not_stall_the_loop(model_and_params):
     done = {r.rid: r.output for r in srv.run_until_drained()}
     assert set(done) == {0, 1, 2}
     assert done[0] == [] and done[2] == [] and len(done[1]) == 3
+    # rejected requests never reached a replica: per-replica stats and the
+    # decode cell's accounting only count routed traffic
+    st = srv.stats()
+    assert sum(st["per_replica_requests"]) == 1
+    assert st["decode_serving"]["requests"] == 3   # front-door view keeps all
+    assert len(srv.rejected) == 2

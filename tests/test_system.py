@@ -10,8 +10,6 @@ import os
 import subprocess
 import sys
 
-import pytest
-
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -29,7 +27,6 @@ def _run_subprocess(script: str, timeout=540) -> dict:
 
 # ---------------------------------------------------------------------------
 def test_single_device_cell_lifecycle():
-    import jax
     from repro.configs.base import ShapeConfig, smoke_config
     from repro.configs.registry import get_arch
     from repro.core import Supervisor, single_device_grid

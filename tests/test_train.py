@@ -51,7 +51,6 @@ def test_adamw_matches_numpy_reference():
 
 
 def test_grad_clip():
-    cfg = OptConfig(grad_clip=1.0, warmup_steps=0, min_lr_ratio=1.0)
     from repro.train.optimizer import clip_by_global_norm
     g = {"a": jnp.full((10,), 10.0)}
     clipped, norm = clip_by_global_norm(g, 1.0)
