@@ -10,9 +10,11 @@ test:
 lint:
 	ruff check src tests benchmarks examples
 
-# colocated-vs-disaggregated serving latency, small shapes (CI-friendly)
+# CI-friendly benchmark smoke: colocated-vs-disaggregated serving latency
+# (small shapes) + the daemon-driven elastic scheduling trace (short)
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/disagg_serving.py --smoke
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.elastic_sched --smoke
 
 # full benchmark harness (paper tables/figures)
 bench:

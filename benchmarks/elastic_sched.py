@@ -3,24 +3,32 @@
 Replays a fluctuating request-rate trace against a serving cell co-located
 with a batch cell (12 "columns" total), driven by the DECLARATIVE control
 plane: desired state is a ClusterSpec (server bounded [3,10] cols, batch
-[2,10]); each tick the modeled p99 is recorded into the server cell's
-real ``CellAccounting`` and a :class:`ReconcilePolicy` pulls it, rescales
-the spec, and ``apply``s — the real :class:`Reconciler` plans the column
-``transfer``s against a bookkeeping-only supervisor (instant primitives;
-the resize *cost* is charged per the calibrated SystemModel).  Outputs
-the Table-5 analogue: batch progress, p99, throughput, #transfers.
-MODELED (latencies) + the policy/spec/reconciler code paths exercised for
-real — zero direct ``transfer_columns`` calls in this file.
+[2,10]) whose server cell declares an ``SLOTarget(ttft_p99=0.200)`` — the
+policy band is DERIVED from that target (``ut`` = the SLO itself,
+``lt = hysteresis * ut``), not hand-picked.  Each tick the modeled p99 is
+recorded into the server cell's real ``CellAccounting`` and a
+:class:`SupervisorDaemon` tick runs the whole management cycle: health,
+reconcile, and the :class:`ReconcilePolicy` that pulls the samples,
+rescales the spec and ``apply``s — the real :class:`Reconciler` plans the
+column ``transfer``s against a bookkeeping-only supervisor (instant
+primitives; the resize *cost* is charged per the calibrated SystemModel).
+Outputs the Table-5 analogue: batch progress, p99, throughput, #transfers.
+MODELED (latencies) + the daemon/policy/spec/reconciler code paths
+exercised for real — zero direct ``transfer_columns`` calls in this file.
+
+Run:  PYTHONPATH=src python benchmarks/elastic_sched.py [--smoke]
 """
 from __future__ import annotations
 
+import argparse
+import sys
 from typing import List
 
 import numpy as np
 
 from benchmarks.simlib import SYSTEMS, SimCell, SimSupervisor, p99, simulate_serving
-from repro.core.elastic import ElasticPolicy, ReconcilePolicy
-from repro.core.spec import CellSpec, ClusterSpec
+from repro.core.daemon import SupervisorDaemon
+from repro.core.spec import CellSpec, ClusterSpec, SLOTarget
 
 
 def trace_rate(t: float) -> float:
@@ -35,20 +43,26 @@ def run_system(sys_name: str, duration=2250.0, dt=10.0, seed=0):
                         SimCell("batch", 6, "train"))
     # desired state: the policy may move the server within [3,10] columns
     # (floor of 3 prevents shrink-into-overload oscillation), the batch
-    # donor keeps at least 2
+    # donor keeps at least 2.  The server declares its latency objective;
+    # the scheduling band follows from it.
+    slo = SLOTarget(ttft_p99=0.200)
     spec = ClusterSpec(cells=(
-        CellSpec("server", None, "serve", ncols=6, min_ncols=3, max_ncols=10),
+        CellSpec("server", None, "serve", ncols=6, min_ncols=3, max_ncols=10,
+                 slo=slo),
         CellSpec("batch", None, "train", ncols=6, min_ncols=2, max_ncols=10),
     ))
     plan = sup.apply(spec)
     assert plan.empty                  # observed already matches desired
-    # the policy consumes one p99 observation per tick via the server
-    # cell's accounting; median over the last 6 ticks (1 min) decides moves
-    sched = ReconcilePolicy(
-        sup, "server", "batch",
-        ElasticPolicy(lt=0.160, ut=0.200, window=6, percentile=50.0,
-                      cooldown=40.0, metric="ttft"),
+    # daemon-driven loop: the policy consumes one p99 observation per tick
+    # via the server cell's accounting; band = (0.8 * SLO, SLO), median
+    # over the last 6 ticks (1 min) decides moves
+    daemon = SupervisorDaemon(sup)
+    sched = daemon.add_slo_policy(
+        "server", "batch", metric="ttft", hysteresis=0.8,
+        window=6, percentile=50.0, cooldown=40.0,
     )
+    assert (sched.policy.lt, sched.policy.ut) == (0.8 * slo.ttft_p99,
+                                                  slo.ttft_p99)
     batch_work = 0.0
     tails, t = [], 0.0
     rid = 0
@@ -67,12 +81,12 @@ def run_system(sys_name: str, duration=2250.0, dt=10.0, seed=0):
         tail = p99(lat)
         tails.append(tail)
         # live accounting feed: the tick's tail lands in the server cell's
-        # CellAccounting; sched.maybe_act() pulls it from there
+        # CellAccounting; the daemon's policy stage pulls it from there
         sup.cells["server"].accounting.record_request(rid, ttft=tail)
         rid += 1
         if sys_name != "linux" and can_resize:     # linux: no partition control
-            act = sched.maybe_act(now=t)
-            if act:
+            rec = daemon.tick(now=t)
+            if rec["actions"]:
                 resize_downtime += sm.resize_seconds
         # batch progress: donor columns x time (minus resize pauses)
         batch_work += sup.cells["batch"].zone.ncols * dt
@@ -83,6 +97,7 @@ def run_system(sys_name: str, duration=2250.0, dt=10.0, seed=0):
         "batch_work": batch_work,
         "transfers": sup.transfers,
         "resize_downtime_s": resize_downtime,
+        "daemon_ticks": daemon.ticks,
     }
 
 
@@ -102,3 +117,34 @@ def run(rows: List[dict]):
             "us_per_call": r["batch_work"],
             "derived": f"vs_rf={r['batch_work']/base_work:.2f}x paper: rf beats lxc/xen MODELED",
         })
+
+
+def run_smoke(rows: List[dict]):
+    """Short trace for CI: the daemon must tick every step AND actually
+    move columns (the elasticity loop can't silently rot into a no-op)."""
+    r = run_system("rainforest", duration=900.0)
+    assert r["daemon_ticks"] == 90, r
+    assert r["transfers"] > 0, "daemon-driven policy never moved a column"
+    rows.append({
+        "name": "table5_elastic/rainforest/smoke_p99_ms",
+        "us_per_call": r["p99_ms"] * 1e3,
+        "derived": (f"transfers={r['transfers']} "
+                    f"ticks={r['daemon_ticks']} MODELED"),
+    })
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short single-system trace for CI")
+    args = ap.parse_args(argv)
+    rows: List[dict] = []
+    run_smoke(rows) if args.smoke else run(rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        d = str(r["derived"]).replace(",", ";")
+        print(f"{r['name']},{r['us_per_call']:.3f},{d}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

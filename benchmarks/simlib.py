@@ -93,10 +93,11 @@ class SimSupervisor:
         return {"ncols": ncols}
 
     def recover_cell(self, name, *, ncols=None, ckpt_dir=None):
-        self.log.append(("recover", name, ncols))
+        self.log.append(("recover", name, ncols, ckpt_dir))
         cell = self.cells[name]
         cell.status = "running"
-        cell.zone.ncols = ncols
+        if ncols is not None:
+            cell.zone.ncols = ncols
         return cell
 
 

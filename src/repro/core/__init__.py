@@ -23,6 +23,7 @@ from repro.core.channels import (  # noqa: F401
     KVEnvelope,
 )
 from repro.core.elastic import ElasticPolicy, ReconcilePolicy  # noqa: F401
+from repro.core.daemon import SupervisorDaemon  # noqa: F401
 from repro.core.guard import BoundaryGuard, BoundaryViolation  # noqa: F401
 from repro.core.accounting import CellAccounting, collective_bytes  # noqa: F401
 from repro.core.resharding import reshard_tree, tree_bytes  # noqa: F401

@@ -9,6 +9,7 @@ belong to that cell alone because nothing is shared.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import re
 from collections import defaultdict
 from typing import Dict, List, Optional
@@ -115,8 +116,14 @@ class ProgramCost:
 class CellAccounting:
     """Exact per-cell attribution of compiled-program costs."""
 
+    _ids = itertools.count()
+
     def __init__(self, cell_name: str):
         self.cell = cell_name
+        # process-unique, never reused (unlike id()): readers that cursor
+        # into ``requests`` key on this to detect a recovered cell's
+        # fresh log (see ReconcilePolicy.pull)
+        self.uid = next(CellAccounting._ids)
         self.programs: Dict[str, ProgramCost] = {}
         self.requests: List[RequestMetrics] = []
 

@@ -1,0 +1,222 @@
+"""Supervisor daemon — the closed control loop over the declarative plane.
+
+The paper's supervisor "can create, destroy, resize a subOS on-the-fly";
+PR 2 made those verbs converge from declared state, but convergence only
+happened when a caller remembered to tick ``reconcile()`` or
+``maybe_act()`` by hand.  :class:`SupervisorDaemon` closes the loop: one
+``tick()`` runs the whole management cycle, and ``start()`` runs it on a
+timer, so the cluster self-heals and autoscales with ZERO manual
+primitive calls — the application only ever declares specs.
+
+Tick order (each stage feeds the next):
+
+1. **health** — ``Supervisor.check_health()`` finds heartbeat-stale
+   cells; the daemon marks them ``failed`` so the planner sees them.
+2. **reconcile** — converge observed -> desired: failed cells are
+   re-carved (``recover``), restoring state from the spec's ``ckpt_dir``
+   when one is declared; degraded cells regrow; replica-count changes
+   materialize as create/destroy.
+3. **policies** — registered :class:`~repro.core.elastic.ReconcilePolicy`
+   instances pull live TTFT/TPOT accounting and may rewrite + re-apply
+   the spec (columns and/or replicas).  Threshold bands come from the
+   spec's declared :class:`~repro.core.spec.SLOTarget` via
+   :meth:`add_slo_policy` — the application states its latency
+   objective, not scaling thresholds.
+4. **sync** — attached :class:`~repro.serve.disagg.DisaggServer`\\ s
+   converge their live replica surface to the (possibly rescaled) spec:
+   fresh decode instances attach, vanished ones detach with their
+   requests requeued.
+
+Ticks are re-entrant-free and cheap when converged (an empty plan plus a
+few deque reads), so interleaving ``tick()`` with traffic — e.g.
+``DisaggServer.run_until_drained(on_step=daemon.tick)`` — is the
+recommended pattern for in-process serving loops.  The threaded
+``start()/stop()`` mode suits bookkeeping supervisors and real
+deployments where cells run out-of-process; do not combine it with a
+same-process JAX step loop (two threads would race on device state).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+from repro.core.elastic import ElasticPolicy, ReconcilePolicy
+
+
+class SupervisorDaemon:
+    """Periodic health-check + reconcile + SLO autoscale + replica sync."""
+
+    def __init__(self, supervisor, *, interval: float = 0.5,
+                 history_limit: int = 10_000):
+        self.sup = supervisor
+        self.interval = interval
+        self.policies: List[ReconcilePolicy] = []
+        self.servers: List[Tuple[object, Optional[str]]] = []
+        self.ticks = 0
+        # bounded: a long-running threaded daemon must not leak one
+        # record per tick forever
+        self.history: Deque[dict] = deque(maxlen=history_limit)
+        self.errors: Deque[dict] = deque(maxlen=1_000)
+        self._stop_evt = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- registration ---------------------------------------------------
+    def add_policy(self, policy: ReconcilePolicy) -> ReconcilePolicy:
+        """Register a hand-built policy (prefer :meth:`add_slo_policy`)."""
+        self.policies.append(policy)
+        return policy
+
+    def add_slo_policy(self, server: str, donor: Optional[str] = None, *,
+                       metric: str = "ttft", hysteresis: float = 0.5,
+                       window: int = 50, percentile: float = 99.0,
+                       cooldown: float = 0.0,
+                       autoscale_replicas: bool = False,
+                       queue_depth=None, queue_high: int = 4
+                       ) -> ReconcilePolicy:
+        """Build a policy whose bands derive from the spec's SLOTarget.
+
+        ``ut`` is the declared ``{metric}_p99`` target, ``lt`` is
+        ``hysteresis * ut`` — nothing is hand-picked.  With ``donor``
+        set, tail crossings move columns between ``server`` and
+        ``donor``; with ``autoscale_replicas=True`` the ``tpot_p99``
+        target (plus ``queue_depth``, e.g. ``lambda:
+        len(disagg_server.pending)``) drives the server spec's desired
+        replica count.
+        """
+        spec = getattr(self.sup, "desired", None)
+        if spec is None or not spec.has_cell(server):
+            raise ValueError(f"no applied spec declares cell {server!r}")
+        slo = spec.cell(server).slo
+        policy = None
+        if donor is not None:
+            policy = ElasticPolicy.from_slo(
+                slo, metric=metric, hysteresis=hysteresis, window=window,
+                percentile=percentile, cooldown=cooldown)
+        replica_policy = None
+        if autoscale_replicas:
+            replica_policy = ElasticPolicy.from_slo(
+                slo, metric="tpot", hysteresis=hysteresis, window=window,
+                percentile=percentile, cooldown=cooldown)
+        pol = self.add_policy(ReconcilePolicy(
+            self.sup, server, donor, policy,
+            replica_policy=replica_policy, queue_depth=queue_depth,
+            queue_high=queue_high))
+        # remembered so tick() re-derives the band when the application
+        # re-applies a spec with a CHANGED SLOTarget — the objective is
+        # the spec's, never frozen at registration time
+        pol._slo_conf = {"metric": metric, "hysteresis": hysteresis,
+                         "window": window, "percentile": percentile,
+                         "cooldown": cooldown, "seen": slo}
+        return pol
+
+    def _refresh_slo_bands(self, pol: ReconcilePolicy):
+        """Re-derive an add_slo_policy band after the spec's SLO changed."""
+        conf = getattr(pol, "_slo_conf", None)
+        if conf is None:
+            return
+        spec = getattr(self.sup, "desired", None)
+        if spec is None or not spec.has_cell(pol.server):
+            return
+        slo = spec.cell(pol.server).slo
+        if slo is None or slo == conf["seen"]:
+            return
+        kw = {k: conf[k] for k in
+              ("hysteresis", "window", "percentile", "cooldown")}
+        try:
+            if pol.policy is not None:
+                pol.policy = ElasticPolicy.from_slo(
+                    slo, metric=conf["metric"], **kw)
+            if pol.replica_policy is not None:
+                pol.replica_policy = ElasticPolicy.from_slo(
+                    slo, metric="tpot", **kw)
+        except ValueError:
+            return      # new SLO dropped the needed target; keep old band
+        conf["seen"] = slo
+
+    def attach_server(self, server, decode_spec: Optional[str] = None):
+        """Keep a DisaggServer's replica surface synced to the spec on
+        every tick (``decode_spec`` defaults to the server's own base)."""
+        self.servers.append((server, decode_spec))
+        return server
+
+    # -- one management cycle -------------------------------------------
+    def tick(self, now: Optional[float] = None) -> dict:
+        """Run one full cycle: health -> reconcile -> policies -> sync.
+
+        ``now`` overrides wall-clock for simulated-time benchmarks (it is
+        forwarded to the policies' cooldown logic).  Returns the tick
+        record, also appended to :attr:`history`.
+        """
+        now = time.monotonic() if now is None else now
+        rec = {"tick": self.ticks, "ts": now, "dead": [], "plan": "noop",
+               "actions": [], "sync": {}}
+        # 1. health: heartbeat-stale cells become failed, so the planner
+        #    below schedules their recover
+        check = getattr(self.sup, "check_health", None)
+        if check is not None:
+            for name in check():
+                cell = self.sup.cells.get(name)
+                if cell is not None and cell.status == "running":
+                    cell.status = "failed"
+                rec["dead"].append(name)
+        # 2. converge observed -> desired (recover, regrow, re-channel)
+        plan = self.sup.reconcile()
+        rec["plan"] = plan.summary()
+        # 3. SLO policies may rewrite + re-apply the spec (bands track the
+        #    spec's CURRENT SLOTarget, not the one seen at registration)
+        for policy in self.policies:
+            self._refresh_slo_bands(policy)
+            act = policy.maybe_act(now)
+            if act:
+                rec["actions"].append(act)
+        # 4. serving surfaces follow the (possibly rescaled) spec
+        for srv, base in self.servers:
+            s = srv.sync(getattr(self.sup, "desired", None), base)
+            if s["attached"] or s["detached"]:
+                rec["sync"][base or srv._decode_base] = s
+        self.ticks += 1
+        self.history.append(rec)
+        return rec
+
+    # -- timer loop -------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self):
+        """Tick every ``interval`` seconds on a background thread."""
+        if self.running:
+            raise RuntimeError("daemon already running")
+        self._stop_evt.clear()
+        self._thread = threading.Thread(
+            target=self._run, name="supervisor-daemon", daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while not self._stop_evt.wait(self.interval):
+            try:
+                self.tick()
+            except Exception as e:  # keep the loop alive; surface the error
+                self.errors.append({"ts": time.monotonic(), "error": repr(e)})
+
+    def stop(self, timeout: float = 5.0):
+        self._stop_evt.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            if self._thread.is_alive():
+                # a tick is still running: clearing _thread here would let
+                # start() race a second concurrent daemon over the same
+                # supervisor state
+                raise RuntimeError(
+                    f"daemon thread did not stop within {timeout}s")
+            self._thread = None
+
+    def __enter__(self) -> "SupervisorDaemon":
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False

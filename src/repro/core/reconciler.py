@@ -144,13 +144,16 @@ class Reconciler:
         out.ops.extend(transfers)
         out.ops.extend(grows)
 
-        # new cells / failed cells to re-carve
+        # new cells / failed cells to re-carve; recover threads the spec's
+        # ckpt_dir through so the cell comes back with state, not just a zone
         for name, cs in desired.items():
             cell = observed.get(name)
             if cell is None or name in recreate:
                 out.ops.append(PlanOp("create", name, {"ncols": cs.ncols}))
             elif getattr(cell, "status", "running") == "failed":
-                out.ops.append(PlanOp("recover", name, {"ncols": cs.ncols}))
+                out.ops.append(PlanOp(
+                    "recover", name,
+                    {"ncols": cs.ncols, "ckpt_dir": cs.ckpt_dir}))
 
         # declared channels not yet open — or whose endpoint is being
         # recreated this plan (destroy closes its channels mid-execution,
@@ -191,7 +194,9 @@ class Reconciler:
                 elif op.verb == "create":
                     op.status, op.result = self._create(desired[op.cell], op.cell)
                 elif op.verb == "recover":
-                    cell = self.sup.recover_cell(op.cell, ncols=op.args["ncols"])
+                    cell = self.sup.recover_cell(
+                        op.cell, ncols=op.args["ncols"],
+                        ckpt_dir=op.args.get("ckpt_dir"))
                     op.status = ("ok" if cell.zone.ncols >= op.args["ncols"]
                                  else "degraded")
                     op.result = {"ncols": cell.zone.ncols}
@@ -231,6 +236,13 @@ class Reconciler:
                     instance, cs.arch, cs.role, ncols=n, pods=cs.pods,
                     opt_cfg=cs.opt_cfg,
                 )
+                # boot from checkpoint when the spec declares one: a failed
+                # cell whose recover could not re-carve degrades to a
+                # create on a later reconcile, and must still come back
+                # with its state
+                restore = getattr(self.sup, "restore_from_ckpt", None)
+                if cs.ckpt_dir is not None and restore is not None:
+                    restore(cell, cs.ckpt_dir)
                 return ("ok" if n == cs.ncols else "degraded"), \
                     {"ncols": cell.zone.ncols}
             except PartitionError:

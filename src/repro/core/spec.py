@@ -10,15 +10,27 @@ are plain immutable data, cheap to copy and diff.
 
 Conventions:
 
-* A :class:`CellSpec` with ``replicas == 1`` materializes as one cell
-  named ``spec.name``.  With ``replicas == N > 1`` it materializes as N
+* A :class:`CellSpec` with ``replicas == N > 1`` materializes as N
   cells named ``"{name}/0" .. "{name}/N-1"`` — uniform instances that
   share arch/role/bounds (the Nanvix-style "density from uniform
   lifecycle" pattern); ``DisaggServer`` routes requests across them.
+  Replica-BOUNDED specs (``max_replicas >= 2``) keep the indexed names
+  even at ``replicas == 1``, so autoscaling only ever adds/removes
+  instances and never renames the survivors; only an unbounded
+  single-replica spec materializes as the bare ``spec.name``.
 * ``ncols`` is the *desired* column count; ``min_ncols``/``max_ncols``
   bound what any policy may request and what a degraded cell may shrink
   to.  Policies never call resize primitives — they rewrite ``ncols``
   (see :class:`~repro.core.elastic.ReconcilePolicy`) and reconcile.
+  ``replicas`` is bounded the same way by ``min_replicas``/
+  ``max_replicas`` — the second elastic axis.
+* ``ckpt_dir`` names where the cell's state checkpoints live.  It is
+  *recovery metadata*: the reconciler threads it into the ``recover``
+  op, so a re-carved cell comes back with its latest checkpointed state
+  (train state for ``role="train"``, params for ``role="serve"``) —
+  not just an empty zone.  Whoever runs the cell is still responsible
+  for writing checkpoints there (``repro.checkpoint.checkpoint.save``);
+  the spec only says where to look on recovery.
 * A :class:`ChannelSpec` between replicated specs expands to the cross
   product of instances (one prefill cell fanning out to N decode cells
   declares a single channel spec).
@@ -61,15 +73,27 @@ class CellSpec:
     max_ncols: Optional[int] = None
     pods: Tuple[int, ...] = (0,)
     replicas: int = 1
+    min_replicas: int = 1
+    max_replicas: Optional[int] = None
     opt_cfg: Optional[OptConfig] = None
     slo: Optional[SLOTarget] = None
+    ckpt_dir: Optional[str] = None
 
     def __post_init__(self):
         if "/" in self.name:
             raise SpecError(f"cell name {self.name!r} may not contain '/' "
                             "(reserved for replica instances)")
-        if self.replicas < 1:
-            raise SpecError(f"{self.name}: replicas must be >= 1")
+        if self.min_replicas < 1:
+            raise SpecError(f"{self.name}: min_replicas must be >= 1")
+        if self.max_replicas is not None and self.max_replicas < self.min_replicas:
+            raise SpecError(f"{self.name}: max_replicas < min_replicas")
+        if not (self.min_replicas <= self.replicas
+                <= (self.max_replicas if self.max_replicas is not None
+                    else self.replicas)):
+            raise SpecError(
+                f"{self.name}: replicas={self.replicas} outside "
+                f"[{self.min_replicas}, {self.max_replicas}]"
+            )
         if self.min_ncols < 1:
             raise SpecError(f"{self.name}: min_ncols must be >= 1")
         if self.max_ncols is not None and self.max_ncols < self.min_ncols:
@@ -89,9 +113,24 @@ class CellSpec:
     def with_ncols(self, ncols: int) -> "CellSpec":
         return dataclasses.replace(self, ncols=self.clamp(ncols))
 
+    def clamp_replicas(self, replicas: int) -> int:
+        hi = self.max_replicas if self.max_replicas is not None else replicas
+        return max(self.min_replicas, min(replicas, hi))
+
+    def with_replicas(self, replicas: int) -> "CellSpec":
+        return dataclasses.replace(self, replicas=self.clamp_replicas(replicas))
+
     def instances(self) -> List[str]:
-        """Concrete cell names this spec materializes as."""
-        if self.replicas == 1:
+        """Concrete cell names this spec materializes as.
+
+        Replica-BOUNDED specs (``max_replicas >= 2``) use indexed names
+        even at ``replicas == 1``: scaling then only ever adds or
+        removes ``name/i`` instances, never renames the survivors — a
+        rename would force the reconciler to destroy every live replica
+        for a nominal +-1 step.  Only unbounded single-replica specs
+        keep the bare name."""
+        if self.replicas == 1 and (self.max_replicas is None
+                                   or self.max_replicas == 1):
             return [self.name]
         return [f"{self.name}/{i}" for i in range(self.replicas)]
 
@@ -184,3 +223,13 @@ class ClusterSpec:
         if new == c.ncols:
             return self, 0
         return self.with_cell(dataclasses.replace(c, ncols=new)), new - c.ncols
+
+    def scale_replicas_by(self, name: str, delta: int) -> Tuple["ClusterSpec", int]:
+        """Adjust desired replica count by ``delta`` within
+        ``[min_replicas, max_replicas]``; same contract as :meth:`scale_by`."""
+        c = self.cell(name)
+        new = c.clamp_replicas(c.replicas + delta)
+        if new == c.replicas:
+            return self, 0
+        return (self.with_cell(dataclasses.replace(c, replicas=new)),
+                new - c.replicas)

@@ -224,21 +224,48 @@ class Supervisor:
             self._log("recover_degraded", cell=name, want=want,
                       got=cell.zone.ncols)
         if ckpt_dir is not None:
-            import jax
-            from repro.checkpoint import checkpoint as ckpt
-            from repro.train.train_step import abstract_train_state, train_state_pspecs
-            step = ckpt.latest_step(ckpt_dir)
-            if step is not None:
-                target = abstract_train_state(cell.model, cell.opt_cfg)
-                shardings = jax.tree.map(
-                    lambda s: jax.sharding.NamedSharding(cell.mesh, s),
-                    train_state_pspecs(cell.model),
-                )
-                cell.state = ckpt.restore(ckpt_dir, step, target, shardings)
-                cell.step = step
-                cell.status = "running"
+            self.restore_from_ckpt(cell, ckpt_dir)
         self._log("recover", cell=name, seconds=time.monotonic() - t0)
         return cell
+
+    def restore_from_ckpt(self, cell: Cell, ckpt_dir: str) -> bool:
+        """Restore a cell's state from its latest checkpoint, by role.
+
+        Train cells restore a full TrainState; serve cells checkpoint
+        bare params (``snapshot_state``), so restoring those through
+        ``abstract_train_state`` would raise on the leaf-count mismatch.
+        Returns True when a checkpoint was restored; when none exists
+        the cell comes back empty and ``recover_no_ckpt`` is logged so a
+        misconfigured ``ckpt_dir`` is visible, not silent.
+        """
+        import jax
+        from repro.checkpoint import checkpoint as ckpt
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            self._log("recover_no_ckpt", cell=cell.name, ckpt_dir=ckpt_dir)
+            return False
+        if cell.role == "train":
+            from repro.train.train_step import (
+                abstract_train_state,
+                train_state_pspecs,
+            )
+            target = abstract_train_state(cell.model, cell.opt_cfg)
+            shardings = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(cell.mesh, s),
+                train_state_pspecs(cell.model),
+            )
+            cell.state = ckpt.restore(ckpt_dir, step, target, shardings)
+        else:
+            target = cell.model.abstract_params()
+            shardings = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(cell.mesh, s),
+                cell.model.params_pspecs(),
+            )
+            cell.serve_params = ckpt.restore(ckpt_dir, step, target, shardings)
+        cell.step = step
+        cell.status = "running"
+        self._log("restore_ckpt", cell=cell.name, ckpt_dir=ckpt_dir, step=step)
+        return True
 
     def mitigate_straggler(self, name: str, slow_col: int) -> dict:
         """Straggler policy: shrink the cell off a slow column and re-grow

@@ -31,7 +31,12 @@ pull from it (share-on-demand for weights, too).
 
 The elastic :class:`~repro.core.elastic.ReconcilePolicy` can rebalance
 columns between the prefill and decode specs from live TTFT/TPOT
-accounting (see ``benchmarks/disagg_serving.py``).
+accounting (see ``benchmarks/disagg_serving.py``) AND autoscale the
+decode spec's ``replicas`` from queue depth + TPOT tail;
+:meth:`DisaggServer.sync` then live-attaches/detaches replicas so the
+serving surface follows the spec while traffic flows — the
+:class:`~repro.core.daemon.SupervisorDaemon` closes that loop on a
+timer with zero manual primitive calls.
 """
 from __future__ import annotations
 
@@ -141,6 +146,16 @@ class DisaggServer:
     with ``prefill_chunk=None`` — it NEVER prefills; every request's KV
     rows arrive over its channel.  TTFT is the (possibly batched) prefill
     invocation + one channel transfer; TPOT is pure decode.
+
+    The replica set is LIVE: after a reconcile changes the decode spec's
+    ``replicas`` or recovers a failed instance, :meth:`sync` converges
+    the serving surface to the spec — attach opens the KV channel, fans
+    the weights out on demand and builds a fresh batcher; detach drains
+    the replica's slots, requeues its in-flight requests onto ``pending``
+    (no request is ever lost to a scale-down or a dead cell) and closes
+    its channel.  :meth:`pump` reaps dead replicas the same way, so a
+    mid-traffic column failure degrades to the surviving replicas
+    instead of leaking the victim's requests.
     """
 
     def __init__(self, supervisor, prefill_cell: str,
@@ -154,49 +169,218 @@ class DisaggServer:
         self.sup = supervisor
         self.prefill_cell = supervisor.cells[prefill_cell]
         self.max_len = max_len
+        self.batch_slots = batch_slots
+        self.chunk = chunk
+        self.temperature = temperature
+        self.eos_token = eos_token
+        # spec name the decode instances materialize from ("dec/0" -> "dec")
+        self._decode_base = decode_cells[0].split("/")[0]
+        self.pending: deque = deque()
+        self.rejected: List[Request] = []   # unservable, never routed
+        self.requeued = 0               # requests re-homed off a detached replica
+        self._done_detached: List[Request] = []  # served by since-gone replicas
+        self._detached_stats = {"requests": 0, "decode_invocations": 0,
+                                "kv_bytes": 0, "kv_transfers": 0,
+                                "kv_seconds": 0.0}
+        self._rr = 0                    # round-robin cursor for routing ties
 
         primary = supervisor.cells[decode_cells[0]]
         if primary.serve_params is None:
             primary.init_serve()
-        # share-on-demand weight sync: primary decode -> later replicas,
-        # primary decode -> prefill (each over its own array channel)
-        sync_to = [n for n in decode_cells[1:]
-                   if supervisor.cells[n].serve_params is None]
+        # share-on-demand weight sync: the prefill cell pulls params from
+        # the primary decode cell over an array channel (replicas sync
+        # the same way inside _attach)
         if self.prefill_cell.serve_params is None:
-            sync_to.append(prefill_cell)
-        for name in sync_to:
-            dst = supervisor.cells[name]
-            wch = (supervisor.find_channel(decode_cells[0], name, "array")
-                   or supervisor.open_channel(decode_cells[0], name, kind="array"))
-            shardings = jax.tree.map(
-                lambda s: jax.sharding.NamedSharding(dst.mesh, s),
-                dst.model.params_pspecs(),
-            )
-            wch.send(primary.serve_params, shardings)
-            dst.serve_params = wch.recv()
-
+            self._sync_weights(prefill_cell, decode_cells[0])
         self.worker = PrefillWorker(
             self.prefill_cell, max_len=max_len, chunk=chunk,
             temperature=temperature,
         )
         self.replicas: List[_DecodeReplica] = []
         for name in decode_cells:
-            cell = supervisor.cells[name]
-            ch = (supervisor.find_channel(prefill_cell, name, "kv")
-                  or supervisor.open_channel(prefill_cell, name, kind="kv"))
-            batcher = cell.make_batcher(
-                batch_slots=batch_slots, max_len=max_len,
-                temperature=temperature, eos_token=eos_token,
-                prefill_chunk=None,
-            )
-            kv_shardings = jax.tree.map(
-                lambda s, m=cell.mesh: jax.sharding.NamedSharding(m, s),
-                cell.model.cache_pspecs(1, max_len),
-            )
-            self.replicas.append(_DecodeReplica(cell, ch, batcher, kv_shardings))
-        self.pending: deque = deque()
-        self.rejected: List[Request] = []   # unservable, never routed
-        self._rr = 0                    # round-robin cursor for routing ties
+            self._attach(name)
+
+    # -- replica lifecycle ---------------------------------------------
+    def _sync_weights(self, dst_name: str, src_name: str):
+        """On-demand weight fan-out: ``dst`` pulls params from ``src``
+        over a supervisor array channel (opened if not already there)."""
+        dst = self.sup.cells[dst_name]
+        src = self.sup.cells[src_name]
+        if src.serve_params is None:
+            # fanning out None would mark dst "running" while unservable
+            raise ValueError(
+                f"weight source {src_name!r} holds no params to fan out")
+        wch = (self.sup.find_channel(src_name, dst_name, "array")
+               or self.sup.open_channel(src_name, dst_name, kind="array"))
+        shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(dst.mesh, s),
+            dst.model.params_pspecs(),
+        )
+        wch.send(src.serve_params, shardings)
+        dst.serve_params = wch.recv()
+        if dst.status == "created":     # params in hand: it is serving now
+            dst.status = "running"
+
+    def _weight_source(self) -> Optional[str]:
+        """First live replica holding params, else the prefill cell if it
+        holds any — None when nothing can be fanned out yet."""
+        for rep in self.replicas:
+            if rep.cell.serve_params is not None and rep.cell.status == "running":
+                return rep.cell.name
+        if self.prefill_cell.serve_params is not None:
+            return self.prefill_cell.name
+        return None
+
+    def _attach(self, name: str) -> Optional[_DecodeReplica]:
+        """Bring a decode cell into the serving surface: weight fan-out
+        (if it has no params yet), KV channel, fresh batcher.  Returns
+        None when no weight source exists yet (a later sync retries)."""
+        cell = self.sup.cells[name]
+        if cell.serve_params is None:
+            src = self._weight_source()
+            if src is None:
+                return None
+            self._sync_weights(name, src)
+        ch = (self.sup.find_channel(self.prefill_cell.name, name, "kv")
+              or self.sup.open_channel(self.prefill_cell.name, name, kind="kv"))
+        batcher = cell.make_batcher(
+            batch_slots=self.batch_slots, max_len=self.max_len,
+            temperature=self.temperature, eos_token=self.eos_token,
+            prefill_chunk=None,
+        )
+        kv_shardings = jax.tree.map(
+            lambda s, m=cell.mesh: jax.sharding.NamedSharding(m, s),
+            cell.model.cache_pspecs(1, self.max_len),
+        )
+        rep = _DecodeReplica(cell, ch, batcher, kv_shardings)
+        self.replicas.append(rep)
+        return rep
+
+    def _requeue(self, req: Request):
+        """Reset a request's serving state and put it back at the front
+        of ``pending`` — it will be prefilled again from scratch on
+        another replica.  ``submitted_at`` is kept, so its eventual TTFT
+        honestly includes the disruption."""
+        req.output.clear()
+        req.started_at = None
+        req.first_token_at = None
+        req.finished_at = None
+        if hasattr(req, "_prompt_cursor"):
+            del req._prompt_cursor
+        self.pending.appendleft(req)
+        self.requeued += 1
+
+    def _detach(self, rep: _DecodeReplica) -> int:
+        """Remove a replica from the serving surface, requeueing every
+        request it held (in-flight on the channel or sitting in a slot).
+        Returns the number of requests requeued."""
+        self.replicas.remove(rep)
+        # the replica's served history and counters must survive the
+        # detach — ``done``/``stats`` are the front door's ledger, not
+        # the batcher's (the re-attach channel is always a fresh one, so
+        # nothing here is counted twice)
+        self._done_detached.extend(rep.batcher.done)
+        self._detached_stats["requests"] += len(rep.batcher.done)
+        self._detached_stats["decode_invocations"] += rep.batcher.decode_invocations
+        self._detached_stats["kv_bytes"] += rep.channel.bytes_sent
+        self._detached_stats["kv_transfers"] += rep.channel.transfers
+        self._detached_stats["kv_seconds"] += rep.channel.seconds
+        n = 0
+        for req in rep.inflight.values():
+            self._requeue(req)
+            n += 1
+        rep.inflight.clear()
+        for slot, req in enumerate(rep.batcher.slot_req):
+            if req is not None:
+                rep.batcher.slot_req[slot] = None
+                self._requeue(req)
+                n += 1
+        if rep.channel.open:
+            rep.channel.close()
+        return n
+
+    def _refresh_prefill(self) -> bool:
+        """Rebind to a prefill cell the supervisor replaced under us.
+
+        A recover/recreate leaves ``self.prefill_cell`` pointing at the
+        dead object: the worker would keep computing on the released
+        zone, the NEW cell would never heartbeat (and be re-marked
+        failed forever), and every KV channel would stay closed.  When
+        the supervisor holds a different live cell under the same name,
+        fan the weights back out to it and rebuild the worker.  The
+        replicas' channels (bound to the old cell, closed by the
+        recover) are reaped right after, and sync re-attaches them over
+        the reconcile-opened fresh channels.
+        """
+        live = self.sup.cells.get(self.prefill_cell.name)
+        if (live is self.prefill_cell or live is None
+                or live.status in ("failed", "destroyed")):
+            return False
+        if live.serve_params is None:
+            src = next((rep.cell.name for rep in self.replicas
+                        if rep.cell.serve_params is not None
+                        and rep.cell.status == "running"), None)
+            if src is None:
+                return False        # no weight source yet; retry later
+            self._sync_weights(live.name, src)
+        self.prefill_cell = live
+        self.worker = PrefillWorker(
+            live, max_len=self.max_len, chunk=self.chunk,
+            temperature=self.temperature,
+        )
+        return True
+
+    def _reap_failed(self) -> int:
+        """Detach replicas whose cell died under us (failed / destroyed /
+        replaced by a recover) — their orphaned requests go back onto
+        ``pending`` instead of leaking while ``_busy()`` spins forever."""
+        self._refresh_prefill()
+        n = 0
+        for rep in list(self.replicas):
+            if not self._alive(rep):
+                n += self._detach(rep)
+        return n
+
+    def _alive(self, rep: _DecodeReplica) -> bool:
+        return (self.sup.cells.get(rep.cell.name) is rep.cell
+                and rep.cell.status not in ("failed", "destroyed")
+                and rep.channel.open)
+
+    def sync(self, spec, decode_spec: Optional[str] = None) -> dict:
+        """Converge the replica set to ``spec`` (live attach/detach).
+
+        Call after any reconcile that may have changed the decode spec's
+        ``replicas`` or recovered a failed instance.  Replicas the spec
+        no longer names (or whose cell object went stale) are detached —
+        their requests requeue onto ``pending`` — and spec instances
+        that exist as running cells but are not yet serving are attached
+        (KV channel + weight fan-out + fresh batcher).  Cells the
+        reconciler has not materialized yet are picked up by a later
+        sync.  Returns ``{"attached": [...], "detached": [...],
+        "requeued": n}``.
+        """
+        base = decode_spec or self._decode_base
+        self._refresh_prefill()
+        desired: List[str] = []
+        if spec is not None and spec.has_cell(base):
+            desired = spec.cell(base).instances()
+        attached, detached, requeued = [], [], 0
+        for rep in list(self.replicas):
+            name = rep.cell.name
+            if name in desired and self._alive(rep):
+                continue
+            requeued += self._detach(rep)
+            detached.append(name)
+        current = {rep.cell.name for rep in self.replicas}
+        for name in desired:
+            cell = self.sup.cells.get(name)
+            if (name in current or cell is None
+                    or cell.status in ("failed", "destroyed")):
+                continue
+            if self._attach(name) is not None:
+                attached.append(name)
+        return {"attached": attached, "detached": detached,
+                "requeued": requeued}
 
     # -- legacy single-replica surface ---------------------------------
     @property
@@ -238,6 +422,7 @@ class DisaggServer:
         Unservable prompts (empty, or longer than the decode cache) are
         finished immediately with empty output rather than poisoning the
         loop — one bad request must not stall every other request."""
+        self._reap_failed()
         capacity = {i: r.free_capacity() for i, r in enumerate(self.replicas)}
         budget = sum(c for c in capacity.values() if c > 0)
         taking: List[Request] = []
@@ -281,6 +466,10 @@ class DisaggServer:
         """One scheduler tick: pump the handoff, then one decode step on
         every replica with busy slots."""
         self.pump()
+        # the prefill cell is alive as long as this loop drives it — it
+        # must not go heartbeat-stale (and get spuriously recovered by a
+        # daemon) just because a long decode phase has nothing to prefill
+        self.prefill_cell.heartbeat()
         n = 0
         for rep in self.replicas:
             n += rep.batcher.step()
@@ -295,30 +484,45 @@ class DisaggServer:
                    for r in rep.batcher.slot_req)
         )
 
-    def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
+    def run_until_drained(self, max_steps: int = 100_000,
+                          on_step=None) -> List[Request]:
+        """Step until no request is pending, in flight, or slotted.
+
+        ``on_step`` (e.g. ``SupervisorDaemon.tick``) runs after every
+        scheduler tick — the hook that lets health checks, reconcile and
+        replica re-attach interleave with live traffic."""
         steps = 0
         while self._busy() and steps < max_steps:
             self.step()
+            if on_step is not None:
+                on_step()
             steps += 1
         return self.done
 
     @property
     def done(self) -> List[Request]:
-        out: List[Request] = list(self.rejected)
+        out: List[Request] = list(self.rejected) + list(self._done_detached)
         for rep in self.replicas:
             out.extend(rep.batcher.done)
         return out
 
     def stats(self) -> dict:
         from repro.core.accounting import summarize_requests
+        ds = self._detached_stats
         return {
             "decode_serving": summarize_requests(self.done),
             "prefill_invocations": self.worker.invocations,
-            "decode_invocations": sum(r.batcher.decode_invocations
-                                      for r in self.replicas),
-            "kv_bytes": sum(r.channel.bytes_sent for r in self.replicas),
-            "kv_transfers": sum(r.channel.transfers for r in self.replicas),
-            "kv_seconds": sum(r.channel.seconds for r in self.replicas),
+            "decode_invocations": ds["decode_invocations"] + sum(
+                r.batcher.decode_invocations for r in self.replicas),
+            "kv_bytes": ds["kv_bytes"] + sum(
+                r.channel.bytes_sent for r in self.replicas),
+            "kv_transfers": ds["kv_transfers"] + sum(
+                r.channel.transfers for r in self.replicas),
+            "kv_seconds": ds["kv_seconds"] + sum(
+                r.channel.seconds for r in self.replicas),
             "replicas": len(self.replicas),
             "per_replica_requests": [len(r.batcher.done) for r in self.replicas],
+            "requests_detached": ds["requests"],
+            "pending": len(self.pending),
+            "requeued": self.requeued,
         }

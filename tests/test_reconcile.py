@@ -9,10 +9,13 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 import pytest
 
 from benchmarks.simlib import SimCell, SimSupervisor
+from repro.core.daemon import SupervisorDaemon
+from repro.core.elastic import ElasticPolicy, ReconcilePolicy
 from repro.core.spec import (
     CellSpec,
     ChannelSpec,
@@ -40,6 +43,23 @@ def test_cellspec_validation():
     with pytest.raises(SpecError):
         ClusterSpec(cells=(CellSpec("a", None, "serve"),),
                     channels=(ChannelSpec("a", "ghost"),))
+
+
+def test_replica_bounds_validation_and_clamping():
+    with pytest.raises(SpecError):
+        CellSpec("a", None, "serve", replicas=4, max_replicas=2)
+    with pytest.raises(SpecError):
+        CellSpec("a", None, "serve", replicas=1, min_replicas=2)
+    with pytest.raises(SpecError):
+        CellSpec("a", None, "serve", min_replicas=0)
+    c = CellSpec("a", None, "serve", replicas=2, min_replicas=1, max_replicas=4)
+    assert c.clamp_replicas(9) == 4 and c.clamp_replicas(0) == 1
+    assert c.with_replicas(3).replicas == 3
+    spec = ClusterSpec(cells=(c,))
+    s2, d = spec.scale_replicas_by("a", 10)
+    assert d == 2 and s2.cell("a").replicas == 4
+    _, d = s2.scale_replicas_by("a", 1)
+    assert d == 0                                   # pinned at max
 
 
 def test_spec_instances_and_scaling():
@@ -221,6 +241,278 @@ def test_reconcile_expands_replicas():
     plan = sup.apply(ClusterSpec(cells=(
         CellSpec("dec", None, "serve", ncols=1, replicas=2),)))
     assert [(op.verb, op.cell) for op in plan.ops] == [("destroy", "dec/2")]
+
+
+# ---------------------------------------------------------------------------
+# elastic policy: validation, SLO-derived bands, cursor identity, replicas
+# ---------------------------------------------------------------------------
+def test_elastic_policy_validates_metric_and_band():
+    """Regression: a metric typo ('tftt') used to make pull() ingest None
+    forever and silently disable elasticity."""
+    with pytest.raises(ValueError):
+        ElasticPolicy(lt=0.1, ut=0.2, metric="tftt")
+    with pytest.raises(ValueError):
+        ElasticPolicy(lt=0.3, ut=0.2)               # empty band
+    with pytest.raises(ValueError):
+        ElasticPolicy(lt=0.1, ut=0.2, window=0)
+
+
+def test_elastic_policy_from_slo_band_derivation():
+    slo = SLOTarget(ttft_p99=0.2, tpot_p99=0.05)
+    p = ElasticPolicy.from_slo(slo, metric="ttft", hysteresis=0.8)
+    assert (p.lt, p.ut, p.metric) == (pytest.approx(0.16), 0.2, "ttft")
+    p = ElasticPolicy.from_slo(slo, metric="tpot", hysteresis=0.5, window=20)
+    assert (p.lt, p.ut, p.window) == (0.025, 0.05, 20)
+    with pytest.raises(ValueError):                  # no target declared
+        ElasticPolicy.from_slo(SLOTarget(ttft_p99=0.2), metric="tpot")
+    with pytest.raises(ValueError):
+        ElasticPolicy.from_slo(None, metric="ttft")
+    with pytest.raises(ValueError):
+        ElasticPolicy.from_slo(slo, hysteresis=1.5)
+
+
+def test_pull_cursor_keyed_on_accounting_identity():
+    """Regression: a recovered cell's FRESH log that already grew past the
+    old cursor was silently skipped (len(reqs) >= stale cursor)."""
+    from repro.core.accounting import CellAccounting
+
+    sup = _sup(server=2, batch=2)
+    sup.apply(ClusterSpec(cells=(
+        CellSpec("server", None, "serve", ncols=2, min_ncols=1, max_ncols=4),
+        CellSpec("batch", None, "train", ncols=2, min_ncols=1, max_ncols=4),
+    )))
+    pol = ReconcilePolicy(sup, "server", "batch",
+                          ElasticPolicy(lt=0.1, ut=0.2, window=10))
+    for i in range(3):
+        sup.cells["server"].accounting.record_request(i, ttft=0.15)
+    assert pol.pull() == 3
+    # recovery swaps in a fresh accounting; its log grows PAST the old
+    # cursor (5 > 3) before the next pull
+    sup.cells["server"].accounting = CellAccounting("server")
+    for i in range(5):
+        sup.cells["server"].accounting.record_request(i, ttft=0.15)
+    assert pol.pull() == 5                # length heuristic would read 2
+
+
+def test_recover_threads_ckpt_dir_from_spec():
+    """The spec's ckpt_dir must ride the recover plan op into
+    recover_cell (reconcile-driven checkpoint restore)."""
+    sup = _sup(a=2)
+    sup.cells["a"].status = "failed"
+    spec = ClusterSpec(cells=(
+        CellSpec("a", None, "serve", ncols=2, max_ncols=2,
+                 ckpt_dir="/ckpts/a"),))
+    plan = sup.apply(spec)
+    assert [op.verb for op in plan.ops] == ["recover"]
+    assert plan.ops[0].args["ckpt_dir"] == "/ckpts/a"
+    assert ("recover", "a", 2, "/ckpts/a") in sup.log
+
+
+def test_replica_autoscale_from_queue_and_tpot_tail():
+    sup = _sup()
+    sup.apply(ClusterSpec(cells=(
+        CellSpec("dec", None, "serve", ncols=1, replicas=1, max_replicas=3),)))
+    q = {"n": 0}
+    pol = ReconcilePolicy(
+        sup, "dec",
+        replica_policy=ElasticPolicy(lt=0.05, ut=0.2, window=10,
+                                     metric="tpot"),
+        queue_depth=lambda: q["n"], queue_high=4)
+    # queue pressure alone grows — decode samples may not flow at all
+    # while every replica is saturated or dead
+    q["n"] = 10
+    act = pol.maybe_act(now=0.0)
+    assert act and act["kind"] == "grow_replicas" and act["queue_depth"] == 10
+    assert sup.desired.cell("dec").replicas == 2
+    assert set(sup.cells) == {"dec/0", "dec/1"}
+    # TPOT tail above the band grows again
+    q["n"] = 0
+    for i in range(10):
+        sup.cells["dec/0"].accounting.record_request(i, tpot=0.5)
+    act = pol.maybe_act(now=1.0)
+    assert act and act["kind"] == "grow_replicas"
+    assert sup.desired.cell("dec").replicas == 3
+    assert set(sup.cells) == {"dec/0", "dec/1", "dec/2"}
+    # pinned at max_replicas: tail pressure changes nothing
+    for i in range(10, 20):
+        sup.cells["dec/0"].accounting.record_request(i, tpot=0.5)
+    assert pol.maybe_act(now=2.0) is None
+    assert sup.desired.cell("dec").replicas == 3
+    # idle queue + comfortably low tail shrinks back
+    for i in range(20, 32):
+        sup.cells["dec/1"].accounting.record_request(i, tpot=0.01)
+    act = pol.maybe_act(now=3.0)
+    assert act and act["kind"] == "shrink_replicas"
+    assert sup.desired.cell("dec").replicas == 2
+    assert sup.reconcile().empty
+
+
+def test_replica_autoscale_never_crosses_rename_boundary():
+    """Bounded specs keep indexed names at replicas==1, so a 2 -> 1
+    shrink destroys ONLY the surplus instance; an UNBOUNDED spec would
+    rename ('dec/i' <-> 'dec') — a full teardown — so autoscale refuses
+    to cross that boundary and leaves it to an explicit apply()."""
+    sup = _sup()
+    sup.apply(ClusterSpec(cells=(
+        CellSpec("dec", None, "serve", ncols=1, replicas=2, max_replicas=3),)))
+    pol = ReconcilePolicy(
+        sup, "dec",
+        replica_policy=ElasticPolicy(lt=0.05, ut=0.2, window=10,
+                                     metric="tpot"),
+        queue_depth=lambda: 0)
+    for i in range(10):
+        sup.cells["dec/0"].accounting.record_request(i, tpot=0.01)
+    act = pol.maybe_act(now=0.0)
+    assert act and act["kind"] == "shrink_replicas"
+    assert sup.desired.cell("dec").replicas == 1
+    assert set(sup.cells) == {"dec/0"}           # dec/0 survived untouched
+    assert ("destroy", "dec/0") not in sup.log
+    # grow back: add dec/1, never tear dec/0 down
+    for i in range(10, 22):
+        sup.cells["dec/0"].accounting.record_request(i, tpot=0.5)
+    act = pol.maybe_act(now=1.0)
+    assert act and act["kind"] == "grow_replicas"
+    assert set(sup.cells) == {"dec/0", "dec/1"}
+    assert sup.log.count(("destroy", "dec/0")) == 0
+
+    # UNBOUNDED spec: 2 -> 1 would rename dec/i -> dec; guarded
+    sup2 = _sup()
+    sup2.apply(ClusterSpec(cells=(
+        CellSpec("dec", None, "serve", ncols=1, replicas=2),)))
+    pol2 = ReconcilePolicy(
+        sup2, "dec",
+        replica_policy=ElasticPolicy(lt=0.05, ut=0.2, window=10,
+                                     metric="tpot"),
+        queue_depth=lambda: 0)
+    for i in range(10):
+        sup2.cells["dec/0"].accounting.record_request(i, tpot=0.01)
+    assert pol2.maybe_act(now=0.0) is None
+    assert sup2.desired.cell("dec").replicas == 2
+    assert set(sup2.cells) == {"dec/0", "dec/1"}
+
+
+def test_reconcile_policy_requires_an_axis():
+    sup = _sup()
+    with pytest.raises(ValueError):
+        ReconcilePolicy(sup, "a")                    # no axis at all
+    with pytest.raises(ValueError):
+        ReconcilePolicy(sup, "a", None,              # cols axis, no donor
+                        ElasticPolicy(lt=0.1, ut=0.2))
+
+
+# ---------------------------------------------------------------------------
+# supervisor daemon (bookkeeping supervisor: pure control-loop logic)
+# ---------------------------------------------------------------------------
+class _RecordingSup(SimSupervisor):
+    def __init__(self, *cells):
+        super().__init__(*cells)
+        self.calls = []
+        self.dead_once = []
+
+    def check_health(self):
+        self.calls.append("health")
+        out, self.dead_once = self.dead_once, []
+        return out
+
+    def reconcile(self):
+        self.calls.append("reconcile")
+        return super().reconcile()
+
+
+def test_daemon_tick_ordering_and_dead_cell_recovery():
+    sup = _RecordingSup(SimCell("a", 2))
+    sup.apply(ClusterSpec(cells=(
+        CellSpec("a", None, "serve", ncols=2, max_ncols=2),)))
+
+    calls = sup.calls
+
+    class _FakePolicy:
+        actions = []
+
+        def maybe_act(self, now=None):
+            calls.append("policy")
+            return None
+
+    class _FakeSrv:
+        _decode_base = "a"
+
+        def sync(self, spec, base=None):
+            calls.append("sync")
+            return {"attached": [], "detached": [], "requeued": 0}
+
+    daemon = SupervisorDaemon(sup)
+    daemon.add_policy(_FakePolicy())
+    daemon.attach_server(_FakeSrv())
+    sup.dead_once = ["a"]                 # heartbeat timed out before tick 0
+    calls.clear()
+    rec = daemon.tick()
+    # strict stage order: health feeds reconcile feeds policies feeds sync
+    assert calls == ["health", "reconcile", "policy", "sync"]
+    assert rec["dead"] == ["a"]
+    assert rec["plan"] == "recover:1"     # recovered within the SAME tick
+    assert sup.cells["a"].status == "running"
+    # converged: the next tick is a noop
+    rec = daemon.tick()
+    assert rec["dead"] == [] and rec["plan"] == "noop"
+    assert daemon.ticks == 2 and len(daemon.history) == 2
+
+
+def test_daemon_slo_policy_derives_bands_from_spec():
+    sup = _sup(srv=2, don=4)
+    sup.apply(ClusterSpec(cells=(
+        CellSpec("srv", None, "serve", ncols=2, min_ncols=1, max_ncols=6,
+                 slo=SLOTarget(ttft_p99=0.2, tpot_p99=0.05)),
+        CellSpec("don", None, "train", ncols=4, min_ncols=1, max_ncols=6),
+    )))
+    daemon = SupervisorDaemon(sup)
+    pol = daemon.add_slo_policy("srv", "don", hysteresis=0.8,
+                                autoscale_replicas=True)
+    assert (pol.policy.lt, pol.policy.ut) == (pytest.approx(0.16), 0.2)
+    assert (pol.replica_policy.lt, pol.replica_policy.ut) == \
+        (pytest.approx(0.04), 0.05)
+    assert pol.replica_policy.metric == "tpot"
+    # the derived policy acts end to end through a daemon tick
+    for i in range(10):
+        sup.cells["srv"].accounting.record_request(i, ttft=0.5)
+    rec = daemon.tick(now=0.0)
+    assert [a["kind"] for a in rec["actions"]] == ["grow_server"]
+    assert sup.cells["srv"].zone.ncols == 3
+    # re-applying a spec with a CHANGED SLO re-derives the bands — the
+    # objective is the spec's, never frozen at registration time
+    import dataclasses
+    sup.apply(sup.desired.with_cell(dataclasses.replace(
+        sup.desired.cell("srv"), slo=SLOTarget(ttft_p99=0.1, tpot_p99=0.02))))
+    daemon.tick(now=100.0)
+    assert (pol.policy.lt, pol.policy.ut) == (pytest.approx(0.08), 0.1)
+    assert pol.replica_policy.ut == 0.02
+    # unknown cell / missing SLO are loud errors, not silent zero-bands
+    with pytest.raises(ValueError):
+        daemon.add_slo_policy("ghost", "don")
+    sup2 = _sup(x=1)
+    sup2.apply(ClusterSpec(cells=(
+        CellSpec("x", None, "serve", ncols=1, max_ncols=1),)))
+    with pytest.raises(ValueError):
+        SupervisorDaemon(sup2).add_slo_policy("x", autoscale_replicas=True)
+
+
+def test_daemon_threaded_start_stop():
+    sup = _sup(a=1)
+    sup.apply(ClusterSpec(cells=(
+        CellSpec("a", None, "serve", ncols=1, max_ncols=1),)))
+    daemon = SupervisorDaemon(sup, interval=0.005)
+    with daemon:
+        assert daemon.running
+        with pytest.raises(RuntimeError):
+            daemon.start()                # double-start is an error
+        deadline = time.monotonic() + 5.0
+        while daemon.ticks == 0 and time.monotonic() < deadline:
+            time.sleep(0.005)
+    assert not daemon.running
+    assert daemon.ticks >= 1
+    assert not daemon.errors
+    ticks_at_stop = daemon.ticks
+    time.sleep(0.03)
+    assert daemon.ticks == ticks_at_stop  # really stopped
 
 
 # ---------------------------------------------------------------------------

@@ -295,6 +295,260 @@ def test_decode_replica_fanout(model_and_params):
     assert {i: done[i].output for i in done} == ref
 
 
+def test_failed_replica_requeues_orphans(model_and_params):
+    """Regression: a decode replica dying mid-flight used to leak its
+    inflight/slotted requests — _busy() stayed true and
+    run_until_drained spun to max_steps doing nothing.  The orphans must
+    requeue onto pending and finish on the surviving replica."""
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=3,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    sup.create_cell("prefill", cfg, "serve", ncols=1)
+    sup.create_cell("dec0", cfg, "serve", ncols=1).init_serve(
+        rng=jax.random.PRNGKey(0))
+    sup.create_cell("dec1", cfg, "serve", ncols=1)
+    srv = DisaggServer(sup, "prefill", ["dec0", "dec1"], batch_slots=2,
+                       max_len=MAX_LEN, chunk=16)
+    prompts = _prompts(cfg.vocab, [9, 33, 17, 21, 40, 12])
+    for r in _requests(prompts, max_new=4):
+        srv.submit(r)
+    srv.step()
+    srv.step()                           # both replicas now hold live slots
+    victim = srv.replicas[1].cell
+    assert any(s is not None for s in srv.replicas[1].batcher.slot_req)
+    sup.fail_column(0, victim.zone.c0)   # kill dec1's column mid-decode
+    done = {r.rid: r for r in srv.run_until_drained(max_steps=2_000)}
+    assert set(done) == set(range(len(prompts)))          # nothing lost
+    assert all(len(done[i].output) == 4 for i in done)    # fully served
+    assert [rep.cell.name for rep in srv.replicas] == ["dec0"]
+    assert srv.requeued >= 1             # the orphans went back to pending
+    assert not srv.pending and not srv.replicas[0].inflight
+    # stats keep the detached replica's history: every prefilled request
+    # crossed a KV channel exactly once (originals + requeued re-sends)
+    st = srv.stats()
+    assert st["kv_transfers"] == len(prompts) + srv.requeued
+    assert st["requests_detached"] + sum(st["per_replica_requests"]) == \
+        len(prompts)
+
+
+def test_sync_attach_detach_roundtrip(model_and_params):
+    """Scale the decode spec 3 -> 2 -> 3: sync detaches the vanished
+    instance (requeueing what it held) and re-attaches the recreated one
+    (fresh KV channel + weight fan-out + batcher); every request
+    finishes."""
+    import dataclasses
+
+    from repro.core import CellSpec, ChannelSpec, ClusterSpec
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=4,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    spec = ClusterSpec(
+        cells=(CellSpec("prefill", cfg, "serve", ncols=1),
+               CellSpec("decode", cfg, "serve", ncols=1, replicas=3,
+                        min_replicas=1, max_replicas=3)),
+        channels=(ChannelSpec("prefill", "decode", kind="kv"),),
+    )
+    sup.apply(spec)
+    sup.cells["decode/0"].init_serve(rng=jax.random.PRNGKey(0))
+    srv = DisaggServer(sup, "prefill", spec.cell("decode").instances(),
+                       batch_slots=2, max_len=MAX_LEN, chunk=16)
+    for r in _requests(_prompts(cfg.vocab, [9, 33, 17, 21]), max_new=4):
+        srv.submit(r)
+    hb_before = srv.prefill_cell.last_heartbeat
+    srv.step()                           # spread slots across replicas
+    # a serving step keeps the PREFILL cell's heartbeat fresh too — else
+    # a daemon would spuriously recover it during long decode phases
+    assert srv.prefill_cell.last_heartbeat > hb_before
+    held = sum(1 for s in srv.replicas[2].batcher.slot_req if s is not None)
+    assert held >= 1                     # the victim holds live requests
+
+    # scale down: reconcile destroys decode/2, sync detaches + requeues
+    sup.apply(sup.desired.with_cell(
+        dataclasses.replace(sup.desired.cell("decode"), replicas=2)))
+    out = srv.sync(sup.desired)
+    assert out["detached"] == ["decode/2"] and out["requeued"] == held
+    assert sorted(r.cell.name for r in srv.replicas) == ["decode/0", "decode/1"]
+
+    # scale back up: reconcile recreates decode/2, sync re-attaches it
+    sup.apply(sup.desired.with_cell(
+        dataclasses.replace(sup.desired.cell("decode"), replicas=3)))
+    out = srv.sync(sup.desired)
+    assert out["attached"] == ["decode/2"]
+    rep = srv.replicas[-1]
+    assert rep.cell is sup.cells["decode/2"]
+    assert rep.cell.serve_params is not None          # weight fan-out ran
+    assert sup.find_channel("prefill", "decode/2", "kv") is rep.channel
+    done = {r.rid: r.output for r in srv.run_until_drained(max_steps=2_000)}
+    assert set(done) == {0, 1, 2, 3}
+    assert all(len(v) == 4 for v in done.values())
+
+
+def test_recover_serve_role_restores_params(model_and_params, tmp_path):
+    """Regression: recover_cell(ckpt_dir=...) used to build a TRAIN state
+    target even for role='serve' cells (leaf-count mismatch), and an
+    empty ckpt_dir skipped restore with no trace."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    model, _ = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=2,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    cell = sup.create_cell("srv", cfg, "serve", ncols=1)
+    cell.init_serve(rng=jax.random.PRNGKey(0))
+    ref = [np.asarray(x) for x in jax.tree.leaves(cell.serve_params)]
+    ckpt.save(str(tmp_path), 7, cell.serve_params)
+
+    cell.status = "failed"
+    rec = sup.recover_cell("srv", ckpt_dir=str(tmp_path))
+    assert rec.status == "running" and rec.step == 7
+    got = [np.asarray(x) for x in jax.tree.leaves(rec.serve_params)]
+    assert len(ref) == len(got)
+    assert all(np.array_equal(a, b) for a, b in zip(ref, got))
+    assert any(e["op"] == "restore_ckpt" for e in sup.events)
+
+    # no checkpoint at the declared dir: loud event, cell back empty
+    rec.status = "failed"
+    rec2 = sup.recover_cell("srv", ckpt_dir=str(tmp_path / "empty"))
+    assert rec2.serve_params is None
+    assert any(e["op"] == "recover_no_ckpt" for e in sup.events)
+
+
+def test_daemon_e2e_kill_recover_reattach(model_and_params, tmp_path):
+    """Acceptance: with traffic flowing, fail_column on a decode replica
+    -> the daemon recovers the cell (checkpoint-restored via the spec's
+    ckpt_dir), DisaggServer.sync re-attaches it, no request is lost and
+    the SLO tail reconverges — zero direct primitive calls here."""
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.core import (
+        CellSpec,
+        ChannelSpec,
+        ClusterSpec,
+        SLOTarget,
+        SupervisorDaemon,
+    )
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=4,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    slo = SLOTarget(ttft_p99=60.0, tpot_p99=60.0)    # generous: CI wall-clock
+    spec = ClusterSpec(
+        cells=(CellSpec("prefill", cfg, "serve", ncols=1),
+               CellSpec("decode", cfg, "serve", ncols=1, replicas=2,
+                        min_replicas=2, max_replicas=2, slo=slo,
+                        ckpt_dir=str(tmp_path))),
+        channels=(ChannelSpec("prefill", "decode", kind="kv"),),
+    )
+    sup.apply(spec)                      # 1 spare column for recovery
+    sup.cells["decode/0"].init_serve(rng=jax.random.PRNGKey(0))
+    srv = DisaggServer(sup, "prefill", spec.cell("decode").instances(),
+                       batch_slots=2, max_len=MAX_LEN, chunk=16)
+    ckpt.save(str(tmp_path), 3, sup.cells["decode/0"].serve_params)
+
+    daemon = SupervisorDaemon(sup)
+    daemon.attach_server(srv)
+    pol = daemon.add_slo_policy("decode", autoscale_replicas=True,
+                                queue_depth=lambda: len(srv.pending),
+                                queue_high=64)
+
+    prompts = _prompts(cfg.vocab, [9, 33, 17, 21, 40, 12, 28, 35])
+    for r in _requests(prompts, max_new=4):
+        srv.submit(r)
+    for _ in range(2):                   # traffic flows, daemon in the loop
+        srv.step()
+        daemon.tick()
+    victim = srv.replicas[1].cell
+    affected = sup.fail_column(0, victim.zone.c0)     # the fault, not an op
+    assert victim.name in affected
+
+    done = {r.rid: r for r in srv.run_until_drained(max_steps=2_000,
+                                                    on_step=daemon.tick)}
+    # no request lost, every one fully served
+    assert set(done) == set(range(len(prompts)))
+    assert all(len(done[i].output) == 4 for i in done)
+    # daemon recovered the cell and sync re-attached it
+    assert sorted(rep.cell.name for rep in srv.replicas) == \
+        ["decode/0", "decode/1"]
+    assert sup.cells[victim.name] is not victim       # fresh cell object
+    assert all(rep.cell.status == "running" for rep in srv.replicas)
+    ops = [e["op"] for e in sup.events]
+    assert "recover" in ops or "create" in ops[ops.index("fail_column"):]
+    # ...with its params restored from the declared ckpt_dir
+    assert any(e["op"] == "restore_ckpt" and e["cell"] == victim.name
+               for e in sup.events)
+    # SLO tail reconverged: fresh post-recovery traffic lands inside the
+    # declared objective
+    for i, p in enumerate(_prompts(cfg.vocab, [11, 22], seed=1)):
+        srv.submit(Request(rid=100 + i, prompt=p, max_new_tokens=4))
+    srv.run_until_drained(max_steps=2_000, on_step=daemon.tick)
+    pol.pull()
+    tail = pol.replica_tail()
+    assert tail is not None and tail < slo.tpot_p99
+    # the whole episode ran through the declarative plane: reconcile is
+    # converged and nothing outside core/ touched a primitive
+    assert sup.reconcile().empty
+
+
+def test_daemon_recovers_prefill_cell(model_and_params):
+    """A recovered PREFILL cell must be rebound (weight fan-out + fresh
+    worker), not left computing on the dead cell's released zone while
+    the new cell never heartbeats and thrashes failed forever."""
+    from repro.core import (
+        CellSpec,
+        ChannelSpec,
+        ClusterSpec,
+        SupervisorDaemon,
+    )
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=4,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    spec = ClusterSpec(
+        cells=(CellSpec("prefill", cfg, "serve", ncols=1),
+               CellSpec("decode", cfg, "serve", ncols=1, replicas=2,
+                        min_replicas=2, max_replicas=2)),
+        channels=(ChannelSpec("prefill", "decode", kind="kv"),),
+    )
+    sup.apply(spec)
+    sup.cells["decode/0"].init_serve(rng=jax.random.PRNGKey(0))
+    srv = DisaggServer(sup, "prefill", spec.cell("decode").instances(),
+                       batch_slots=2, max_len=MAX_LEN, chunk=16)
+    daemon = SupervisorDaemon(sup)
+    daemon.attach_server(srv)
+    prompts = _prompts(cfg.vocab, [9, 33, 17, 21])
+    for r in _requests(prompts, max_new=4):
+        srv.submit(r)
+    srv.step()
+    daemon.tick()
+    old_prefill = srv.prefill_cell
+    sup.fail_column(0, old_prefill.zone.c0)       # kill the PREFILL column
+    done = {r.rid: r for r in srv.run_until_drained(max_steps=2_000,
+                                                    on_step=daemon.tick)}
+    assert set(done) == set(range(len(prompts)))
+    assert all(len(done[i].output) == 4 for i in done)
+    assert srv.prefill_cell is not old_prefill    # rebound to the new cell
+    assert srv.prefill_cell is sup.cells["prefill"]
+    assert srv.worker.cell is srv.prefill_cell
+    assert srv.prefill_cell.serve_params is not None
+    assert sorted(rep.cell.name for rep in srv.replicas) == \
+        ["decode/0", "decode/1"]
+    assert sup.reconcile().empty
+
+
 def test_disagg_unservable_prompts_do_not_stall_the_loop(model_and_params):
     """An empty or cache-overflowing prompt must finish (empty output)
     instead of raising mid-pump and starving every other request."""
