@@ -10,10 +10,17 @@ test:
 lint:
 	ruff check src tests benchmarks examples
 
+# one registered config per family — a reintroduced family gate in the
+# serving plane fails this sweep fast
+BENCH_FAMILY_ARCHS := qwen3-4b mixtral-8x7b mamba2-2.7b zamba2-2.7b seamless-m4t-large-v2
+
 # CI-friendly benchmark smoke: colocated-vs-disaggregated serving latency
-# (small shapes) + the daemon-driven elastic scheduling trace (short)
+# (small shapes, swept over one config per family: dense, moe, ssm,
+# hybrid, encdec) + the daemon-driven elastic scheduling trace (short)
 bench-smoke:
-	PYTHONPATH=$(PYTHONPATH) python benchmarks/disagg_serving.py --smoke
+	for arch in $(BENCH_FAMILY_ARCHS); do \
+		PYTHONPATH=$(PYTHONPATH) python benchmarks/disagg_serving.py --smoke --arch $$arch || exit 1; \
+	done
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.elastic_sched --smoke
 
 # full benchmark harness (paper tables/figures)

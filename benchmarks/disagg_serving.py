@@ -17,7 +17,11 @@ tail crosses the upper threshold the policy rescales the ClusterSpec and
 prefill cell to the decode cell (live reshard on both) — the Fig 10/11
 elasticity loop applied to the serving split.
 
-Run:  PYTHONPATH=src python benchmarks/disagg_serving.py [--smoke]
+Run:  PYTHONPATH=src python benchmarks/disagg_serving.py [--smoke] [--arch NAME]
+
+``--arch`` accepts any registered config (smoke-reduced here); every family
+— dense, moe, ssm, hybrid, encdec — runs the same chunked/disaggregated
+path, and ``make bench-smoke`` sweeps one config per family.
 """
 from __future__ import annotations
 
@@ -49,7 +53,7 @@ def _summarize(reqs) -> dict:
     }
 
 
-def run(rows: List[dict], smoke: bool = True):
+def run(rows: List[dict], smoke: bool = True, arch: str = "qwen3-4b"):
     import jax
 
     from repro.configs.base import smoke_config
@@ -65,7 +69,8 @@ def run(rows: List[dict], smoke: bool = True):
     from repro.serve.batcher import ContinuousBatcher
     from repro.serve.disagg import DisaggServer
 
-    cfg = smoke_config(get_arch("qwen3-4b"))
+    cfg = smoke_config(get_arch(arch))
+    tag = f"disagg_serving[{arch}]" if arch != "qwen3-4b" else "disagg_serving"
     max_len, chunk, max_new = (64, 16, 4) if smoke else (256, 32, 16)
     lens = [33, 40, 35, 48] if smoke else [64, 100, 80, 120, 90, 64, 110, 72]
     slots = 4
@@ -99,7 +104,7 @@ def run(rows: List[dict], smoke: bool = True):
     base_prompt_invocations = sum(len(r.prompt) for r in reqs)  # 1/token
     s = _summarize(reqs)
     rows.append({
-        "name": "disagg_serving/token_at_a_time/ttft_p99",
+        "name": f"{tag}/token_at_a_time/ttft_p99",
         "us_per_call": s["ttft_p99_ms"] * 1e3,
         "derived": (
             f"p50={s['ttft_p50_ms']:.1f}ms tpot={s['tpot_p50_ms']:.1f}ms "
@@ -120,7 +125,7 @@ def run(rows: List[dict], smoke: bool = True):
     reduction = (base_prompt_invocations / len(reqs)) / inv_per_prompt
     s = _summarize(reqs)
     rows.append({
-        "name": "disagg_serving/colocated_chunked/ttft_p99",
+        "name": f"{tag}/colocated_chunked/ttft_p99",
         "us_per_call": s["ttft_p99_ms"] * 1e3,
         "derived": (
             f"p50={s['ttft_p50_ms']:.1f}ms tpot={s['tpot_p50_ms']:.1f}ms "
@@ -152,7 +157,7 @@ def run(rows: List[dict], smoke: bool = True):
     st = srv.stats()
     s = _summarize(reqs)
     rows.append({
-        "name": "disagg_serving/disaggregated/ttft_p99",
+        "name": f"{tag}/disaggregated/ttft_p99",
         "us_per_call": s["ttft_p99_ms"] * 1e3,
         "derived": (
             f"p50={s['ttft_p50_ms']:.1f}ms tpot={s['tpot_p50_ms']:.1f}ms "
@@ -161,7 +166,7 @@ def run(rows: List[dict], smoke: bool = True):
         ),
     })
     rows.append({
-        "name": "disagg_serving/wall_clock",
+        "name": f"{tag}/wall_clock",
         "us_per_call": disagg_wall * 1e6,
         "derived": (
             f"token_at_a_time={base_wall:.2f}s chunked={chunk_wall:.2f}s "
@@ -185,7 +190,7 @@ def run(rows: List[dict], smoke: bool = True):
         act = sched.maybe_act()
         dt = time.perf_counter() - t0
         rows.append({
-            "name": "disagg_serving/elastic_transfer",
+            "name": f"{tag}/elastic_transfer",
             "us_per_call": dt * 1e6,
             "derived": (
                 f"action={act['kind'] if act else 'none'} "
@@ -200,13 +205,17 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes + short prompts for CI")
+    ap.add_argument("--arch", default="qwen3-4b",
+                    help="registered arch to serve (smoke-reduced); the CI "
+                         "smoke sweeps one config per family so a "
+                         "reintroduced family gate fails fast")
     args = ap.parse_args(argv)
     # standalone entry: 8 virtual host devices so multi-column cells and
     # the elastic transfer are real (must be set before jax initializes)
     import os
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
     rows: List[dict] = []
-    run(rows, smoke=args.smoke)
+    run(rows, smoke=args.smoke, arch=args.arch)
     print("name,us_per_call,derived")
     for r in rows:
         d = str(r["derived"]).replace(",", ";")

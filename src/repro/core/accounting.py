@@ -126,6 +126,9 @@ class CellAccounting:
         self.uid = next(CellAccounting._ids)
         self.programs: Dict[str, ProgramCost] = {}
         self.requests: List[RequestMetrics] = []
+        # named event counters (serving-path waste/degradation signals:
+        # prefill_dummy_rows, prefill_fallback_requests, ...)
+        self.counters: Dict[str, int] = {}
 
     def register_program(self, name: str, compiled, hlo_text: Optional[str] = None):
         ca = _normalize_cost_analysis(compiled.cost_analysis())
@@ -153,6 +156,12 @@ class CellAccounting:
     def serving_summary(self) -> dict:
         """p50/p99 TTFT and TPOT over every request this cell served."""
         return summarize_requests(self.requests)
+
+    def record_counter(self, name: str, n: int = 1):
+        """Bump a named event counter (e.g. batch-padding dummy rows, or
+        requests served over a degraded path) — cheap, exact attribution
+        of serving overheads that program costs alone can't show."""
+        self.counters[name] = self.counters.get(name, 0) + n
 
     def record_invocation(self, name: str, n: int = 1):
         if name in self.programs:

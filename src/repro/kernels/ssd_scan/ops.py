@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.ssd_scan import ssd_chunks
+from repro.models.mamba2 import ssd_tiling_chunk
 
 F32 = jnp.float32
 
@@ -21,17 +22,24 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
-def ssd(x, dt, A_log, B_in, C_in, *, chunk: int = 256, initial_state=None):
+def ssd(x, dt, A_log, B_in, C_in, *, chunk: int = 256, initial_state=None,
+        mask=None):
     """x: (B,S,H,P); dt: (B,S,H); A_log: (H,); B/C: (B,S,G,N).
 
+    ``mask`` (B,S) bool: validity mask for bucket-padded prefill.  Masked
+    steps have ``dt`` zeroed BEFORE the per-chunk kernel, so they enter it
+    as dA=0 / dt-weighted-x=0 rows — identity state updates through the
+    unchanged dense matmuls (no in-kernel control flow), making
+    ``final_state`` exact at each row's last real token.
     Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32).
     """
     Bb, S, H, P_ = x.shape
     G, N = B_in.shape[2], B_in.shape[3]
-    Q = min(chunk, S)
-    assert S % Q == 0
+    Q = ssd_tiling_chunk(S, chunk)
     nc = S // Q
 
+    if mask is not None:
+        dt = jnp.where(mask[..., None], dt, jnp.zeros_like(dt))
     A = -jnp.exp(A_log.astype(F32))
     dA = (dt.astype(F32) * A)                                  # (B,S,H)
     xw = x.astype(F32) * dt.astype(F32)[..., None]

@@ -11,6 +11,10 @@ def ssd_chunk_ref(x, dA, B, C):
     dA: (Bb, H, nc, Q)      per-step log decays (dt * A, negative)
     B, C: (Bb, G, nc, Q, N) group-shared input/output projections
 
+    Pad-token masking happens UPSTREAM (``ops.ssd`` zeroes ``dt`` at
+    masked steps): a step arriving here with dA=0 and x=0 is an identity
+    state update, so this per-chunk math needs no mask of its own.
+
     Returns (y_diag (Bb,H,nc,Q,P), states (Bb,H,nc,P,N), decay (Bb,H,nc)).
     """
     Bb, H, nc, Q, P = x.shape

@@ -14,6 +14,11 @@ through the head->group map in the BlockSpec index_map (no per-head
 materialization of group-shared tensors in HBM).  The inter-chunk
 recurrence (tiny: nc states of (P, N)) runs outside in jnp via
 ``associative_scan``.
+
+Bucket-padded prefill masking is handled entirely by the wrapper
+(``ops.ssd``): masked steps are fed in with dA=0 and zero dt-weighted
+input, which the matmuls below treat as identity state updates — the
+kernel body stays shape-static with no divergent control flow.
 """
 from __future__ import annotations
 

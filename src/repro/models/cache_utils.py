@@ -57,6 +57,26 @@ def merge_cache_slots(dst: Any, src: Any, axes: Any, slots: Sequence[int]) -> An
     return jax.tree.map(put, dst, src, axes)
 
 
+def install_cross_memory(cache: Any, mem, slots: Sequence[int]) -> Any:
+    """Write per-request encdec cross-attention memory into batcher slots.
+
+    ``mem`` = (cross_k (L, B, S_src, Hkv, Dh), cross_v, src_len (B,)) with
+    B == len(slots) — the return shape of ``Model.encode_cross_rows``.
+    Used by the token-at-a-time prompt path: the chunked path gets its
+    cross memory from ``prefill_ranged``'s cache instead.
+    """
+    ck, cv, src_len = mem
+    dec = cache["dec_layers"]
+    idx = jnp.asarray(slots, jnp.int32)
+    out = dict(cache)
+    out["dec_layers"] = dec._replace(
+        cross_k=dec.cross_k.at[:, idx].set(ck.astype(dec.cross_k.dtype)),
+        cross_v=dec.cross_v.at[:, idx].set(cv.astype(dec.cross_v.dtype)),
+        src_len=dec.src_len.at[:, idx].set(src_len[None, :]),
+    )
+    return out
+
+
 def mask_pad_slots(cache: Any, length: jnp.ndarray) -> Any:
     """Invalidate cache slots beyond each row's true prompt length.
 

@@ -60,24 +60,38 @@ class DecCache(NamedTuple):
     self_kv: KVSlice
     cross_k: jnp.ndarray   # (B, S_src, Hkv, Dh)
     cross_v: jnp.ndarray
+    # (B,) valid source-frame count behind cross_k/cross_v; positions
+    # >= src_len are padding and masked out of cross attention.  0 (the
+    # init value) masks everything — with zero-init cross memory that
+    # degrades to the pre-src-plumbing behaviour (cross output 0).
+    src_len: jnp.ndarray
 
 
-def enc_layer(lp, x, cfg: ArchConfig, ctx=None) -> Tuple[jnp.ndarray, None, jnp.ndarray]:
+def enc_layer(lp, x, cfg: ArchConfig, ctx=None,
+              src_len: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, None, jnp.ndarray]:
+    """Bidirectional encoder layer; ``src_len`` (B,) masks pad frames out
+    of self-attention so a row's encoding never depends on how far its
+    batch bucket was padded (outputs AT pad positions stay garbage and
+    are masked downstream by the same ``src_len``)."""
     h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
-    a, _ = attention_block(lp["attn"], h, cfg, ctx, mode="train", causal=False)
+    a, _ = attention_block(lp["attn"], h, cfg, ctx, mode="train", causal=False,
+                           kv_len=src_len)
     x = x + a
     h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
     x = x + mlp_block(lp["mlp"], h, cfg)
     return x, None, jnp.float32(0.0)
 
 
-def cross_attend(cp, x, ck, cv, cfg: ArchConfig):
-    """x: (B,Sq,D); ck/cv: (B,Skv,Hkv,Dh) precomputed; full (unmasked) attn."""
+def cross_attend(cp, x, ck, cv, cfg: ArchConfig,
+                 src_len: Optional[jnp.ndarray] = None):
+    """x: (B,Sq,D); ck/cv: (B,Skv,Hkv,Dh) precomputed; full (non-causal)
+    attention over the valid source prefix (``src_len`` rows masked)."""
     q = jnp.einsum("bsd,dhk->bshk", x, cp["wq"])
     out = chunked_attention(
         q, ck, cv, causal=False,
         q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
-        unroll=cfg.unroll_attn,
+        unroll=cfg.unroll_attn, kv_len=src_len,
     )
     return jnp.einsum("bshk,hkd->bsd", out, cp["wo"])
 
@@ -92,7 +106,12 @@ def dec_layer(
     lp, x, cfg: ArchConfig, ctx=None, *, mode: str,
     memory: Optional[jnp.ndarray] = None,       # encoder output (train/prefill)
     cache: Optional[DecCache] = None, pos=None,
+    src_len: Optional[jnp.ndarray] = None,      # (B,) valid memory prefix
 ) -> Tuple[jnp.ndarray, Optional[DecCache], jnp.ndarray]:
+    """``src_len`` is taken from the caller in train/prefill (None = the
+    whole memory is valid) and from the CACHE in decode, so the mask that
+    shaped prefill cross-attention is replayed bit-identically at every
+    decode step."""
     h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
     a, new_self = attention_block(
         lp["attn"], h, cfg, ctx, mode=mode,
@@ -104,15 +123,19 @@ def dec_layer(
     if mode in ("train", "prefill"):
         assert memory is not None
         ck, cv = cross_kv(lp["cross"], memory)
+        if src_len is None:
+            src_len = jnp.full((x.shape[0],), memory.shape[1], jnp.int32)
     else:
         assert cache is not None
         ck, cv = cache.cross_k, cache.cross_v
-    x = x + cross_attend(lp["cross"], h, ck, cv, cfg)
+        src_len = cache.src_len
+    x = x + cross_attend(lp["cross"], h, ck, cv, cfg, src_len=src_len)
 
     h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
     x = x + mlp_block(lp["mlp"], h, cfg)
 
     new_cache = None
     if mode in ("prefill", "decode"):
-        new_cache = DecCache(self_kv=new_self, cross_k=ck, cross_v=cv)
+        new_cache = DecCache(self_kv=new_self, cross_k=ck, cross_v=cv,
+                             src_len=src_len)
     return x, new_cache, jnp.float32(0.0)

@@ -77,10 +77,16 @@ def chunked_attention(
     q_chunk: int = 1024,
     kv_chunk: int = 1024,
     unroll: bool = False,
+    kv_len: Optional[jnp.ndarray] = None,
 ):
     """Flash-algorithm attention in jnp (running max/sum over KV chunks).
 
     q: (B, Sq, Hq, Dh);  k, v: (B, Skv, Hkv, Dh);  GQA via head grouping.
+    kv_len: optional (B,) per-row valid KV count — keys at positions
+    >= kv_len[b] are masked out (ragged/padded memory, e.g. encdec source
+    features batched to a common length).  A fully-masked q row degrades
+    to a uniform average over the masked values (never NaN); callers must
+    not read such rows.
     Returns (B, Sq, Hq, Dh).
     """
     B, Sq, Hq, Dh = q.shape
@@ -109,6 +115,9 @@ def chunked_attention(
             ) * scale                                         # (B,Hkv,G,qc,kc)
             mask = _block_mask(q_pos, k_pos, causal, window)
             s = jnp.where(mask[None, None, None], s, NEG_INF)
+            if kv_len is not None:
+                row_ok = k_pos[None, :] < kv_len[:, None]     # (B, kc)
+                s = jnp.where(row_ok[:, None, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -218,6 +227,7 @@ def attention_block(
     cache: Optional[KVSlice] = None,
     pos: Optional[jnp.ndarray] = None,   # (B,) next position (decode) or 0-base
     causal: bool = True,
+    kv_len: Optional[jnp.ndarray] = None,  # (B,) ragged-memory mask (non-causal)
 ) -> Tuple[jnp.ndarray, Optional[KVSlice]]:
     """Full attention sublayer.  Returns (out (B,S,D), updated cache)."""
     B, S, _ = x.shape
@@ -270,7 +280,7 @@ def attention_block(
             out = chunked_attention(
                 q, ke, ve, causal=causal, window=window,
                 q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
-                unroll=cfg.unroll_attn,
+                unroll=cfg.unroll_attn, kv_len=kv_len,
             )
             out = head_shard(out)
         else:
@@ -280,6 +290,7 @@ def attention_block(
             out = chunked_attention(
                 q, ke, ve, causal=causal, window=window, q_chunk=S,
                 kv_chunk=cfg.attn_kv_chunk, unroll=cfg.unroll_attn,
+                kv_len=kv_len,
             )
             out = seq_shard(out)
         new_cache = None

@@ -6,6 +6,11 @@ cheap inter-chunk recurrence over per-chunk states — not a per-step
 sequential scan.  Group dims (ngroups) are kept un-broadcast so B/C are
 never materialized per-head.
 
+Bucket-padded (chunked) prefill is EXACT: a (B, S_pad) validity mask makes
+pad tokens identity state updates (``dt`` zeroed -> zero log-decay, zero
+dt-weighted input) and the causal-conv state snapshots at each row's last
+real token — see ``ssd_chunked`` / ``mamba_block``.
+
 Layout (per block):
   in projections  wz, wx : (D, d_inner)   wB, wC : (D, G*N)   wdt : (D, H)
   causal conv (k taps) over [x, B, C] segments (separate weights per segment)
@@ -83,19 +88,48 @@ def _segsum(x):
     return jnp.where(mask, d, -jnp.inf)
 
 
+def ssd_tiling_chunk(S: int, chunk: int) -> int:
+    """Largest usable SSD chunk that tiles ``S`` exactly.
+
+    Serve buckets are multiples of the PREFILL chunk, not necessarily of
+    the SSD chunk, so the chunk degrades to ``gcd(S, chunk)`` when it
+    doesn't divide ``S``.  ``S`` and ``chunk`` are static, so the warning
+    fires at trace time — a degenerate gcd (odd S -> Q=1 = per-step
+    recurrence) is loud, not silent.  The single tiling policy shared by
+    this oracle and the Pallas wrapper (``kernels.ssd_scan.ops.ssd``).
+    """
+    Q = min(chunk, S)
+    if S % Q:
+        import math
+        import warnings
+        Q = math.gcd(S, Q)
+        warnings.warn(
+            f"ssd: S={S} is not a multiple of chunk={chunk}; "
+            f"degrading to chunk {Q}", stacklevel=3)
+    return Q
+
+
 def ssd_chunked(x, dt, A_log, B_in, C_in, *, chunk: int,
-                initial_state: Optional[jnp.ndarray] = None):
+                initial_state: Optional[jnp.ndarray] = None,
+                mask: Optional[jnp.ndarray] = None):
     """SSD in chunked matmul form.
 
     x: (B, S, H, P)    dt: (B, S, H) (post-softplus, >0)
     A_log: (H,) (A = -exp(A_log))    B_in, C_in: (B, S, G, N)
+    mask: optional (B, S) bool validity mask.  A masked step has its ``dt``
+    forced to zero, so its log-decay is 0 (state decay = identity) and its
+    dt-weighted input is 0 (no state contribution): the recurrence passes
+    through pad positions untouched and ``final_state`` equals the state
+    at each row's last REAL token.  Outputs at masked positions are
+    garbage and must not be read.
     Returns (y (B,S,H,P), final_state (B,H,P,N) fp32).
     """
+    if mask is not None:
+        dt = jnp.where(mask[..., None], dt, jnp.zeros_like(dt))
     Bb, S, H, P_ = x.shape
     G, N = B_in.shape[2], B_in.shape[3]
     HG = H // G
-    Q = min(chunk, S)
-    assert S % Q == 0
+    Q = ssd_tiling_chunk(S, chunk)
     nc = S // Q
 
     A = -jnp.exp(A_log.astype(F32))                       # (H,)
@@ -175,8 +209,15 @@ def ssd_decode_step(state, x, dt, A_log, B_in, C_in):
 # --------------------------------------------------------------------------
 # full block
 # --------------------------------------------------------------------------
-def _causal_conv(seq, w, conv_state=None):
-    """Depthwise causal conv.  seq: (B,S,C); w: (K,C).  Returns (y, new_state)."""
+def _causal_conv(seq, w, conv_state=None, length=None):
+    """Depthwise causal conv.  seq: (B,S,C); w: (K,C).  Returns (y, new_state).
+
+    ``length`` (B,) optional: snapshot the returned conv state at each
+    row's last REAL token instead of the end of the (padded) sequence —
+    ``new_state[b]`` holds the K-1 inputs preceding position ``length[b]``
+    (zero left-padding included for rows shorter than K-1), exactly what a
+    decode step at position ``length[b]`` must see.
+    """
     K = w.shape[0]
     if conv_state is None:
         pad = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), seq.dtype)
@@ -184,14 +225,31 @@ def _causal_conv(seq, w, conv_state=None):
         pad = conv_state.astype(seq.dtype)
     full = jnp.concatenate([pad, seq], axis=1)            # (B, S+K-1, C)
     y = sum(full[:, i : i + seq.shape[1]] * w[i] for i in range(K))
-    new_state = full[:, -(K - 1):] if K > 1 else jnp.zeros_like(pad)
+    if K <= 1:
+        new_state = jnp.zeros_like(pad)
+    elif length is None:
+        new_state = full[:, -(K - 1):]
+    else:
+        # seq position p lives at full index p + K-1, so the window of the
+        # K-1 inputs BEFORE position length[b] is full[b, length[b] : length[b]+K-1]
+        idx = length[:, None].astype(jnp.int32) + jnp.arange(K - 1)[None, :]
+        new_state = jnp.take_along_axis(full, idx[:, :, None], axis=1)
     return y, new_state
 
 
 def mamba_block(p, x, cfg: ArchConfig, *, mode: str,
-                state: Optional[MambaState] = None
+                state: Optional[MambaState] = None,
+                mask: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Optional[MambaState]]:
-    """x: (B, S, D).  Returns (y (B,S,D), new state or None)."""
+    """x: (B, S, D).  Returns (y (B,S,D), new state or None).
+
+    ``mask`` (B, S) bool (prefill only): marks the REAL tokens of each
+    bucket-padded row.  Masked (pad) positions make no state update
+    (``dt`` zeroed inside :func:`ssd_chunked`) and the conv state is
+    snapshotted at each row's last real token, so the returned
+    :class:`MambaState` is bit-identical to having prefilled each row at
+    its exact length — the contract chunked prefill needs.
+    """
     s = cfg.ssm
     d_inner, H, G, N, K = mamba_dims(cfg)
     P_ = s.head_dim
@@ -207,7 +265,10 @@ def mamba_block(p, x, cfg: ArchConfig, *, mode: str,
     xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
     conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
     conv_in = state.conv if (state is not None and mode == "decode") else None
-    xbc_conv, new_conv = _causal_conv(xbc, conv_w, conv_in)
+    length = None
+    if mask is not None and mode == "prefill":
+        length = jnp.sum(mask.astype(jnp.int32), axis=1)
+    xbc_conv, new_conv = _causal_conv(xbc, conv_w, conv_in, length=length)
     xbc_conv = jax.nn.silu(xbc_conv)
     xs_c = xbc_conv[..., :d_inner]
     Bm_c = xbc_conv[..., d_inner : d_inner + G * N].reshape(Bb, S, G, N)
@@ -221,7 +282,8 @@ def mamba_block(p, x, cfg: ArchConfig, *, mode: str,
     else:
         init = state.ssm if state is not None else None
         y, final = ssd_chunked(
-            xh, dt, p["A_log"], Bm_c, Cm_c, chunk=s.chunk, initial_state=init
+            xh, dt, p["A_log"], Bm_c, Cm_c, chunk=s.chunk, initial_state=init,
+            mask=mask,
         )
         new_state = (
             MambaState(conv=new_conv, ssm=final) if mode == "prefill" else None

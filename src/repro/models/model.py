@@ -195,6 +195,9 @@ class Model:
                                   ("layers",) + cross_axes, ("const", 0.0)),
                     cross_v=PSpec((L, batch, s_src, hkv, dh),
                                   ("layers",) + cross_axes, ("const", 0.0)),
+                    # valid source prefix per row; 0 (init) = no memory yet
+                    src_len=PSpec((L, batch), ("layers", "batch"),
+                                  ("const", 0), dtype="int32"),
                 )
             }
         raise ValueError(fam)
@@ -301,8 +304,15 @@ class Model:
             )
         return f
 
-    def _backbone(self, params, x, *, mode: str, cache=None, pos=None, x0=None):
-        """Shared decoder trunk for non-encdec families."""
+    def _backbone(self, params, x, *, mode: str, cache=None, pos=None, x0=None,
+                  mask=None):
+        """Shared decoder trunk for non-encdec families.
+
+        ``mask`` (B, S) bool marks the real tokens of bucket-padded
+        prefill rows.  Recurrent families (ssm / hybrid) thread it into
+        the SSD scan so pad positions make no state update; KV families
+        ignore it (causality + ``mask_pad_slots`` already confine pads).
+        """
         cfg, ctx = self.cfg, self.ctx
         remat = mode == "train"
         pol = cfg.remat_policy
@@ -335,7 +345,7 @@ class Model:
             new_cache["moe_layers"] = nc
             aux_total += aux
         elif fam == "ssm":
-            fn = lambda h, lp, csl: zmb.mamba_layer(lp, h, cfg, mode=mode, state=csl)
+            fn = lambda h, lp, csl: zmb.mamba_layer(lp, h, cfg, mode=mode, state=csl, mask=mask)
             x, nc, aux = _scan_stack(fn, x, params["mamba_layers"],
                                      None if cache is None else cache["mamba_layers"],
                                      remat=remat, policy=pol, constrain=constrain, gather=gather)
@@ -346,7 +356,7 @@ class Model:
 
             def group_fn(h, gp, gcsl):
                 m_cache = None if gcsl is None else gcsl.mamba
-                inner = lambda hh, lp, csl: zmb.mamba_layer(lp, hh, cfg, mode=mode, state=csl)
+                inner = lambda hh, lp, csl: zmb.mamba_layer(lp, hh, cfg, mode=mode, state=csl, mask=mask)
                 h, n_m, aux = _scan_stack(inner, h, gp, m_cache, remat=False, policy=pol)
                 h, n_s = zmb.shared_block(
                     shared, h, x0, cfg, self.ctx, mode=mode,
@@ -364,20 +374,26 @@ class Model:
             raise ValueError(fam)
         return x, new_cache, aux_total
 
-    def _encode(self, params, src, *, remat: bool = False):
+    def _encode(self, params, src, *, remat: bool = False, src_len=None):
+        """src (B, S_src, d_model) -> memory; ``src_len`` (B,) masks pad
+        frames out of the bidirectional self-attention so each row's
+        encoding is independent of the batch's common padded length."""
         cfg = self.cfg
         x = (src.astype(self.dtype) @ params["src_proj"])
-        fn = lambda h, lp, _csl: encdec_mod.enc_layer(lp, h, cfg, self.ctx)
+        fn = lambda h, lp, _csl: encdec_mod.enc_layer(lp, h, cfg, self.ctx,
+                                                      src_len=src_len)
         x, _, _ = _scan_stack(fn, x, params["enc_layers"], None,
                               remat=remat, policy=cfg.remat_policy,
                               constrain=self._act_constrain(),
                               gather=self._act_gather())
         return rms_norm(x, params["enc_norm"], cfg.rms_eps)
 
-    def _decode_stack(self, params, x, *, mode, memory=None, cache=None, pos=None):
+    def _decode_stack(self, params, x, *, mode, memory=None, cache=None, pos=None,
+                      src_len=None):
         cfg = self.cfg
         fn = lambda h, lp, csl: encdec_mod.dec_layer(
-            lp, h, cfg, self.ctx, mode=mode, memory=memory, cache=csl, pos=pos
+            lp, h, cfg, self.ctx, mode=mode, memory=memory, cache=csl, pos=pos,
+            src_len=src_len,
         )
         remat = mode == "train"
         x, nc, aux = _scan_stack(fn, x, params["dec_layers"],
@@ -393,9 +409,12 @@ class Model:
     def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
         cfg = self.cfg
         if cfg.family == "encdec":
-            memory = self._encode(params, batch["src"], remat=True)
+            src_len = batch.get("src_len")
+            memory = self._encode(params, batch["src"], remat=True,
+                                  src_len=src_len)
             x = self._embed_tokens(params, batch["tokens"])
-            x, _, aux = self._decode_stack(params, x, mode="train", memory=memory)
+            x, _, aux = self._decode_stack(params, x, mode="train",
+                                           memory=memory, src_len=src_len)
         else:
             x = self._embed_tokens(params, batch["tokens"])
             x0 = x
@@ -436,10 +455,12 @@ class Model:
     def prefill(self, params, batch, cache):
         cfg = self.cfg
         if cfg.family == "encdec":
-            memory = self._encode(params, batch["src"])
+            src_len = batch.get("src_len")
+            memory = self._encode(params, batch["src"], src_len=src_len)
             x = self._embed_tokens(params, batch["tokens"])
             x, new_cache, _ = self._decode_stack(
-                params, x, mode="prefill", memory=memory, cache=cache
+                params, x, mode="prefill", memory=memory, cache=cache,
+                src_len=src_len,
             )
         else:
             x = self._embed_tokens(params, batch["tokens"])
@@ -451,36 +472,136 @@ class Model:
         logits = self._logits(params, x)[:, 0]
         return logits, new_cache
 
+    @property
+    def chunked_prefill_exact(self) -> bool:
+        """True when :meth:`prefill_ranged` is EXACT for this family on
+        bucket-padded prompt batches.
+
+        The single source of truth for the serving capability:
+        ``serve_step.supports_chunked_prefill`` consults this (plus the
+        cache-layout condition on ``sliding_window``) and
+        :meth:`prefill_ranged` raises ``NotImplementedError`` exactly when
+        this is False — the two can never drift.
+
+        Every registered family qualifies: KV families (dense/vlm/moe) via
+        causal attention + ``mask_pad_slots``; recurrent families
+        (ssm/hybrid) via the pad-token validity mask threaded into the SSD
+        scan (zero ``dt`` at pads, conv state snapshotted at the last real
+        token); encdec via per-request source features with ``src_len``
+        masked encoder/cross attention.
+        """
+        return self.cfg.family in ("dense", "vlm", "moe", "ssm", "hybrid",
+                                   "encdec")
+
+    @property
+    def decode_state_positional(self) -> bool:
+        """True when every per-slot serve-cache leaf is position-masked
+        (pure KV with ``slot_pos``), so stale rows left by a slot's
+        previous occupant are invisible to decode attention.  Recurrent
+        state (ssm/hybrid) and encdec cross memory are NOT positional —
+        a reused slot must be reset to init values before a
+        token-at-a-time admit (the batcher consults this)."""
+        return self.cfg.family in ("dense", "vlm", "moe")
+
     def prefill_ranged(self, params, batch, cache):
         """Chunked prefill: whole padded prompts in a single invocation.
 
         ``batch`` = {tokens (B, S_pad) int32, length (B,) int32} where row b
-        holds a real prompt in ``tokens[b, :length[b]]`` and padding after.
-        Returns (logits (B, V) taken at each row's LAST REAL token, cache
-        with the pad slots' ``slot_pos`` masked to -1 so decode attention
-        never sees the padding K/V).
+        holds a real prompt in ``tokens[b, :length[b]]`` and padding after
+        (``length`` 0 marks a dummy batch-padding row).  encdec batches add
+        {src (B, S_src, d_model), src_len (B,)} — see
+        :meth:`ranged_batch_extras`.  Returns (logits (B, V) taken at each
+        row's LAST REAL token, cache exact at each row's true length:
 
-        Only exact for families whose serve cache is pure KV (dense / vlm /
-        moe): recurrent state (ssm / hybrid) would integrate the pad tokens,
-        and encdec needs source features — those fall back to the
-        token-at-a-time path in the batcher.
+        * KV families: pad slots' ``slot_pos`` masked to -1 so decode
+          attention never sees the padding K/V;
+        * ssm / hybrid: pad tokens contribute ZERO state update (``dt``
+          masked inside the SSD scan) and the causal-conv state is
+          snapshotted at each row's last real token;
+        * encdec: cross-attention memory encoded under a ``src_len`` mask
+          and carried in the cache (with the mask) for decode).
         """
         cfg = self.cfg
-        if cfg.family not in ("dense", "vlm", "moe"):
+        if not self.chunked_prefill_exact:
             raise NotImplementedError(
-                f"chunked prefill is KV-cache-only (family {cfg.family!r})"
+                f"no exact chunked prefill for family {cfg.family!r}"
             )
-        x = self._embed_tokens(params, batch["tokens"])
-        x, new_cache, _ = self._backbone(
-            params, x, mode="prefill", cache=cache, x0=x
-        )
-        last = jnp.clip(batch["length"] - 1, 0, x.shape[1] - 1)
+        tokens, length = batch["tokens"], batch["length"]
+        mask = jnp.arange(tokens.shape[1])[None, :] < length[:, None]
+        if cfg.family == "encdec":
+            src_len = batch.get("src_len")
+            if src_len is None:
+                src_len = jnp.full((tokens.shape[0],), batch["src"].shape[1],
+                                   jnp.int32)
+            memory = self._encode(params, batch["src"], src_len=src_len)
+            x = self._embed_tokens(params, tokens)
+            x, new_cache, _ = self._decode_stack(
+                params, x, mode="prefill", memory=memory, cache=cache,
+                src_len=src_len,
+            )
+        else:
+            x = self._embed_tokens(params, tokens)
+            x, new_cache, _ = self._backbone(
+                params, x, mode="prefill", cache=cache, x0=x, mask=mask
+            )
+        last = jnp.clip(length - 1, 0, x.shape[1] - 1)
         x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B,1,D)
         x_last = rms_norm(x_last, params["final_norm"], cfg.rms_eps)
         logits = self._logits(params, x_last)[:, 0]
         from repro.models.cache_utils import mask_pad_slots
-        new_cache = mask_pad_slots(new_cache, batch["length"])
+        new_cache = mask_pad_slots(new_cache, length)
         return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # chunked-prefill batch helpers (family-specific knowledge lives HERE
+    # so the serve layer stays free of family branches)
+    # ------------------------------------------------------------------
+    def ranged_batch_extras(self, srcs, max_len: int):
+        """Extra ``prefill_ranged`` batch keys for ``len(srcs)`` rows.
+
+        ``srcs``: per-row source feature arrays (S_src_i, d_model) or None
+        (no source -> zero features, ``src_len`` 0).  Families without
+        side inputs return {}; encdec returns {src, src_len} padded to the
+        cache's source length so every bucket compiles one program shape.
+        """
+        if self.cfg.family != "encdec":
+            return {}
+        import numpy as np
+        B = len(srcs)
+        s_src = self.source_len(max_len)
+        src = np.zeros((B, s_src, self.cfg.d_model), np.float32)
+        src_len = np.zeros((B,), np.int32)
+        for i, s in enumerate(srcs):
+            if s is None:
+                continue
+            s = np.asarray(s, np.float32)
+            L = min(len(s), s_src)
+            src[i, :L] = s[:L]
+            src_len[i] = L
+        return {"src": jnp.asarray(src, self.dtype),
+                "src_len": jnp.asarray(src_len)}
+
+    def encode_cross_rows(self, params, srcs, max_len: int):
+        """Cross-attention memory rows for token-at-a-time prompt paths.
+
+        Returns (cross_k (L,B,S_src,Hkv,Dh), cross_v, src_len (B,)) ready
+        for :func:`repro.models.cache_utils.install_cross_memory`, or None
+        when this family has no cross memory (or no row carries source
+        features) — callers need no family branch.
+        """
+        if self.cfg.family != "encdec" or all(s is None for s in srcs):
+            return None
+        extras = self.ranged_batch_extras(srcs, max_len)
+        if not hasattr(self, "_encode_cross_jit"):
+            def _encode_cross(params, src, src_len):
+                memory = self._encode(params, src, src_len=src_len)
+                # the SAME projection dec_layer uses in prefill, vmapped
+                # over the stacked layer dim — one definition, two paths
+                return jax.vmap(encdec_mod.cross_kv, in_axes=(0, None))(
+                    params["dec_layers"]["cross"], memory)
+            self._encode_cross_jit = jax.jit(_encode_cross)
+        ck, cv = self._encode_cross_jit(params, extras["src"], extras["src_len"])
+        return ck, cv, extras["src_len"]
 
     def decode(self, params, cache, batch):
         cfg = self.cfg

@@ -63,7 +63,9 @@ def shared_block(
 def mamba_layer(
     lp, x, cfg: ArchConfig, *, mode: str,
     state: Optional[MambaState] = None,
+    mask: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[MambaState], jnp.ndarray]:
     h = rms_norm(x, lp["norm"], cfg.rms_eps)
-    y, new_state = mamba_block(lp["mamba"], h, cfg, mode=mode, state=state)
+    y, new_state = mamba_block(lp["mamba"], h, cfg, mode=mode, state=state,
+                               mask=mask)
     return x + y, new_state, jnp.float32(0.0)

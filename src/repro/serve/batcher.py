@@ -13,8 +13,9 @@ and the first output token is sampled from the same invocation.  Requests
 admitted in the same scheduler tick whose prompts land in the SAME pad
 bucket share one (B, S_pad) prefill invocation — under bursty arrivals the
 prompt phase costs O(buckets) invocations per tick, not O(requests).
-Families whose serve state is not a pure KV cache (ssm / hybrid / encdec)
-or rolling SWA caches fall back to the token-at-a-time decode loop.
+Every registered family chunks exactly (``Model.chunked_prefill_exact``);
+only rolling-SWA cache layouts (``sliding_window < max_len``) fall back to
+the token-at-a-time decode loop (see ``supports_chunked_prefill``).
 
 Slots can also be filled from OUTSIDE via :meth:`install_prefilled` — the
 disaggregated serving path (``repro.serve.disagg``) prefills on a separate
@@ -42,6 +43,9 @@ class Request:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     output: List[int] = dataclasses.field(default_factory=list)
+    # per-request source features (S_src, d_model) for encdec models;
+    # None = no source (zero cross memory).  Ignored by other families.
+    src: Optional[np.ndarray] = None
 
     @property
     def latency(self) -> Optional[float]:
@@ -99,12 +103,13 @@ class ContinuousBatcher:
         self.prefill_chunk = prefill_chunk
         self.chunked = (
             prefill_chunk is not None
-            and supports_chunked_prefill(model.cfg, max_len)
+            and supports_chunked_prefill(model, max_len)
         )
         self._prefill = (
             jax.jit(build_prefill_step(model, temperature)) if self.chunked else None
         )
         self._scratch_caches: Dict[int, Any] = {}  # B -> B-row prefill cache
+        self._slot_init_cache = None               # lazy; see _slot_init()
         self.prefill_invocations = 0
         self.prefill_batch_sizes: List[int] = []   # prompts per invocation
         self.decode_invocations = 0
@@ -135,24 +140,30 @@ class ContinuousBatcher:
             self._scratch_caches[batch] = self.model.init_cache(batch, self.max_len)
         return self._scratch_caches[batch]
 
+    def _slot_init(self):
+        """Pristine 1-row cache for resetting a slot at token-at-a-time
+        admit: KV families mask stale rows by position, but recurrent
+        state (ssm/hybrid) is NOT positional — a request admitted into a
+        reused slot would integrate its predecessor's state.  Allocated
+        on first fallback admit; purely-chunked batchers never pay for it."""
+        if self._slot_init_cache is None:
+            self._slot_init_cache = self.model.init_cache(1, self.max_len)
+        return self._slot_init_cache
+
     def _prefill_group(self, group):
         """ONE prefill invocation over same-bucket (slot, request) pairs.
 
-        The batch dim is padded to the next power of two (dummy zero-length
-        rows, masked out and discarded) so compiled prefill variants stay
-        O(log slots) per bucket and scratch caches O(2B) rows total —
-        not one program + cache per distinct group size.
+        Power-of-two batch padding (dummy rows discarded) keeps compiled
+        prefill variants O(log slots) per bucket and scratch caches O(2B)
+        rows total — see ``run_prefill_group``.
         """
-        import numpy as np
         from repro.models.cache_utils import slice_cache_slots
-        from repro.serve.serve_step import run_prefill_prompts
+        from repro.serve.serve_step import run_prefill_group
         B = len(group)
-        b_pad = 1 << (B - 1).bit_length()
-        prompts = [req.prompt for _, req in group]
-        prompts += [np.zeros(0, np.int32)] * (b_pad - B)
-        toks, rows_cache, self._rng = run_prefill_prompts(
-            self._prefill, self.params, self._scratch(b_pad), prompts,
+        toks, rows_cache, self._rng, b_pad = run_prefill_group(
+            self._prefill, self.params, self._scratch, [r for _, r in group],
             chunk=self.prefill_chunk, max_len=self.max_len, rng=self._rng,
+            model=self.model, accounting=self.accounting,
         )
         if b_pad != B:
             rows_cache = slice_cache_slots(rows_cache, self._cache_axes,
@@ -210,7 +221,21 @@ class ContinuousBatcher:
                 staged.append((slot, req))
                 continue
             # fallback: the prompt is consumed token-at-a-time through
-            # the decode path (shared cache keeps slot shapes uniform)
+            # the decode path (shared cache keeps slot shapes uniform).
+            # Non-positional slot state (recurrent ssm/hybrid state,
+            # encdec cross memory) must go back to init values first —
+            # unlike stale KV it is not masked by position
+            if not self.model.decode_state_positional:
+                from repro.models.cache_utils import merge_cache_slots
+                self.cache = merge_cache_slots(self.cache, self._slot_init(),
+                                               self._cache_axes, [slot])
+            # request-scoped side state (encdec cross memory) still has to
+            # land in the slot up front — the model says what, if anything
+            mem = self.model.encode_cross_rows(
+                self.params, [getattr(req, "src", None)], self.max_len)
+            if mem is not None:
+                from repro.models.cache_utils import install_cross_memory
+                self.cache = install_cross_memory(self.cache, mem, [slot])
             self.slot_req[slot] = req
             self.pos[slot] = 0
             self.cur_tok[slot] = int(req.prompt[0]) if len(req.prompt) else 0

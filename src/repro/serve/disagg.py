@@ -50,7 +50,7 @@ from repro.serve.batcher import ContinuousBatcher, Request
 from repro.serve.serve_step import (
     build_prefill_step,
     bucket_len,
-    run_prefill_prompts,
+    run_prefill_group,
     supports_chunked_prefill,
 )
 
@@ -60,10 +60,15 @@ class PrefillWorker:
 
     def __init__(self, cell, *, max_len: int, chunk: int = 32,
                  temperature: float = 0.0):
-        if not supports_chunked_prefill(cell.model.cfg, max_len):
+        if not supports_chunked_prefill(cell.model, max_len):
+            # every family chunks exactly now; only a rolling SWA cache
+            # layout (sliding_window < max_len) lands here.  DisaggServer
+            # checks the same capability first and degrades to its
+            # token-at-a-time fallback instead of constructing a worker.
             raise ValueError(
-                f"family {cell.model.cfg.family!r} has no exact chunked "
-                "prefill (recurrent state / rolling cache)"
+                f"config {cell.model.cfg.name!r} has no exact chunked "
+                f"prefill at max_len={max_len} (rolling sliding-window "
+                "cache would shift real tokens out behind the pad tail)"
             )
         if cell.serve_params is None:
             cell.init_serve()
@@ -86,11 +91,9 @@ class PrefillWorker:
         """Prefill a batch of requests, ONE invocation per pad bucket.
 
         Batch dims are padded to the next power of two (dummy rows masked
-        and discarded) so compiled variants stay O(log capacity) per
-        bucket.  Returns ``[(req, first_token, 1-row cache), ...]`` in
-        input order.
+        and discarded, their waste accounted) — see ``run_prefill_group``.
+        Returns ``[(req, first_token, 1-row cache), ...]`` in input order.
         """
-        import numpy as np
         from repro.models.cache_utils import cache_batch_axes, slice_cache_slots
         if self._axes is None:
             self._axes = cache_batch_axes(self.model, 1, self.max_len)
@@ -104,12 +107,10 @@ class PrefillWorker:
                               ).append(req)
         out = {}
         for _, group in sorted(groups.items()):
-            b_pad = 1 << (len(group) - 1).bit_length()
-            prompts = [r.prompt for r in group]
-            prompts += [np.zeros(0, np.int32)] * (b_pad - len(group))
-            toks, cache, self._rng = run_prefill_prompts(
-                self._step, self.cell.serve_params, self._scratch(b_pad),
-                prompts, chunk=self.chunk, max_len=self.max_len, rng=self._rng,
+            toks, cache, self._rng, _b_pad = run_prefill_group(
+                self._step, self.cell.serve_params, self._scratch, group,
+                chunk=self.chunk, max_len=self.max_len, rng=self._rng,
+                model=self.model, accounting=self.cell.accounting,
             )
             self.invocations += 1
             for i, (req, tok) in enumerate(zip(group, toks)):
@@ -135,7 +136,10 @@ class _DecodeReplica:
         self.inflight: Dict[int, Request] = {}   # rid -> sent, not installed
 
     def free_capacity(self) -> int:
-        return len(self.batcher.free_slots()) - len(self.inflight)
+        # queued-but-unslotted requests (token-at-a-time fallback) hold
+        # capacity just like in-flight KV rows do
+        return (len(self.batcher.free_slots()) - len(self.inflight)
+                - len(self.batcher.queue))
 
 
 class DisaggServer:
@@ -143,9 +147,14 @@ class DisaggServer:
 
     ``decode_cells`` is a cell name or a list of replica cell names (e.g.
     ``spec.cell("decode").instances()``).  Each replica's batcher runs
-    with ``prefill_chunk=None`` — it NEVER prefills; every request's KV
-    rows arrive over its channel.  TTFT is the (possibly batched) prefill
-    invocation + one channel transfer; TPOT is pure decode.
+    with ``prefill_chunk=None`` — it NEVER chunk-prefills on its own;
+    requests normally arrive as KV rows over its channel.  TTFT is the
+    (possibly batched) prefill invocation + one channel transfer; TPOT is
+    pure decode.  Configs with no exact chunked prefill at this
+    ``max_len`` (rolling SWA caches — see ``supports_chunked_prefill``)
+    DEGRADE instead of crashing: ``pump`` routes their prompts straight
+    onto replica queues for token-at-a-time consumption and the prefill
+    cell's accounting records ``prefill_fallback_requests``.
 
     The replica set is LIVE: after a reconcile changes the decode spec's
     ``replicas`` or recovers a failed instance, :meth:`sync` converges
@@ -178,6 +187,9 @@ class DisaggServer:
         self.pending: deque = deque()
         self.rejected: List[Request] = []   # unservable, never routed
         self.requeued = 0               # requests re-homed off a detached replica
+        self.fallback_requests = 0      # served token-at-a-time (no worker);
+                                        # server-owned so a prefill-cell
+                                        # recovery can't zero the ledger
         self._done_detached: List[Request] = []  # served by since-gone replicas
         self._detached_stats = {"requests": 0, "decode_invocations": 0,
                                 "kv_bytes": 0, "kv_transfers": 0,
@@ -192,10 +204,19 @@ class DisaggServer:
         # the same way inside _attach)
         if self.prefill_cell.serve_params is None:
             self._sync_weights(prefill_cell, decode_cells[0])
-        self.worker = PrefillWorker(
-            self.prefill_cell, max_len=max_len, chunk=chunk,
-            temperature=temperature,
-        )
+        if supports_chunked_prefill(self.prefill_cell.model, max_len):
+            self.worker: Optional[PrefillWorker] = PrefillWorker(
+                self.prefill_cell, max_len=max_len, chunk=chunk,
+                temperature=temperature,
+            )
+        else:
+            # degraded-but-serving: configs the batcher would silently run
+            # token-at-a-time (rolling SWA cache) used to CRASH here via
+            # the PrefillWorker guard.  Route their prompts straight onto
+            # the decode replicas' queues instead, and say so loudly in
+            # the prefill cell's accounting.
+            self.worker = None
+            self.prefill_cell.accounting.record_counter("prefill_fallback")
         self.replicas: List[_DecodeReplica] = []
         for name in decode_cells:
             self._attach(name)
@@ -295,6 +316,9 @@ class DisaggServer:
                 rep.batcher.slot_req[slot] = None
                 self._requeue(req)
                 n += 1
+        while rep.batcher.queue:            # token-at-a-time fallback queue
+            self._requeue(rep.batcher.queue.pop())
+            n += 1
         if rep.channel.open:
             rep.channel.close()
         return n
@@ -324,10 +348,11 @@ class DisaggServer:
                 return False        # no weight source yet; retry later
             self._sync_weights(live.name, src)
         self.prefill_cell = live
-        self.worker = PrefillWorker(
-            live, max_len=self.max_len, chunk=self.chunk,
-            temperature=self.temperature,
-        )
+        if self.worker is not None:
+            self.worker = PrefillWorker(
+                live, max_len=self.max_len, chunk=self.chunk,
+                temperature=self.temperature,
+            )
         return True
 
     def _reap_failed(self) -> int:
@@ -436,7 +461,19 @@ class DisaggServer:
                 self.rejected.append(req)
                 continue
             taking.append(req)
-        if taking:
+        if taking and self.worker is None:
+            # token-at-a-time fallback: no chunked prefill program exists
+            # for this config — hand each prompt to a replica's own queue,
+            # where the decode loop consumes it one token per invocation
+            for req in taking:
+                i = self._route(capacity)
+                assert i is not None, "capacity budget guarantees a replica"
+                capacity[i] -= 1
+                self.replicas[i].batcher.submit(req)
+            self.fallback_requests += len(taking)
+            self.prefill_cell.accounting.record_counter(
+                "prefill_fallback_requests", len(taking))
+        elif taking:
             for req, tok, row_cache in self.worker.prefill_many(taking):
                 i = self._route(capacity)
                 assert i is not None, "capacity budget guarantees a replica"
@@ -480,6 +517,7 @@ class DisaggServer:
         return bool(
             self.pending
             or any(rep.inflight for rep in self.replicas)
+            or any(rep.batcher.queue for rep in self.replicas)
             or any(r is not None for rep in self.replicas
                    for r in rep.batcher.slot_req)
         )
@@ -511,7 +549,10 @@ class DisaggServer:
         ds = self._detached_stats
         return {
             "decode_serving": summarize_requests(self.done),
-            "prefill_invocations": self.worker.invocations,
+            "prefill_chunked": self.worker is not None,
+            "prefill_invocations": (
+                self.worker.invocations if self.worker is not None else 0),
+            "prefill_fallback_requests": self.fallback_requests,
             "decode_invocations": ds["decode_invocations"] + sum(
                 r.batcher.decode_invocations for r in self.replicas),
             "kv_bytes": ds["kv_bytes"] + sum(

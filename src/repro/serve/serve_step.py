@@ -12,16 +12,22 @@ Two programs back the serving stack:
 Prompts are padded to *chunk buckets* (multiples of the batcher's
 ``prefill_chunk``) so the number of distinct compiled prefill programs is
 bounded by ``max_len / chunk`` rather than one per prompt length.
+
+Chunked prefill is exact for EVERY registered family — the padding is
+neutralized per family inside ``Model.prefill_ranged`` (KV slot masking /
+SSD validity mask / ``src_len``-masked cross memory), not here: this layer
+only buckets, pads and batches, and consults ``supports_chunked_prefill``
+(backed by ``Model.chunked_prefill_exact``) for the one remaining layout
+exception (rolling sliding-window caches).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
 from repro.models.model import Model
 
 F32 = jnp.float32
@@ -45,10 +51,18 @@ def bucket_len(prompt_len: int, chunk: int, max_len: int) -> int:
     return min(max(b, chunk), max_len)
 
 
-def supports_chunked_prefill(cfg: ArchConfig, max_len: int) -> bool:
-    """Chunked prefill is exact only for pure-KV-cache families with a
-    non-rolling cache (a rolling SWA buffer would retain the pad tail)."""
-    return cfg.family in ("dense", "vlm", "moe") and (
+def supports_chunked_prefill(model: Model, max_len: int) -> bool:
+    """Is ``Model.prefill_ranged`` exact for this model at ``max_len``?
+
+    Consults the model's own capability (``Model.chunked_prefill_exact`` —
+    every registered family qualifies; see its docstring for the per-family
+    mask semantics) plus one cache-LAYOUT condition: a rolling SWA buffer
+    (``sliding_window < max_len``) keeps only the last ``window`` slots of
+    the PADDED sequence, so a short row's real tokens would be shifted out
+    by its pad tail — those configs stay on the token-at-a-time path.
+    """
+    cfg = model.cfg
+    return model.chunked_prefill_exact and (
         cfg.sliding_window is None or cfg.sliding_window >= max_len
     )
 
@@ -68,14 +82,22 @@ def build_prefill_step(model: Model, temperature: float = 0.0) -> Callable:
 
 
 def run_prefill_prompts(step_fn: Callable, params, scratch_cache, prompts,
-                        *, chunk: int, max_len: int, rng):
+                        *, chunk: int, max_len: int, rng,
+                        model: Optional[Model] = None,
+                        srcs: Optional[Sequence] = None):
     """Bucket-pad B same-bucket prompts and run ONE jitted ``prefill_step``.
 
-    All prompts must share a bucket (``bucket_len`` of each equals the
-    bucket of the longest) so a batch compiles to one (B, S_pad) program;
+    All NON-EMPTY prompts must share a bucket (``bucket_len`` of each
+    equals the group bucket) so a batch compiles to one (B, S_pad)
+    program; zero-length rows are normalized to dummy batch padding
+    (``length`` 0, every slot masked) rather than bucketed — asserted
+    here so a future bucket check can never reject its own padding.
     ``scratch_cache`` is a B-row cache reused across invocations.  Rows
-    are independent under prefill attention, so the batched invocation is
-    bit-equivalent to B single-row invocations.  Returns
+    are independent under prefill attention/scan, so the batched
+    invocation is bit-equivalent to B single-row invocations.  ``model``
+    + ``srcs`` (per-row source features or None) add the family-specific
+    batch extras via ``Model.ranged_batch_extras`` (encdec source
+    features; {} for every other family).  Returns
     (first_tokens list, B-row KV cache, advanced rng).
     """
     B = len(prompts)
@@ -83,25 +105,63 @@ def run_prefill_prompts(step_fn: Callable, params, scratch_cache, prompts,
     tokens = np.zeros((B, s_pad), np.int32)
     lengths = np.zeros((B,), np.int32)
     for i, p in enumerate(prompts):
+        if len(p):
+            assert bucket_len(len(p), chunk, max_len) == s_pad, (
+                f"prompt {i} (len {len(p)}) belongs to bucket "
+                f"{bucket_len(len(p), chunk, max_len)}, not {s_pad}"
+            )
         tokens[i, :len(p)] = p
         lengths[i] = len(p)
     batch = {
         "tokens": jnp.asarray(tokens),
         "length": jnp.asarray(lengths),
     }
+    if model is not None:
+        batch.update(model.ranged_batch_extras(
+            list(srcs) if srcs is not None else [None] * B, max_len))
     rng, sub = jax.random.split(rng)
     toks, _logits, cache = step_fn(params, scratch_cache, batch, sub)
     return [int(t) for t in np.asarray(toks)], cache, rng
 
 
+def run_prefill_group(step_fn: Callable, params, scratch: Callable, reqs,
+                      *, chunk: int, max_len: int, rng, model: Model,
+                      accounting=None):
+    """ONE prefill invocation over a same-bucket request group.
+
+    The batch dim is padded to the next power of two with dummy
+    zero-length rows (normalized/masked by :func:`run_prefill_prompts`,
+    discarded by callers) so compiled prefill variants stay O(log
+    capacity) per bucket; the dummy-row waste — real prefill compute — is
+    recorded as ``prefill_dummy_rows`` in ``accounting``.  ``scratch`` is
+    a ``batch -> cache`` factory (callers memoize theirs).  The single
+    definition both the colocated batcher and the disaggregated
+    PrefillWorker use, so the batching protocol cannot drift between
+    them.  Returns (first_tokens, b_pad-row cache, advanced rng, b_pad).
+    """
+    B = len(reqs)
+    b_pad = 1 << (B - 1).bit_length()
+    prompts = [r.prompt for r in reqs]
+    prompts += [np.zeros(0, np.int32)] * (b_pad - B)
+    srcs = [getattr(r, "src", None) for r in reqs] + [None] * (b_pad - B)
+    toks, cache, rng = run_prefill_prompts(
+        step_fn, params, scratch(b_pad), prompts,
+        chunk=chunk, max_len=max_len, rng=rng, model=model, srcs=srcs,
+    )
+    if accounting is not None and b_pad != B:
+        accounting.record_counter("prefill_dummy_rows", b_pad - B)
+    return toks, cache, rng, b_pad
+
+
 def run_prefill_prompt(step_fn: Callable, params, scratch_cache, prompt,
-                       *, chunk: int, max_len: int, rng):
+                       *, chunk: int, max_len: int, rng,
+                       model: Optional[Model] = None, src=None):
     """Single-prompt wrapper over :func:`run_prefill_prompts`.
 
     Returns (first_token, 1-row KV cache, advanced rng)."""
     toks, row_cache, rng = run_prefill_prompts(
         step_fn, params, scratch_cache, [prompt],
-        chunk=chunk, max_len=max_len, rng=rng,
+        chunk=chunk, max_len=max_len, rng=rng, model=model, srcs=[src],
     )
     return toks[0], row_cache, rng
 

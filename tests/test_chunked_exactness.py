@@ -1,0 +1,142 @@
+"""Family-parameterized chunked-prefill exactness suite.
+
+For EVERY config in ``configs/registry.py`` (reduced to its smoke shape):
+
+  * capability single-source-of-truth — ``Model.chunked_prefill_exact``,
+    the ``NotImplementedError`` guard inside ``prefill_ranged`` and
+    ``supports_chunked_prefill`` must agree (the old hardcoded family
+    tuples could drift);
+  * ``prefill_ranged`` logits at the last real token of a bucket-padded
+    row match the exact-length ``prefill`` program;
+  * the full serving trajectory (chunked prefill + decode) matches the
+    token-at-a-time path on ragged prompt batches — including batch-pad
+    dummy rows (5 prompts -> power-of-two bucket padding) and, for
+    encdec, per-request ragged source features;
+  * a sliding-window config (mixtral smoke, window 64) runs the chunked
+    path when ``window >= max_len`` and this suite still passes.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import smoke_config
+from repro.configs.registry import ARCHS
+from repro.models.model import build_model
+from repro.serve.batcher import ContinuousBatcher, Request
+from repro.serve.serve_step import supports_chunked_prefill
+from repro.sharding.rules import single_device_ctx
+
+ARCH_NAMES = sorted(ARCHS)
+MAX_LEN = 32
+CHUNK = 8
+SLOTS = 3
+
+_CACHE = {}
+
+
+def _model(name):
+    if name not in _CACHE:
+        cfg = smoke_config(ARCHS[name])
+        model = build_model(cfg, single_device_ctx())
+        _CACHE[name] = (model, model.init(jax.random.PRNGKey(0)))
+    return _CACHE[name]
+
+
+def _requests(model, lens, max_new=4, seed=0):
+    rng = np.random.RandomState(seed)
+    cfg = model.cfg
+    out = []
+    for i, L in enumerate(lens):
+        src = None
+        if cfg.family == "encdec":
+            # ragged per-request source features (different lengths so the
+            # src_len mask, not the common pad, must carry the exactness)
+            src = rng.randn(5 + 3 * i, cfg.d_model).astype(np.float32)
+        out.append(Request(rid=i, prompt=rng.randint(1, cfg.vocab, size=L)
+                           .astype(np.int32), max_new_tokens=max_new, src=src))
+    return out
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_capability_single_source_of_truth(name):
+    """prefill_ranged's guard and supports_chunked_prefill may not drift:
+    both must reduce to Model.chunked_prefill_exact for every registered
+    config (the tentpole: that property is True for ALL families now)."""
+    model, _ = _model(name)
+    assert model.chunked_prefill_exact, name
+
+    batch = {"tokens": jnp.zeros((1, CHUNK), jnp.int32),
+             "length": jnp.ones((1,), jnp.int32)}
+    batch.update(model.ranged_batch_extras([None], MAX_LEN))
+    raised = False
+    try:
+        jax.eval_shape(model.prefill_ranged, model.abstract_params(), batch,
+                       model.abstract_cache(1, MAX_LEN))
+    except NotImplementedError:
+        raised = True
+    assert raised == (not model.chunked_prefill_exact), name
+
+    w = model.cfg.sliding_window
+    assert supports_chunked_prefill(model, MAX_LEN) == (
+        model.chunked_prefill_exact and (w is None or w >= MAX_LEN)), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_ranged_matches_exact_length(name):
+    """Bucket-padded prefill_ranged == exact-length prefill at the last
+    real token, for every family (incl. an almost-all-pad row)."""
+    model, params = _model(name)
+    cfg = model.cfg
+    rng = np.random.RandomState(1)
+    src = (rng.randn(9, cfg.d_model).astype(np.float32)
+           if cfg.family == "encdec" else None)
+    for L in (1, 11):                       # L=1: 15-pad tail in bucket 16
+        prompt = rng.randint(1, cfg.vocab, size=L).astype(np.int32)
+        ref_batch = {"tokens": jnp.asarray(prompt[None])}
+        if src is not None:
+            ex = model.ranged_batch_extras([src], MAX_LEN)
+            ref_batch.update(ex)
+        ref_logits, _ = model.prefill(params, ref_batch,
+                                      model.init_cache(1, MAX_LEN))
+
+        s_pad = 16
+        padded = np.zeros((1, s_pad), np.int32)
+        padded[0, :L] = prompt
+        batch = {"tokens": jnp.asarray(padded),
+                 "length": jnp.asarray([L], jnp.int32)}
+        batch.update(model.ranged_batch_extras([src], MAX_LEN))
+        got_logits, _ = model.prefill_ranged(params, batch,
+                                             model.init_cache(1, MAX_LEN))
+        a = np.asarray(got_logits, np.float32)[:, : cfg.vocab]
+        b = np.asarray(ref_logits, np.float32)[:, : cfg.vocab]
+        rel = np.abs(a - b).max() / (np.abs(b).max() + 1e-6)
+        assert rel < 1e-4, (name, L, rel)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_trajectory_matches_token_at_a_time(name):
+    """Chunked serving trajectory == token-at-a-time trajectory on a
+    ragged batch (5 prompts: bucket grouping + power-of-two dummy-row
+    padding both exercised)."""
+    model, params = _model(name)
+    lens = [3, 17, 1, 20, 9]
+
+    base = ContinuousBatcher(model, params, batch_slots=SLOTS,
+                             max_len=MAX_LEN, prefill_chunk=None)
+    for r in _requests(model, lens):
+        base.submit(r)
+    ref = {r.rid: r.output for r in base.run_until_drained()}
+    assert base.prefill_invocations == 0
+
+    chunked = ContinuousBatcher(model, params, batch_slots=SLOTS,
+                                max_len=MAX_LEN, prefill_chunk=CHUNK)
+    assert chunked.chunked, name
+    for r in _requests(model, lens):
+        chunked.submit(r)
+    got = {r.rid: r.output for r in chunked.run_until_drained()}
+
+    assert got == ref, name
+    assert 0 < chunked.prefill_invocations <= len(lens)
+    assert chunked.decode_invocations < base.decode_invocations

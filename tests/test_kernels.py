@@ -129,6 +129,33 @@ def test_ssd_kernel_initial_state():
     assert _rel(y_k, y_r) < 1e-5
 
 
+def test_ssd_kernel_pad_mask_exact():
+    """Pad-token masking: kernel and oracle under a ragged (B,S) validity
+    mask must agree with each other AND with running each row truncated
+    to its real length — pads make no state update (dA=0, dt*x=0)."""
+    Bb, S, H, P, G, N = 3, 64, 2, 8, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    x = jax.random.normal(ks[0], (Bb, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H)) * 0.5)
+    A_log = jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.0)
+    B = jax.random.normal(ks[3], (Bb, S, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bb, S, G, N)) * 0.3
+    lengths = np.array([64, 17, 1])            # full row, ragged, all-pad tail
+    mask = jnp.asarray(np.arange(S)[None, :] < lengths[:, None])
+
+    y_k, h_k = ssd(x, dt, A_log, B, C, chunk=16, mask=mask)
+    y_r, h_r = ssd_chunked(x, dt, A_log, B, C, chunk=16, mask=mask)
+    assert _rel(h_k, h_r) < 1e-5
+    for b, L in enumerate(lengths):
+        # truncated single-row reference: state at the last REAL token
+        # (row length need not be a chunk multiple — the scan degrades its
+        # chunk to a divisor)
+        _, h_t = ssd_chunked(x[b:b + 1, :L], dt[b:b + 1, :L], A_log,
+                             B[b:b + 1, :L], C[b:b + 1, :L], chunk=16)
+        assert _rel(h_k[b:b + 1], h_t) < 1e-5, (b, L)
+        assert _rel(y_k[b:b + 1, :L], y_r[b:b + 1, :L]) < 1e-5, (b, L)
+
+
 @pytest.mark.parametrize("counts", [
     [0, 5, 128, 256, 129, 200, 1, 64],
     [0, 0, 0, 0, 0, 0, 0, 0],

@@ -86,11 +86,29 @@ def test_prefill_ranged_matches_exact_length_prefill(model_and_params):
     assert (sp[:, 0, L:] == -1).all()
 
 
-def test_prefill_ranged_rejects_stateful_families():
+def test_stale_slot_state_reset_on_token_at_a_time_admit():
+    """Regression: a request admitted token-at-a-time into a REUSED slot
+    used to inherit the previous occupant's recurrent state (ssm/hybrid
+    caches are not position-masked the way KV is) — its whole trajectory
+    diverged from a fresh-slot run."""
     cfg = smoke_config(get_arch("mamba2-2.7b"))
     model = build_model(cfg, single_device_ctx())
-    with pytest.raises(NotImplementedError):
-        model.prefill_ranged(None, None, None)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab, [3, 17, 1, 20, 9])
+
+    solo = {}
+    for i, p in enumerate(prompts):
+        bat = ContinuousBatcher(model, params, batch_slots=1, max_len=32,
+                                prefill_chunk=None)
+        bat.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        solo.update({r.rid: r.output for r in bat.run_until_drained()})
+
+    multi = ContinuousBatcher(model, params, batch_slots=2, max_len=32,
+                              prefill_chunk=None)
+    for i, p in enumerate(prompts):
+        multi.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    got = {r.rid: r.output for r in multi.run_until_drained()}
+    assert got == solo
 
 
 # ---------------------------------------------------------------------------
@@ -547,6 +565,131 @@ def test_daemon_recovers_prefill_cell(model_and_params):
     assert sorted(rep.cell.name for rep in srv.replicas) == \
         ["decode/0", "decode/1"]
     assert sup.reconcile().empty
+
+
+def _family_requests(cfg, lens, max_new=4, seed=0):
+    rng = np.random.RandomState(seed)
+    out = []
+    for i, L in enumerate(lens):
+        src = (rng.randn(5 + 3 * i, cfg.d_model).astype(np.float32)
+               if cfg.family == "encdec" else None)
+        out.append(Request(rid=i, max_new_tokens=max_new, src=src,
+                           prompt=rng.randint(1, cfg.vocab, size=L)
+                           .astype(np.int32)))
+    return out
+
+
+@pytest.mark.parametrize(
+    "arch", ["mamba2-2.7b", "zamba2-2.7b", "seamless-m4t-large-v2"])
+def test_disagg_e2e_all_families(arch):
+    """Acceptance: ssm / hybrid / encdec run the FULL disaggregated plane
+    (chunked prefill cell -> KV/state handoff -> decode replicas, daemon
+    ticking) with outputs identical to a single-cell token-at-a-time
+    reference — no family gate, no NotImplementedError anywhere."""
+    from repro.core import CellSpec, ChannelSpec, ClusterSpec, SupervisorDaemon
+    from repro.serve.disagg import DisaggServer
+
+    cfg = smoke_config(get_arch(arch))
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=3,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    spec = ClusterSpec(
+        cells=(CellSpec("prefill", cfg, "serve", ncols=1),
+               CellSpec("decode", cfg, "serve", ncols=1, replicas=2)),
+        channels=(ChannelSpec("prefill", "decode", kind="kv"),),
+    )
+    sup.apply(spec)
+    sup.cells["decode/0"].init_serve(rng=jax.random.PRNGKey(0))
+    srv = DisaggServer(sup, "prefill", spec.cell("decode").instances(),
+                       batch_slots=2, max_len=MAX_LEN, chunk=16)
+    daemon = SupervisorDaemon(sup)
+    daemon.attach_server(srv)
+    lens = [3, 33, 17, 40, 9]
+    for r in _family_requests(cfg, lens):
+        srv.submit(r)
+    done = {r.rid: r.output for r in srv.run_until_drained(
+        max_steps=2_000, on_step=daemon.tick)}
+    assert set(done) == set(range(len(lens)))
+    st = srv.stats()
+    assert st["prefill_chunked"] and srv.worker.invocations > 0
+    assert st["prefill_fallback_requests"] == 0
+    assert st["kv_transfers"] == len(lens)   # every request crossed a channel
+
+    dec = sup.cells["decode/0"]
+    ref_bat = ContinuousBatcher(dec.model, dec.serve_params, batch_slots=2,
+                                max_len=MAX_LEN, prefill_chunk=None)
+    for r in _family_requests(cfg, lens):
+        ref_bat.submit(r)
+    ref = {r.rid: r.output for r in ref_bat.run_until_drained()}
+    assert done == ref
+
+
+def test_swa_rolling_cache_falls_back_not_crashes():
+    """Satellite: sliding_window < max_len has no exact chunked prefill
+    (the rolling buffer would shift real tokens out behind the pad tail).
+    The batcher silently degrades to token-at-a-time; DisaggServer used
+    to CRASH in PrefillWorker.__init__ on the very same config.  It must
+    now serve every request token-at-a-time with an accounting event,
+    outputs identical to the colocated degraded reference."""
+    from repro.serve.disagg import DisaggServer, PrefillWorker
+    from repro.serve.serve_step import supports_chunked_prefill
+
+    cfg = smoke_config(get_arch("mixtral-8x7b"))   # window=64 in smoke
+    assert cfg.sliding_window == 64
+    max_len = 96
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=2,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    sup.create_cell("prefill", cfg, "serve", ncols=1)
+    dec = sup.create_cell("decode", cfg, "serve", ncols=1)
+    dec.init_serve(rng=jax.random.PRNGKey(0))
+    assert not supports_chunked_prefill(dec.model, max_len)
+    with pytest.raises(ValueError):
+        PrefillWorker(dec, max_len=max_len)        # the old crash, scoped
+    srv = DisaggServer(sup, "prefill", "decode", batch_slots=2,
+                       max_len=max_len, chunk=16)
+    assert srv.worker is None                      # degraded, not dead
+    prompts = _prompts(cfg.vocab, [9, 33, 70])
+    for r in _requests(prompts, max_new=3):
+        srv.submit(r)
+    done = {r.rid: r.output for r in srv.run_until_drained(max_steps=5_000)}
+    assert set(done) == {0, 1, 2}
+    st = srv.stats()
+    assert not st["prefill_chunked"] and st["prefill_invocations"] == 0
+    assert st["prefill_fallback_requests"] == len(prompts)
+    acc = sup.cells["prefill"].accounting.counters
+    assert acc["prefill_fallback"] == 1
+
+    ref_bat = ContinuousBatcher(dec.model, dec.serve_params, batch_slots=2,
+                                max_len=max_len, prefill_chunk=16)
+    assert not ref_bat.chunked                     # same silent degrade
+    for r in _requests(prompts, max_new=3):
+        ref_bat.submit(r)
+    ref = {r.rid: r.output for r in ref_bat.run_until_drained()}
+    assert done == ref
+
+
+def test_prefill_dummy_row_waste_accounted(model_and_params):
+    """Satellite: prefill batch dims pad to powers of two; the dummy rows
+    are real prefill compute and must surface in CellAccounting."""
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=2,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    sup.create_cell("prefill", cfg, "serve", ncols=1)
+    sup.create_cell("decode", cfg, "serve", ncols=1).init_serve(
+        rng=jax.random.PRNGKey(0))
+    srv = DisaggServer(sup, "prefill", "decode", batch_slots=4,
+                       max_len=MAX_LEN, chunk=16)
+    for r in _requests(_prompts(cfg.vocab, [33, 35, 40]), max_new=2):
+        srv.submit(r)                              # one bucket-48 group of 3
+    srv.run_until_drained()
+    assert srv.worker.invocations == 1             # batched into ONE program
+    counters = sup.cells["prefill"].accounting.counters
+    assert counters["prefill_dummy_rows"] == 1     # b_pad 4 - 3 real rows
 
 
 def test_disagg_unservable_prompts_do_not_stall_the_loop(model_and_params):
