@@ -127,6 +127,12 @@ def main():
           f"{st['per_replica_requests']})")
     print(f"kv channels: {st['kv_bytes'] / 1e6:.2f} MB over {st['kv_transfers']} "
           f"transfers in {st['kv_seconds'] * 1e3:.1f} ms")
+    if st["paged_kv"]:
+        print(f"kv pool: prefix hits {st['prefix_hit_tokens']} tok / misses "
+              f"{st['prefix_miss_tokens']} tok, saved "
+              f"{st['kv_bytes_saved'] / 1e6:.2f} MB, pages in use "
+              f"{st['pages_in_use']} (evicted {st['pages_evicted']}, "
+              f"occupancy {st['pool_occupancy']:.2f})")
     print(f"serving summary: {st['decode_serving']}")
     print(f"daemon: {daemon.ticks} ticks, "
           f"{sum(1 for r in daemon.history if r['plan'] != 'noop')} non-noop plans")

@@ -163,6 +163,12 @@ class CellAccounting:
         of serving overheads that program costs alone can't show."""
         self.counters[name] = self.counters.get(name, 0) + n
 
+    def record_gauge(self, name: str, value: int):
+        """Set a point-in-time counter (e.g. ``pages_in_use`` of the
+        cell's KV pool) — unlike :meth:`record_counter` it overwrites,
+        reflecting current state rather than a cumulative total."""
+        self.counters[name] = value
+
     def record_invocation(self, name: str, n: int = 1):
         if name in self.programs:
             self.programs[name].invocations += n

@@ -73,7 +73,8 @@ class SupervisorDaemon:
                        window: int = 50, percentile: float = 99.0,
                        cooldown: float = 0.0,
                        autoscale_replicas: bool = False,
-                       queue_depth=None, queue_high: int = 4
+                       queue_depth=None, queue_high: int = 4,
+                       pool_occupancy=None, occupancy_high: float = 0.9
                        ) -> ReconcilePolicy:
         """Build a policy whose bands derive from the spec's SLOTarget.
 
@@ -82,8 +83,9 @@ class SupervisorDaemon:
         set, tail crossings move columns between ``server`` and
         ``donor``; with ``autoscale_replicas=True`` the ``tpot_p99``
         target (plus ``queue_depth``, e.g. ``lambda:
-        len(disagg_server.pending)``) drives the server spec's desired
-        replica count.
+        len(disagg_server.pending)``, and optionally ``pool_occupancy``,
+        e.g. ``disagg_server.pool_occupancy`` — KV-pool pressure) drives
+        the server spec's desired replica count.
         """
         spec = getattr(self.sup, "desired", None)
         if spec is None or not spec.has_cell(server):
@@ -102,7 +104,8 @@ class SupervisorDaemon:
         pol = self.add_policy(ReconcilePolicy(
             self.sup, server, donor, policy,
             replica_policy=replica_policy, queue_depth=queue_depth,
-            queue_high=queue_high))
+            queue_high=queue_high, pool_occupancy=pool_occupancy,
+            occupancy_high=occupancy_high))
         # remembered so tick() re-derives the band when the application
         # re-applies a spec with a CHANGED SLOTarget — the objective is
         # the spec's, never frozen at registration time

@@ -112,11 +112,16 @@ class ReconcilePolicy:
                  policy: Optional[ElasticPolicy] = None, *,
                  replica_policy: Optional[ElasticPolicy] = None,
                  queue_depth: Optional[Callable[[], int]] = None,
-                 queue_high: int = 4):
+                 queue_high: int = 4,
+                 pool_occupancy: Optional[Callable[[], float]] = None,
+                 occupancy_high: float = 0.9):
         if policy is None and replica_policy is None:
             raise ValueError("need at least one of policy / replica_policy")
         if policy is not None and donor is None:
             raise ValueError("the column axis needs a donor spec to fund it")
+        if not 0.0 < occupancy_high <= 1.0:
+            raise ValueError(
+                f"occupancy_high must be in (0, 1], got {occupancy_high}")
         self.sup = supervisor
         self.server = server
         self.donor = donor
@@ -124,6 +129,11 @@ class ReconcilePolicy:
         self.replica_policy = replica_policy
         self.queue_depth = queue_depth
         self.queue_high = queue_high
+        # third replica-scaling signal: committed KV-pool pressure (e.g.
+        # ``DisaggServer.pool_occupancy``) — latency tails lag a memory
+        # squeeze, but a near-full pool blocks admissions RIGHT NOW
+        self.pool_occupancy = pool_occupancy
+        self.occupancy_high = occupancy_high
         window = policy.window if policy is not None else replica_policy.window
         self.samples: Deque[float] = deque(maxlen=window)
         self.replica_samples: Deque[float] = deque(
@@ -279,21 +289,31 @@ class ReconcilePolicy:
         if now - self.last_action_ts < rp.cooldown:
             return None
         qd = int(self.queue_depth()) if self.queue_depth is not None else 0
+        occ = (float(self.pool_occupancy())
+               if self.pool_occupancy is not None else None)
         tail = self.replica_tail()
         # grow on queue pressure alone (no decode samples flow while every
-        # replica is saturated or gone) OR an out-of-band TPOT tail
-        if qd > self.queue_high or (tail is not None and tail > rp.ut):
+        # replica is saturated or gone), an out-of-band TPOT tail, OR a
+        # near-exhausted KV pool (admissions are about to block)
+        if (qd > self.queue_high
+                or (tail is not None and tail > rp.ut)
+                or (occ is not None and occ > self.occupancy_high)):
             plan = self._rescale_replicas(+1)
             if plan is not None:
                 self.replica_samples.clear()
                 return {"kind": "grow_replicas", "p_tail": tail,
-                        "queue_depth": qd, "plan": plan.summary()}
-        elif qd == 0 and tail is not None and tail < rp.lt:
+                        "queue_depth": qd, "pool_occupancy": occ,
+                        "plan": plan.summary()}
+        elif (qd == 0 and tail is not None and tail < rp.lt
+                and (occ is None or occ < self.occupancy_high / 2)):
+            # never shrink into a memory squeeze: the surviving replicas
+            # would inherit the victim's requeued requests' pages
             plan = self._rescale_replicas(-1)
             if plan is not None:
                 self.replica_samples.clear()
                 return {"kind": "shrink_replicas", "p_tail": tail,
-                        "queue_depth": qd, "plan": plan.summary()}
+                        "queue_depth": qd, "pool_occupancy": occ,
+                        "plan": plan.summary()}
         return None
 
     def maybe_act(self, now: Optional[float] = None) -> Optional[dict]:

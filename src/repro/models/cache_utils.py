@@ -77,6 +77,196 @@ def install_cross_memory(cache: Any, mem, slots: Sequence[int]) -> Any:
     return out
 
 
+# --------------------------------------------------------------------------
+# paged KV: canonical page layout + block-table indirection
+# --------------------------------------------------------------------------
+# A *page* is ``page_size`` consecutive positions of ONE request's KV across
+# every positional cache leaf (all layers at once).  The canonical page
+# layout moves each KVSlice leaf's (batch, seq) axes to the front —
+# ``(num_pages, page_size, *rest)`` — so one integer page id addresses the
+# same positions in every leaf, whatever that leaf's stacking depth is
+# (layer-stacked dense caches, group-stacked hybrid shared KV, ...).  The
+# block table maps ``(slot, logical_page) -> physical_page``; entries >=
+# ``num_pages`` are UNMAPPED sentinels: gathers fill (k/v = 0, slot_pos =
+# -1, i.e. position-masked) and scatters drop, so an unmapped page is
+# indistinguishable from an empty one and a write to it is a no-op.
+
+
+def _is_kv(x) -> bool:
+    return isinstance(x, KVSlice)
+
+
+def kv_cache_nodes(cache: Any) -> list:
+    """The cache's KVSlice nodes in pytree flatten order."""
+    return [n for n in jax.tree.leaves(cache, is_leaf=_is_kv) if _is_kv(n)]
+
+
+def strip_kv_nodes(cache: Any) -> Any:
+    """The cache with every KVSlice subtree pruned (replaced by None) —
+    the *resident* part that stays dense per-slot (encdec cross memory;
+    nothing at all for dense/moe)."""
+    return jax.tree.map(lambda n: None if _is_kv(n) else n, cache,
+                        is_leaf=_is_kv)
+
+
+def rebuild_kv_nodes(template: Any, resident: Any, nodes: list) -> Any:
+    """Inverse of ``strip_kv_nodes``: splice ``nodes`` (flatten order)
+    back into ``resident`` using the spec ``template`` for structure."""
+    it = iter(nodes)
+    return jax.tree.map(
+        lambda t, r: next(it) if _is_kv(t) else r, template, resident,
+        is_leaf=_is_kv,
+    )
+
+
+def kv_node_axes(model, batch: int, max_len: int) -> list:
+    """Per-KVSlice-node batch-axis index (seq is always batch+1)."""
+    return [n.k.logical.index("batch")
+            for n in kv_cache_nodes(model.cache_specs(batch, max_len))]
+
+
+def kv_position_bytes(model, max_len: int) -> int:
+    """Bytes of KV cache held per token position (all layers, one slot) —
+    the unit behind the ``kv_bytes_saved`` accounting."""
+    total = 0
+    for node in kv_cache_nodes(model.cache_specs(1, max_len)):
+        for spec in (node.k, node.v, node.slot_pos):
+            n = 1
+            for d in spec.shape:
+                n *= d
+            itemsize = jnp.dtype(spec.dtype or model.cfg.dtype).itemsize
+            total += n * itemsize // max_len
+    return total
+
+
+def _to_canonical(leaf: jnp.ndarray, axis: int) -> jnp.ndarray:
+    return jnp.moveaxis(leaf, (axis, axis + 1), (0, 1))
+
+
+def _from_canonical(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    return jnp.moveaxis(x, (0, 1), (axis, axis + 1))
+
+
+def page_arena(model, num_pages: int, page_size: int) -> list:
+    """Physical page arena: one canonical ``(num_pages, page_size, *rest)``
+    KVSlice per positional cache node.  Built from ``init_cache`` so k/v
+    start zeroed and ``slot_pos`` starts -1 (every page empty)."""
+    full = model.init_cache(num_pages, page_size)
+    axes = kv_node_axes(model, num_pages, page_size)
+    return [
+        KVSlice(k=_to_canonical(n.k, a), v=_to_canonical(n.v, a),
+                slot_pos=_to_canonical(n.slot_pos, a))
+        for n, a in zip(kv_cache_nodes(full), axes)
+    ]
+
+
+def gather_pages(arena: list, axes: list, block_table: jnp.ndarray,
+                 page_size: int) -> list:
+    """Materialize dense per-slot KV nodes from the arena through the
+    block table (jit-traceable; THE indirection in front of the existing
+    decode kernels).  ``block_table``: (B, n_logical) int32, entries >=
+    num_pages gather as empty (k/v 0, slot_pos -1)."""
+    B, n_log = block_table.shape
+    out = []
+    for node, a in zip(arena, axes):
+        def g(x, fill):
+            y = jnp.take(x, block_table, axis=0, mode="fill",
+                         fill_value=fill)                 # (B, n_log, P, *rest)
+            y = y.reshape((B, n_log * page_size) + x.shape[2:])
+            return _from_canonical(y, a)
+        out.append(KVSlice(k=g(node.k, 0), v=g(node.v, 0),
+                           slot_pos=g(node.slot_pos, -1)))
+    return out
+
+
+def scatter_current_pages(arena: list, nodes: list, axes: list,
+                          block_table: jnp.ndarray, pos: jnp.ndarray,
+                          page_size: int) -> list:
+    """Write each slot's CURRENT page (the one holding position ``pos``)
+    from dense nodes back into the arena (jit-traceable).  Only the
+    current page can have changed during a decode step, and by the
+    copy-on-write invariant it is always a private page — shared
+    (interned) pages are never written.  Unmapped entries drop."""
+    B = pos.shape[0]
+    pg = pos // page_size                                  # (B,)
+    phys = jnp.take_along_axis(block_table, pg[:, None], axis=1)[:, 0]
+    out = []
+    for arena_node, node, a in zip(arena, nodes, axes):
+        def s(dst, leaf):
+            c = _to_canonical(leaf, a)                     # (B, S, *rest)
+            c = c.reshape((B, c.shape[1] // page_size, page_size) + c.shape[2:])
+            cur = c[jnp.arange(B), pg]                     # (B, P, *rest)
+            return dst.at[phys].set(cur, mode="drop")
+        out.append(KVSlice(k=s(arena_node.k, node.k),
+                           v=s(arena_node.v, node.v),
+                           slot_pos=s(arena_node.slot_pos, node.slot_pos)))
+    return out
+
+
+def extract_row_pages(cache: Any, axes: list, row: int, start_page: int,
+                      n_pages: int, page_size: int) -> list:
+    """Slice ``n_pages`` canonical page stacks (one (n_pages, P, *rest)
+    array per k/v/slot_pos of each KV node) out of one row of a dense
+    cache — the page-granular payload of the prefill -> decode handoff."""
+    out = []
+    lo, hi = start_page * page_size, (start_page + n_pages) * page_size
+    for node, a in zip(kv_cache_nodes(cache), axes):
+        def e(leaf):
+            x = _to_canonical(leaf, a)[row, lo:hi]
+            return x.reshape((n_pages, page_size) + x.shape[1:])
+        out.append(KVSlice(k=e(node.k), v=e(node.v), slot_pos=e(node.slot_pos)))
+    return out
+
+
+def write_arena_pages(arena: list, page_ids, stacks: list) -> list:
+    """Write canonical page stacks into the arena at ``page_ids``."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return [
+        KVSlice(k=a.k.at[idx].set(s.k.astype(a.k.dtype)),
+                v=a.v.at[idx].set(s.v.astype(a.v.dtype)),
+                slot_pos=a.slot_pos.at[idx].set(s.slot_pos))
+        for a, s in zip(arena, stacks)
+    ]
+
+
+def read_arena_pages(arena: list, page_ids) -> list:
+    """Canonical page stacks for ``page_ids`` (inverse of write)."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return [KVSlice(k=a.k[idx], v=a.v[idx], slot_pos=a.slot_pos[idx])
+            for a in arena]
+
+
+def clean_arena_pages(arena: list, page_ids) -> list:
+    """Mark every position of the given pages empty (``slot_pos`` -1) so
+    a recycled page's stale contents can never be attended."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return [a._replace(slot_pos=a.slot_pos.at[idx].set(-1)) for a in arena]
+
+
+def load_pages_into_row(cache: Any, template: Any, axes: list, row: int,
+                        stacks: list, start_page: int, page_size: int) -> Any:
+    """Write canonical page stacks into one row of a dense cache at
+    logical pages ``start_page..`` — how a shared prefix becomes the
+    resident context of an extend-prefill scratch row."""
+    nodes = kv_cache_nodes(cache)
+    resident = strip_kv_nodes(cache)
+    out_nodes = []
+    for node, stack, a in zip(nodes, stacks, axes):
+        n_pages = stack.k.shape[0]
+        lo = start_page * page_size
+
+        def w(leaf, s):
+            x = _to_canonical(leaf, a)
+            flat = s.reshape((n_pages * page_size,) + s.shape[2:])
+            x = x.at[row, lo:lo + n_pages * page_size].set(
+                flat.astype(leaf.dtype))
+            return _from_canonical(x, a)
+
+        out_nodes.append(KVSlice(k=w(node.k, stack.k), v=w(node.v, stack.v),
+                                 slot_pos=w(node.slot_pos, stack.slot_pos)))
+    return rebuild_kv_nodes(template, resident, out_nodes)
+
+
 def mask_pad_slots(cache: Any, length: jnp.ndarray) -> Any:
     """Invalidate cache slots beyond each row's true prompt length.
 

@@ -135,7 +135,7 @@ def dec_layer(
     x = x + mlp_block(lp["mlp"], h, cfg)
 
     new_cache = None
-    if mode in ("prefill", "decode"):
+    if mode in ("prefill", "decode", "extend"):
         new_cache = DecCache(self_kv=new_self, cross_k=ck, cross_v=cv,
                              src_len=src_len)
     return x, new_cache, jnp.float32(0.0)

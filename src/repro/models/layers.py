@@ -173,6 +173,40 @@ def decode_attention_ref(q, k_cache, v_cache, kv_len, *, window: Optional[int] =
     return out.reshape(B, 1, Hq, Dh).astype(q.dtype)
 
 
+def extend_attention_ref(q, k_cache, v_cache, slot_pos, q_pos, *,
+                         window: Optional[int] = None):
+    """Multi-position attention against an absolute-position KV cache.
+
+    The S>1 generalization of :func:`decode_attention_ref`, used by the
+    suffix-extend prefill path (paged prefix sharing): ``q`` holds a
+    request's suffix positions, the cache already holds its shared prefix
+    (plus the just-written suffix K/V).  Masking is purely ``slot_pos``
+    driven — a slot is attended iff it holds a valid position <= the
+    query's absolute position — so gathered pool pages and freshly
+    written slots need no separate treatment.
+
+    q: (B, S, Hq, Dh);  k/v_cache: (B, S_c, Hkv, Dh);
+    slot_pos: (B, S_c) absolute position per slot (-1 = empty);
+    q_pos: (B, S) absolute position per query row.
+    Returns (B, S, Hq, Dh).
+    """
+    B, S, Hq, Dh = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, S, Hkv, G, Dh)
+    s = jnp.einsum("bshgd,bkhd->bshgk", qg.astype(F32),
+                   k_cache.astype(F32)) * scale        # (B,S,Hkv,G,S_c)
+    valid = (slot_pos[:, None, :] >= 0) & \
+        (slot_pos[:, None, :] <= q_pos[:, :, None])    # (B,S,S_c)
+    if window is not None:
+        valid &= slot_pos[:, None, :] > q_pos[:, :, None] - window
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bshgk,bkhd->bshgd", p, v_cache.astype(F32))
+    return out.reshape(B, S, Hq, Dh).astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # attention block (QKV proj + rope + attn + out proj)
 # --------------------------------------------------------------------------
@@ -315,6 +349,25 @@ def attention_block(
                     slot_pos=(jnp.arange(S - S_c, S)[None]
                               * jnp.ones((B, 1), jnp.int32)),
                 )
+    elif mode == "extend":
+        # Suffix continuation for paged prefix sharing: S new positions
+        # appended at per-row offsets ``pos`` behind a prefix already
+        # resident in the cache.  Requires an absolute-position cache
+        # layout (no rolling SWA buffer — the KVPool gate guarantees it:
+        # window is None or >= the cache length, so slot i holds
+        # position i).  Writes beyond a row's true suffix are later
+        # overwritten by decode before its position becomes attendable,
+        # so no extra validity mask is needed (see serve/kvpool.py).
+        assert cache is not None and pos is not None
+        S_c = cache.k.shape[1]
+        positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        q, k, v = qkv_project(p, x, cfg, positions)
+        bidx = jnp.arange(B)[:, None]
+        k_c = cache.k.at[bidx, positions].set(k, mode="drop")
+        v_c = cache.v.at[bidx, positions].set(v, mode="drop")
+        sp = cache.slot_pos.at[bidx, positions].set(positions, mode="drop")
+        out = extend_attention_ref(q, k_c, v_c, sp, positions, window=window)
+        new_cache = KVSlice(k=k_c, v=v_c, slot_pos=sp)
     elif mode == "decode":
         assert cache is not None and pos is not None
         positions = pos[:, None]                              # (B,1)

@@ -494,6 +494,60 @@ class Model:
                                    "encdec")
 
     @property
+    def supports_paged_kv(self) -> bool:
+        """True when this family's serve cache can live in a paged KV
+        arena with radix-tree prefix sharing (``repro.serve.kvpool``).
+
+        Requires every *positional* cache leaf to be a ``KVSlice`` whose
+        per-position values depend only on the token prefix up to that
+        position (causal KV) — then interned prefix pages written by one
+        request are bit-identical to what any other request with the
+        same prompt prefix (and, for encdec, the same source features)
+        would compute, so they can be mapped read-only.  Recurrent state
+        (ssm / hybrid) folds the whole history into one non-positional
+        state and cannot be page-shared — a known non-goal (those
+        families stay on the dense per-slot cache; see ROADMAP.md).
+        encdec qualifies: its decoder self-KV pages, while the cross
+        memory rides the dense *resident* remainder of the cache.
+        """
+        return self.cfg.family in ("dense", "vlm", "moe", "encdec")
+
+    def prefill_extend(self, params, batch, cache):
+        """Suffix-only prefill behind a resident prefix (prefix sharing).
+
+        ``batch`` = {tokens (B, S_ext) int32, pos (B,) int32, length (B,)
+        int32}: row b's suffix ``tokens[b, :length[b]]`` continues a
+        prompt whose first ``pos[b]`` positions are ALREADY present in
+        ``cache`` (gathered from interned pool pages).  Positions are
+        absolute (``pos[b] + i``), attention masks purely by the cache's
+        ``slot_pos``, and K/V for the suffix is written in place — the
+        per-layer work is ``attention_block(mode="extend")``.  encdec
+        reads its cross memory from the cache (installed by the caller),
+        exactly like decode.  Returns (logits at each row's LAST REAL
+        suffix token, updated cache).
+        """
+        cfg = self.cfg
+        if not self.supports_paged_kv:
+            raise NotImplementedError(
+                f"no paged suffix prefill for family {cfg.family!r}"
+            )
+        tokens, pos, length = batch["tokens"], batch["pos"], batch["length"]
+        x = self._embed_tokens(params, tokens)
+        if cfg.family == "encdec":
+            x, new_cache, _ = self._decode_stack(
+                params, x, mode="extend", cache=cache, pos=pos
+            )
+        else:
+            x, new_cache, _ = self._backbone(
+                params, x, mode="extend", cache=cache, pos=pos, x0=x
+            )
+        last = jnp.clip(length - 1, 0, x.shape[1] - 1)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        x_last = rms_norm(x_last, params["final_norm"], cfg.rms_eps)
+        logits = self._logits(params, x_last)[:, 0]
+        return logits, new_cache
+
+    @property
     def decode_state_positional(self) -> bool:
         """True when every per-slot serve-cache leaf is position-masked
         (pure KV with ``slot_pos``), so stale rows left by a slot's

@@ -20,6 +20,17 @@ the token-at-a-time decode loop (see ``supports_chunked_prefill``).
 Slots can also be filled from OUTSIDE via :meth:`install_prefilled` — the
 disaggregated serving path (``repro.serve.disagg``) prefills on a separate
 cell and streams the KV rows over an ArrayChannel into a free slot here.
+
+KV STORAGE IS PAGED by default for the families that support it
+(``Model.supports_paged_kv`` + an absolute-position cache layout): the
+batcher owns a :class:`~repro.serve.kvpool.KVPool` — a page-granular
+arena + block table + radix-tree prefix cache — instead of a dense
+per-slot cache.  Admission consults the tree first: a request whose
+prompt shares an interned prefix maps those pages read-only, skips their
+prefill chunks entirely (only the suffix runs, one ``prefill_extend``
+invocation per pad bucket), and admission BLOCKS (requests stay queued)
+when the pool is exhausted instead of over-committing memory.  Recurrent
+families (ssm/hybrid) and rolling-SWA layouts keep the dense cache.
 """
 from __future__ import annotations
 
@@ -78,8 +89,11 @@ class ContinuousBatcher:
 
     def __init__(self, model, params, *, batch_slots: int, max_len: int,
                  temperature: float = 0.0, eos_token: Optional[int] = None,
-                 prefill_chunk: Optional[int] = 32, accounting=None):
-        from repro.models.cache_utils import cache_batch_axes
+                 prefill_chunk: Optional[int] = 32, accounting=None,
+                 kv_pool: Any = "auto", page_size: int = 16,
+                 pool_pages: Optional[int] = None):
+        from repro.models.cache_utils import cache_batch_axes, strip_kv_nodes
+        from repro.serve.kvpool import KVPool, build_paged_serve_step
         from repro.serve.serve_step import (
             build_prefill_step,
             build_serve_step,
@@ -90,16 +104,42 @@ class ContinuousBatcher:
         self.B = batch_slots
         self.max_len = max_len
         self.eos = eos_token
+        self.temperature = temperature
         self.accounting = accounting
-        self.cache = model.init_cache(batch_slots, max_len)
         self.pos = np.zeros(batch_slots, np.int32)
         self.cur_tok = np.zeros(batch_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.queue: deque = deque()
         self.done: List[Request] = []
-        self._step = jax.jit(build_serve_step(model, temperature), donate_argnums=(1,))
+        # paged KV plane: "auto" -> pool iff the family/cache layout
+        # supports it; None -> legacy dense per-slot cache; or inject a
+        # prebuilt KVPool
+        if kv_pool == "auto":
+            kv_pool = (KVPool(model, max_len=max_len, page_size=page_size,
+                              slots=batch_slots, num_pages=pool_pages,
+                              accounting=accounting)
+                       if KVPool.supported(model, max_len, page_size)
+                       else None)
+        self.pool: Optional[KVPool] = kv_pool
+        if self.pool is not None:
+            self.cache = None
+            self.resident = strip_kv_nodes(model.init_cache(batch_slots, max_len))
+            self._step = jax.jit(
+                build_paged_serve_step(
+                    model, temperature, axes=self.pool.axes,
+                    template=self.pool.template,
+                    page_size=self.pool.page_size,
+                ),
+                donate_argnums=(1, 2),
+            )
+        else:
+            self.cache = model.init_cache(batch_slots, max_len)
+            self.resident = None
+            self._step = jax.jit(build_serve_step(model, temperature),
+                                 donate_argnums=(1,))
         self._rng = jax.random.PRNGKey(0)
         self._cache_axes = cache_batch_axes(model, batch_slots, max_len)
+        self._resident_axes = strip_kv_nodes(self._cache_axes)
         self.prefill_chunk = prefill_chunk
         self.chunked = (
             prefill_chunk is not None
@@ -108,6 +148,7 @@ class ContinuousBatcher:
         self._prefill = (
             jax.jit(build_prefill_step(model, temperature)) if self.chunked else None
         )
+        self._extend = None                        # lazy; first prefix hit
         self._scratch_caches: Dict[int, Any] = {}  # B -> B-row prefill cache
         self._slot_init_cache = None               # lazy; see _slot_init()
         self.prefill_invocations = 0
@@ -127,6 +168,11 @@ class ContinuousBatcher:
         self.done.append(req)
         if slot is not None:
             self.slot_req[slot] = None
+            if self.pool is not None:
+                # private + pocket pages return to the free list; shared
+                # prefix pages decref (and stay interned as reclaimable
+                # cache for the next request with this prefix)
+                self.pool.release_slot(slot)
         if self.accounting is not None:
             self.accounting.record_request(
                 req.rid, ttft=req.ttft, tpot=req.tpot,
@@ -151,7 +197,8 @@ class ContinuousBatcher:
         return self._slot_init_cache
 
     def _prefill_group(self, group):
-        """ONE prefill invocation over same-bucket (slot, request) pairs.
+        """ONE prefill invocation over same-bucket (slot, request, lease)
+        triples (cold path — empty leases).
 
         Power-of-two batch padding (dummy rows discarded) keeps compiled
         prefill variants O(log slots) per bucket and scratch caches O(2B)
@@ -160,18 +207,58 @@ class ContinuousBatcher:
         from repro.models.cache_utils import slice_cache_slots
         from repro.serve.serve_step import run_prefill_group
         B = len(group)
+        reqs = [r for _, r, _ in group]
         toks, rows_cache, self._rng, b_pad = run_prefill_group(
-            self._prefill, self.params, self._scratch, [r for _, r in group],
+            self._prefill, self.params, self._scratch, reqs,
             chunk=self.prefill_chunk, max_len=self.max_len, rng=self._rng,
             model=self.model, accounting=self.accounting,
         )
-        if b_pad != B:
-            rows_cache = slice_cache_slots(rows_cache, self._cache_axes,
-                                           list(range(B)))
         self.prefill_invocations += 1
         self.prefill_batch_sizes.append(B)
-        self._install_rows([s for s, _ in group], [r for _, r in group],
-                           rows_cache, toks[:B])
+        slots = [s for s, _, _ in group]
+        if self.pool is not None:
+            self._install_pool_rows(group, rows_cache, toks[:B])
+        else:
+            if b_pad != B:
+                rows_cache = slice_cache_slots(rows_cache, self._cache_axes,
+                                               list(range(B)))
+            self._install_rows(slots, reqs, rows_cache, toks[:B])
+
+    def _extend_group(self, group):
+        """ONE suffix-extend invocation over prefix-hit (slot, request,
+        lease) triples whose suffixes share a pad bucket — the shared
+        prefix pages are already mapped, so only the divergence tail is
+        computed (mixed hit depths batch fine: each row carries its own
+        offset)."""
+        from repro.serve.kvpool import run_extend_group
+        from repro.serve.serve_step import build_extend_step
+        if self._extend is None:
+            self._extend = jax.jit(build_extend_step(self.model,
+                                                     self.temperature))
+        reqs = [r for _, r, _ in group]
+        leases = [le for _, _, le in group]
+        toks, rows_cache, self._rng, _b_pad = run_extend_group(
+            self._extend, self.params, self._scratch, self.pool, reqs,
+            leases, chunk=self.prefill_chunk, max_len=self.max_len,
+            rng=self._rng, model=self.model, accounting=self.accounting,
+        )
+        self.prefill_invocations += 1
+        self.prefill_batch_sizes.append(len(group))
+        self._install_pool_rows(group, rows_cache, toks[:len(group)])
+
+    def _install_pool_rows(self, group, rows_cache, first_tokens):
+        """Map each request's computed pages out of a dense rows cache
+        into its slot (interning full prompt pages for future sharing),
+        copy the resident remainder, then run the shared bookkeeping."""
+        from repro.serve.kvpool import request_ctx_key
+        rows = list(range(len(group)))
+        for i, (slot, req, lease) in enumerate(group):
+            self.pool.install_rows(slot, req.prompt, request_ctx_key(req),
+                                   rows_cache, i, lease.pages)
+        self._merge_resident_rows(rows_cache, rows,
+                                  [s for s, _, _ in group])
+        self._post_install([s for s, _, _ in group],
+                           [r for _, r, _ in group], first_tokens)
 
     def _install_rows(self, slots, reqs, rows_cache, first_tokens):
         """Write prefilled KV rows + first tokens into free slots.
@@ -179,9 +266,28 @@ class ContinuousBatcher:
         ``rows_cache`` has batch dim == len(slots); one scatter merges all
         rows, then per-request bookkeeping runs on the host."""
         from repro.models.cache_utils import merge_cache_slots
-        now = time.monotonic()
         self.cache = merge_cache_slots(self.cache, rows_cache,
                                        self._cache_axes, slots)
+        self._post_install(slots, reqs, first_tokens)
+
+    def _merge_resident_rows(self, rows_cache, rows, slots):
+        """Copy the non-paged cache remainder (encdec cross memory) of
+        the given prefill rows into the batcher's resident tree."""
+        from repro.models.cache_utils import (
+            merge_cache_slots,
+            slice_cache_slots,
+            strip_kv_nodes,
+        )
+        res = strip_kv_nodes(rows_cache)
+        if not jax.tree.leaves(res):
+            return
+        res = slice_cache_slots(res, self._resident_axes, rows)
+        self.resident = merge_cache_slots(self.resident, res,
+                                          self._resident_axes, slots)
+
+    def _post_install(self, slots, reqs, first_tokens):
+        """Per-request bookkeeping after KV rows landed in slots."""
+        now = time.monotonic()
         for slot, req, tok in zip(slots, reqs, first_tokens):
             req.started_at = req.started_at or now
             req.first_token_at = req.first_token_at or now
@@ -202,23 +308,84 @@ class ContinuousBatcher:
     def install_prefilled(self, req: Request, row_cache, first_token: int) -> bool:
         """Adopt an EXTERNALLY prefilled request (disaggregated serving):
         ``row_cache`` is a 1-row cache already on this batcher's devices.
-        Returns False when no slot is free (caller retries later)."""
+        Returns False when no slot is free — or, under a paged pool, when
+        page admission would exhaust the arena (caller retries later)."""
+        from repro.serve.kvpool import PoolExhausted, request_ctx_key
         free = self.free_slots()
         if not free:
             return False
-        self._install_rows([free[0]], [req], row_cache, [first_token])
+        slot = free[0]
+        if self.pool is None:
+            self._install_rows([slot], [req], row_cache, [first_token])
+            return True
+        ctx = request_ctx_key(req)
+        lease = self.pool.lease(req.prompt, ctx)
+        try:
+            self.pool.admit(slot, lease, len(req.prompt), req.max_new_tokens)
+        except PoolExhausted:
+            self.pool.release_lease(lease)
+            return False
+        self.pool.install_rows(slot, req.prompt, ctx, row_cache, 0,
+                               lease.pages)
+        self._merge_resident_rows(row_cache, [0], [slot])
+        self._post_install([slot], [req], [first_token])
+        return True
+
+    def install_paged(self, req: Request, stacks, resident_row,
+                      start_page: int, first_token: int, lease) -> bool:
+        """Adopt an externally prefilled request from PAGE STACKS — the
+        disaggregated handoff when both sides run the paged cache plane:
+        only the non-shared page suffix crossed the channel; pages
+        ``[0, start_page)`` map read-only from this pool's own interned
+        prefix (held by ``lease``, whose ownership transfers to the slot
+        on success).  Returns False (lease untouched) when no slot is
+        free or the pool is exhausted — the caller requeues."""
+        from repro.serve.kvpool import PoolExhausted, request_ctx_key
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        try:
+            self.pool.admit(slot, lease, len(req.prompt), req.max_new_tokens)
+        except PoolExhausted:
+            return False
+        self.pool.install_stacks(slot, req.prompt, request_ctx_key(req),
+                                 stacks, start_page)
+        if resident_row is not None and jax.tree.leaves(resident_row):
+            from repro.models.cache_utils import merge_cache_slots
+            self.resident = merge_cache_slots(
+                self.resident, resident_row, self._resident_axes, [slot])
+        self._post_install([slot], [req], [first_token])
         return True
 
     def _admit(self):
+        from repro.serve.kvpool import PoolExhausted, request_ctx_key
         from repro.serve.serve_step import bucket_len
-        staged: List[tuple] = []        # chunked-eligible (slot, request)
+        staged: List[tuple] = []        # chunked-eligible (slot, req, lease)
         for slot in range(self.B):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
             req.started_at = time.monotonic()
-            if self.chunked and 0 < len(req.prompt) <= self.max_len - 1:
-                staged.append((slot, req))
+            chunkable = self.chunked and 0 < len(req.prompt) <= self.max_len - 1
+            lease = None
+            if self.pool is not None:
+                # page admission first: when the arena (free + evictable)
+                # cannot cover the request's worst case, it goes BACK to
+                # the queue head and admission stops — blocking beats
+                # both dropping the request and over-committing memory
+                ctx = request_ctx_key(req)
+                lease = (self.pool.lease(req.prompt, ctx) if chunkable
+                         else self.pool.empty_lease())
+                try:
+                    self.pool.admit(slot, lease, len(req.prompt),
+                                    req.max_new_tokens)
+                except PoolExhausted:
+                    self.pool.release_lease(lease)
+                    self.queue.appendleft(req)
+                    break
+            if chunkable:
+                staged.append((slot, req, lease))
                 continue
             # fallback: the prompt is consumed token-at-a-time through
             # the decode path (shared cache keeps slot shapes uniform).
@@ -226,27 +393,53 @@ class ContinuousBatcher:
             # encdec cross memory) must go back to init values first —
             # unlike stale KV it is not masked by position
             if not self.model.decode_state_positional:
-                from repro.models.cache_utils import merge_cache_slots
-                self.cache = merge_cache_slots(self.cache, self._slot_init(),
-                                               self._cache_axes, [slot])
+                from repro.models.cache_utils import (
+                    merge_cache_slots,
+                    strip_kv_nodes,
+                )
+                if self.pool is not None:
+                    self.resident = merge_cache_slots(
+                        self.resident, strip_kv_nodes(self._slot_init()),
+                        self._resident_axes, [slot])
+                else:
+                    self.cache = merge_cache_slots(
+                        self.cache, self._slot_init(),
+                        self._cache_axes, [slot])
             # request-scoped side state (encdec cross memory) still has to
             # land in the slot up front — the model says what, if anything
             mem = self.model.encode_cross_rows(
                 self.params, [getattr(req, "src", None)], self.max_len)
             if mem is not None:
                 from repro.models.cache_utils import install_cross_memory
-                self.cache = install_cross_memory(self.cache, mem, [slot])
+                if self.pool is not None:
+                    self.resident = install_cross_memory(self.resident, mem,
+                                                         [slot])
+                else:
+                    self.cache = install_cross_memory(self.cache, mem, [slot])
             self.slot_req[slot] = req
             self.pos[slot] = 0
             self.cur_tok[slot] = int(req.prompt[0]) if len(req.prompt) else 0
             req._prompt_cursor = 1  # type: ignore[attr-defined]
-        # same-bucket prompts admitted this tick share one invocation
-        groups: Dict[int, List[tuple]] = {}
-        for slot, req in staged:
-            b = bucket_len(len(req.prompt), self.prefill_chunk, self.max_len)
-            groups.setdefault(b, []).append((slot, req))
-        for _, group in sorted(groups.items()):
+        # same-bucket prompts admitted this tick share one invocation;
+        # prefix hits group by their SUFFIX bucket (their shared pages are
+        # already mapped — only the divergent tail runs), cold prompts by
+        # their full bucket through the ordinary prefill program
+        cold: Dict[int, List[tuple]] = {}
+        warm: Dict[int, List[tuple]] = {}
+        for slot, req, lease in staged:
+            hit = lease.tokens if lease is not None else 0
+            if hit:
+                b = bucket_len(len(req.prompt) - hit, self.prefill_chunk,
+                               self.max_len)
+                warm.setdefault(b, []).append((slot, req, lease))
+            else:
+                b = bucket_len(len(req.prompt), self.prefill_chunk,
+                               self.max_len)
+                cold.setdefault(b, []).append((slot, req, lease))
+        for _, group in sorted(cold.items()):
             self._prefill_group(group)
+        for _, group in sorted(warm.items()):
+            self._extend_group(group)
 
     # -- one decode step over all busy slots -----------------------------
     def step(self) -> int:
@@ -259,7 +452,18 @@ class ContinuousBatcher:
             "pos": jnp.asarray(self.pos),
         }
         self._rng, sub = jax.random.split(self._rng)
-        toks, _logits, self.cache = self._step(self.params, self.cache, batch, sub)
+        if self.pool is not None:
+            # map the page each busy slot is about to write (drawn from
+            # the pocket its admission reserved — cannot fail mid-decode)
+            for s in busy:
+                self.pool.ensure_decode_page(s, int(self.pos[s]))
+            toks, self.pool.arena, self.resident = self._step(
+                self.params, self.pool.arena, self.resident,
+                jnp.asarray(self.pool.block_table), batch, sub,
+            )
+        else:
+            toks, _logits, self.cache = self._step(self.params, self.cache,
+                                                   batch, sub)
         self.decode_invocations += 1
         toks = np.asarray(toks)
         now = time.monotonic()
@@ -290,6 +494,16 @@ class ContinuousBatcher:
             if finished:
                 self._finish(req, now, slot=s)
         return len(busy)
+
+    def drop_slot(self, slot: int) -> Optional[Request]:
+        """Evict a slot's request WITHOUT finishing it (detach/requeue
+        path): clears the slot and releases its pool pages; the caller
+        owns the request's re-homing."""
+        req = self.slot_req[slot]
+        self.slot_req[slot] = None
+        if self.pool is not None:
+            self.pool.release_slot(slot)
+        return req
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0

@@ -56,10 +56,21 @@ from repro.serve.serve_step import (
 
 
 class PrefillWorker:
-    """Runs bucket-padded prefill programs on a (prefill) cell."""
+    """Runs bucket-padded prefill programs on a (prefill) cell.
+
+    When the model's cache plane is pageable the worker also keeps a
+    slot-less :class:`~repro.serve.kvpool.KVPool` as a prefix CACHE: a
+    prompt whose leading chunks match an interned prefix gathers those
+    pages into the scratch row and runs only its suffix through one
+    ``prefill_extend`` invocation — the shared chunks' prefill compute is
+    skipped entirely (``prefix_hit_tokens`` on the prefill cell's
+    accounting), independent of what the decode side has cached.
+    """
 
     def __init__(self, cell, *, max_len: int, chunk: int = 32,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, pool_pages: Optional[int] = None,
+                 page_size: int = 16):
+        from repro.serve.kvpool import KVPool
         if not supports_chunked_prefill(cell.model, max_len):
             # every family chunks exactly now; only a rolling SWA cache
             # layout (sliding_window < max_len) lands here.  DisaggServer
@@ -76,11 +87,17 @@ class PrefillWorker:
         self.model = cell.model
         self.max_len = max_len
         self.chunk = chunk
+        self.temperature = temperature
         self._step = jax.jit(build_prefill_step(self.model, temperature))
+        self._extend = None
         self._scratch_caches: Dict[int, object] = {}
         self._axes = None
         self._rng = jax.random.PRNGKey(0)
         self.invocations = 0
+        self.pool = (KVPool(self.model, max_len=max_len, num_pages=pool_pages,
+                            page_size=page_size, accounting=cell.accounting)
+                     if KVPool.supported(self.model, max_len, page_size)
+                     else None)
 
     def _scratch(self, batch: int):
         if batch not in self._scratch_caches:
@@ -92,21 +109,42 @@ class PrefillWorker:
 
         Batch dims are padded to the next power of two (dummy rows masked
         and discarded, their waste accounted) — see ``run_prefill_group``.
-        Returns ``[(req, first_token, 1-row cache), ...]`` in input order.
+        Prefix-cache hits group by their SUFFIX bucket (mixed hit depths
+        share an invocation) and every computed full page is interned for
+        the next prompt.  Returns ``[(req, first_token, 1-row cache),
+        ...]`` in input order — the row always holds the FULL prompt KV
+        (gathered prefix + computed suffix).
         """
         from repro.models.cache_utils import cache_batch_axes, slice_cache_slots
+        from repro.serve.kvpool import request_ctx_key, run_extend_group
+        from repro.serve.serve_step import build_extend_step
         if self._axes is None:
             self._axes = cache_batch_axes(self.model, 1, self.max_len)
-        groups: Dict[int, List[Request]] = {}
+        cold: Dict[int, List[Request]] = {}
+        warm: Dict[int, List[tuple]] = {}
         for req in reqs:
             L = len(req.prompt)
             if not 0 < L <= self.max_len - 1:
                 raise ValueError(
                     f"prompt length {L} does not fit max_len={self.max_len}")
-            groups.setdefault(bucket_len(L, self.chunk, self.max_len), []
-                              ).append(req)
+            lease = (self.pool.lease(req.prompt, request_ctx_key(req))
+                     if self.pool is not None else None)
+            if self.pool is not None:
+                # prefill-side hits are skipped COMPUTE (the bytes-saved
+                # ledger belongs to the decode plane's pools)
+                self.pool.note_lookup(L, lease.tokens,
+                                      accounting=self.cell.accounting,
+                                      saved_bytes=False)
+            if lease is not None and lease.pages:
+                b = bucket_len(L - lease.tokens, self.chunk, self.max_len)
+                warm.setdefault(b, []).append((req, lease))
+            else:
+                if lease is not None:
+                    self.pool.release_lease(lease)
+                cold.setdefault(bucket_len(L, self.chunk, self.max_len), []
+                                ).append(req)
         out = {}
-        for _, group in sorted(groups.items()):
+        for _, group in sorted(cold.items()):
             toks, cache, self._rng, _b_pad = run_prefill_group(
                 self._step, self.cell.serve_params, self._scratch, group,
                 chunk=self.chunk, max_len=self.max_len, rng=self._rng,
@@ -114,6 +152,30 @@ class PrefillWorker:
             )
             self.invocations += 1
             for i, (req, tok) in enumerate(zip(group, toks)):
+                if self.pool is not None:
+                    self.pool.intern_rows(req.prompt, request_ctx_key(req),
+                                          cache, i)
+                out[req.rid] = (req, tok,
+                                slice_cache_slots(cache, self._axes, [i]))
+        for _, group in sorted(warm.items()):
+            if self._extend is None:
+                self._extend = jax.jit(build_extend_step(self.model,
+                                                         self.temperature))
+            greqs = [r for r, _ in group]
+            leases = [le for _, le in group]
+            toks, cache, self._rng, _b_pad = run_extend_group(
+                self._extend, self.cell.serve_params, self._scratch,
+                self.pool, greqs, leases, chunk=self.chunk,
+                max_len=self.max_len, rng=self._rng, model=self.model,
+                accounting=self.cell.accounting,
+            )
+            self.invocations += 1
+            for i, (req, tok) in enumerate(zip(greqs, toks)):
+                # intern the freshly computed suffix pages, THEN drop the
+                # lease (the pinned prefix keeps the walk safe)
+                self.pool.intern_rows(req.prompt, request_ctx_key(req),
+                                      cache, i)
+                self.pool.release_lease(leases[i])
                 out[req.rid] = (req, tok,
                                 slice_cache_slots(cache, self._axes, [i]))
         self.cell.heartbeat()
@@ -134,12 +196,30 @@ class _DecodeReplica:
         self.batcher = batcher
         self.kv_shardings = kv_shardings
         self.inflight: Dict[int, Request] = {}   # rid -> sent, not installed
+        # rid -> PrefixLease on THIS replica's pool, acquired when the
+        # suffix was routed (pins the shared pages against eviction until
+        # install transfers them to the slot)
+        self.leases: Dict[int, object] = {}
+
+    @property
+    def pool(self):
+        return self.batcher.pool
 
     def free_capacity(self) -> int:
         # queued-but-unslotted requests (token-at-a-time fallback) hold
         # capacity just like in-flight KV rows do
         return (len(self.batcher.free_slots()) - len(self.inflight)
                 - len(self.batcher.queue))
+
+    def pool_admittable(self, req: Request, lease) -> bool:
+        """Can this replica's pool cover ``req``'s worst case right now
+        (counting reclaimable refcount-0 prefixes as available)?"""
+        if self.pool is None:
+            return True
+        need = self.pool.required_pages(
+            len(req.prompt), req.max_new_tokens,
+            lease.pages if lease is not None else 0)
+        return need <= self.pool.available_pages()
 
 
 class DisaggServer:
@@ -170,7 +250,8 @@ class DisaggServer:
     def __init__(self, supervisor, prefill_cell: str,
                  decode_cells: Union[str, Sequence[str]], *,
                  batch_slots: int, max_len: int, chunk: int = 32,
-                 temperature: float = 0.0, eos_token: Optional[int] = None):
+                 temperature: float = 0.0, eos_token: Optional[int] = None,
+                 page_size: int = 16, pool_pages: Optional[int] = None):
         if isinstance(decode_cells, str):
             decode_cells = [decode_cells]
         if not decode_cells:
@@ -182,18 +263,24 @@ class DisaggServer:
         self.chunk = chunk
         self.temperature = temperature
         self.eos_token = eos_token
+        self.page_size = page_size
+        self.pool_pages = pool_pages
         # spec name the decode instances materialize from ("dec/0" -> "dec")
         self._decode_base = decode_cells[0].split("/")[0]
         self.pending: deque = deque()
         self.rejected: List[Request] = []   # unservable, never routed
         self.requeued = 0               # requests re-homed off a detached replica
+        self.blocked_on_pool = 0        # admissions deferred: pool exhausted
         self.fallback_requests = 0      # served token-at-a-time (no worker);
                                         # server-owned so a prefill-cell
                                         # recovery can't zero the ledger
         self._done_detached: List[Request] = []  # served by since-gone replicas
         self._detached_stats = {"requests": 0, "decode_invocations": 0,
                                 "kv_bytes": 0, "kv_transfers": 0,
-                                "kv_seconds": 0.0}
+                                "kv_seconds": 0.0,
+                                "prefix_hit_tokens": 0,
+                                "prefix_miss_tokens": 0,
+                                "pages_evicted": 0, "kv_bytes_saved": 0}
         self._rr = 0                    # round-robin cursor for routing ties
 
         primary = supervisor.cells[decode_cells[0]]
@@ -207,7 +294,8 @@ class DisaggServer:
         if supports_chunked_prefill(self.prefill_cell.model, max_len):
             self.worker: Optional[PrefillWorker] = PrefillWorker(
                 self.prefill_cell, max_len=max_len, chunk=chunk,
-                temperature=temperature,
+                temperature=temperature, page_size=page_size,
+                pool_pages=pool_pages,
             )
         else:
             # degraded-but-serving: configs the batcher would silently run
@@ -267,7 +355,8 @@ class DisaggServer:
         batcher = cell.make_batcher(
             batch_slots=self.batch_slots, max_len=self.max_len,
             temperature=self.temperature, eos_token=self.eos_token,
-            prefill_chunk=None,
+            prefill_chunk=None, page_size=self.page_size,
+            pool_pages=self.pool_pages,
         )
         kv_shardings = jax.tree.map(
             lambda s, m=cell.mesh: jax.sharding.NamedSharding(m, s),
@@ -306,14 +395,25 @@ class DisaggServer:
         self._detached_stats["kv_bytes"] += rep.channel.bytes_sent
         self._detached_stats["kv_transfers"] += rep.channel.transfers
         self._detached_stats["kv_seconds"] += rep.channel.seconds
+        if rep.pool is not None:
+            ps = rep.pool.stats()
+            for k in ("prefix_hit_tokens", "prefix_miss_tokens",
+                      "pages_evicted", "kv_bytes_saved"):
+                self._detached_stats[k] += ps[k]
         n = 0
-        for req in rep.inflight.values():
+        for rid, req in list(rep.inflight.items()):
+            # an in-flight suffix's shared-prefix lease pins pool pages;
+            # drop it with the request so the pool ends the detach with
+            # every refcount back at zero
+            if rid in rep.leases and rep.pool is not None:
+                rep.pool.release_lease(rep.leases.pop(rid))
             self._requeue(req)
             n += 1
         rep.inflight.clear()
+        rep.leases.clear()
         for slot, req in enumerate(rep.batcher.slot_req):
             if req is not None:
-                rep.batcher.slot_req[slot] = None
+                rep.batcher.drop_slot(slot)    # releases the slot's pages
                 self._requeue(req)
                 n += 1
         while rep.batcher.queue:            # token-at-a-time fallback queue
@@ -351,7 +451,8 @@ class DisaggServer:
         if self.worker is not None:
             self.worker = PrefillWorker(
                 live, max_len=self.max_len, chunk=self.chunk,
-                temperature=self.temperature,
+                temperature=self.temperature, page_size=self.page_size,
+                pool_pages=self.pool_pages,
             )
         return True
 
@@ -438,6 +539,42 @@ class DisaggServer:
             self._rr = (best + 1) % n
         return best
 
+    def _route_paged(self, capacity: Dict[int, int], req: Request):
+        """Slot routing + page admission: pick the most-free replica
+        whose pool can also cover the request, leasing its shared prefix
+        there.  Replicas that fail the pool check are skipped for THIS
+        request only.  Returns (index, lease) or (None, None) when every
+        replica is slot- or page-saturated (the caller blocks)."""
+        from repro.serve.kvpool import request_ctx_key
+        skipped: Dict[int, int] = {}
+        pick, lease = None, None
+        while True:
+            i = self._route(capacity)
+            if i is None:
+                break
+            rep = self.replicas[i]
+            le = (rep.pool.lease(req.prompt, request_ctx_key(req))
+                  if rep.pool is not None else None)
+            if rep.pool_admittable(req, le):
+                pick, lease = i, le
+                capacity[i] -= 1
+                break
+            if le is not None:
+                rep.pool.release_lease(le)
+            skipped[i] = capacity[i]
+            capacity[i] = 0
+        capacity.update(skipped)
+        return pick, lease
+
+    def _block_on_pool(self, req: Request, deferred: List[Request]):
+        """Defer a request whose page admission cannot be covered yet
+        (blocking, never dropping); ``pump`` re-queues the whole deferred
+        batch at the front of ``pending`` in ORIGINAL order, so blocked
+        requests never lose their place to each other."""
+        req.started_at = None
+        deferred.append(req)
+        self.blocked_on_pool += 1
+
     def pump(self) -> int:
         """Prefill waiting requests (up to the replicas' free capacity,
         batching same-bucket prompts into one invocation), stream their KV
@@ -448,6 +585,7 @@ class DisaggServer:
         finished immediately with empty output rather than poisoning the
         loop — one bad request must not stall every other request."""
         self._reap_failed()
+        deferred: List[Request] = []    # pool-blocked this tick, FIFO
         capacity = {i: r.free_capacity() for i, r in enumerate(self.replicas)}
         budget = sum(c for c in capacity.values() if c > 0)
         taking: List[Request] = []
@@ -474,16 +612,45 @@ class DisaggServer:
             self.prefill_cell.accounting.record_counter(
                 "prefill_fallback_requests", len(taking))
         elif taking:
+            from repro.models.cache_utils import (
+                extract_row_pages,
+                strip_kv_nodes,
+            )
             for req, tok, row_cache in self.worker.prefill_many(taking):
-                i = self._route(capacity)
-                assert i is not None, "capacity budget guarantees a replica"
-                capacity[i] -= 1
+                i, lease = self._route_paged(capacity, req)
+                if i is None:
+                    # every replica is slot- or page-saturated right now:
+                    # block (prefix pages the prefill cell just interned
+                    # make the retry cheap) instead of overrunning a pool
+                    self._block_on_pool(req, deferred)
+                    continue
                 rep = self.replicas[i]
-                rep.channel.send_kv(
-                    row_cache, rep.kv_shardings,
-                    meta={"rid": req.rid, "first_token": tok,
-                          "prompt_len": len(req.prompt)},
-                )
+                if rep.pool is None:
+                    rep.channel.send_kv(
+                        row_cache, rep.kv_shardings,
+                        meta={"rid": req.rid, "first_token": tok,
+                              "prompt_len": len(req.prompt)},
+                    )
+                else:
+                    # paged handoff: ONLY the page suffix the decode pool
+                    # does not already hold crosses the channel — the
+                    # shared prefix is re-mapped from its interned pages
+                    # (pinned by ``lease`` until install)
+                    P = rep.pool.page_size
+                    n_total = -(-len(req.prompt) // P)
+                    payload = {
+                        "stacks": extract_row_pages(
+                            row_cache, rep.pool.axes, 0, lease.pages,
+                            n_total - lease.pages, P),
+                        "resident": strip_kv_nodes(row_cache),
+                    }
+                    rep.channel.send_kv(
+                        payload, None,
+                        meta={"rid": req.rid, "first_token": tok,
+                              "prompt_len": len(req.prompt),
+                              "start_page": lease.pages},
+                    )
+                    rep.leases[req.rid] = lease
                 rep.inflight[req.rid] = req
         installed = 0
         for rep in self.replicas:
@@ -492,11 +659,31 @@ class DisaggServer:
                 if env is None:
                     break
                 req = rep.inflight.pop(env.meta["rid"])
-                ok = rep.batcher.install_prefilled(
-                    req, env.cache, env.meta["first_token"]
-                )
-                assert ok, "pump() never sends more KV than there are free slots"
+                if rep.pool is None:
+                    ok = rep.batcher.install_prefilled(
+                        req, env.cache, env.meta["first_token"]
+                    )
+                    # the capacity budget reserves a slot for every send
+                    # on the legacy plane — a failure here is a real
+                    # accounting bug, not back-pressure
+                    assert ok, \
+                        "pump() never sends more KV than there are free slots"
+                else:
+                    lease = rep.leases.pop(env.meta["rid"])
+                    ok = rep.batcher.install_paged(
+                        req, env.cache["stacks"], env.cache["resident"],
+                        env.meta["start_page"], env.meta["first_token"],
+                        lease,
+                    )
+                    if not ok:
+                        # pages vanished between send and install (e.g. a
+                        # lease elsewhere pinned the evictable cache this
+                        # admission counted on): re-home, never drop
+                        rep.pool.release_lease(lease)
+                        self._block_on_pool(req, deferred)
+                        continue
                 installed += 1
+        self.pending.extendleft(reversed(deferred))
         return installed
 
     def step(self) -> int:
@@ -544,10 +731,34 @@ class DisaggServer:
             out.extend(rep.batcher.done)
         return out
 
+    def pool_occupancy(self) -> float:
+        """Worst committed-page pressure across live replica pools (the
+        third autoscale signal beside queue depth and the TPOT tail);
+        0.0 when the cache plane is not paged."""
+        occ = [rep.pool.occupancy() for rep in self.replicas
+               if rep.pool is not None]
+        return max(occ) if occ else 0.0
+
     def stats(self) -> dict:
         from repro.core.accounting import summarize_requests
         ds = self._detached_stats
+
+        pools = [rep.pool.stats() for rep in self.replicas
+                 if rep.pool is not None]
+
+        def pool_sum(key):
+            return ds[key] + sum(p[key] for p in pools)
+
         return {
+            "paged_kv": bool(pools),
+            "prefix_hit_tokens": pool_sum("prefix_hit_tokens"),
+            "prefix_miss_tokens": pool_sum("prefix_miss_tokens"),
+            "pages_evicted": pool_sum("pages_evicted"),
+            "kv_bytes_saved": pool_sum("kv_bytes_saved"),
+            "pages_in_use": sum(p["pages_in_use"] for p in pools),
+            "pool_occupancy": max((p["occupancy"] for p in pools),
+                                  default=0.0),
+            "blocked_on_pool": self.blocked_on_pool,
             "decode_serving": summarize_requests(self.done),
             "prefill_chunked": self.worker is not None,
             "prefill_invocations": (

@@ -1,0 +1,658 @@
+"""KVPool — paged KV memory with radix-tree prefix sharing.
+
+The paper's memory model applied to the serving cache plane: each subOS
+(here: each decode cell) owns an *isolated* arena of physical memory, and
+the supervisor-of-the-cache (the pool) grants *shared* read-only mappings
+only on demand.  Concretely:
+
+* **Isolate first** — every request's KV lives in page-granular private
+  allocations (pages of ``page_size`` positions spanning all layers); a
+  block table maps ``(slot, logical_page) -> physical_page``, and a slot
+  only ever holds the pages its request actually reached — no more dense
+  ``max_len`` slabs committed to 12-token prompts.
+* **Then share** — immutable, fully-written prompt pages are *interned*
+  into a :class:`PrefixTree` (a radix tree over ``page_size``-token
+  chunks) with refcounts.  A new request whose prompt shares a cached
+  prefix maps those pages read-only (copy-free), skips their prefill
+  compute entirely (only the suffix runs, via ``Model.prefill_extend``),
+  and allocates private pages from its divergence point.  The partial
+  boundary page is the copy-on-write edge: it is always private, so
+  decode writes can never touch a shared page.
+* **Revoke on pressure** — admission *blocks* (requests stay queued) when
+  the pool is exhausted, and interned pages whose refcount has dropped to
+  zero are LRU-evicted to make room, exactly like the paper's
+  supervisor-mediated reclamation of granted-but-idle resources (and in
+  the spirit of XOS's application-defined memory mapping and OSmosis'
+  explicit sharing-set semantics — see PAPERS.md).
+
+Exactness: for causal-KV families the K/V at position ``i`` depends only
+on tokens ``<= i`` (plus, for encdec, the request's source features — the
+tree roots are keyed by a source digest), so an interned page written by
+one request is bit-identical to what any other request with the same
+prefix would have computed; chunk-granular matching means partial matches
+are misses.  Recurrent families (ssm/hybrid) fold history into
+non-positional state and are a declared non-goal — they keep the dense
+per-slot cache (``Model.supports_paged_kv``).
+
+The decode step needs only block-table indirection in front of the
+existing kernels: gather dense per-slot views from the arena, run the
+unchanged ``Model.decode``, scatter each slot's current (always-private)
+page back.  ``slot_pos`` position-masking already hides unmapped slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cache_utils import (
+    clean_arena_pages,
+    extract_row_pages,
+    gather_pages,
+    install_cross_memory,
+    kv_cache_nodes,
+    kv_node_axes,
+    kv_position_bytes,
+    page_arena,
+    read_arena_pages,
+    rebuild_kv_nodes,
+    scatter_current_pages,
+    strip_kv_nodes,
+    write_arena_pages,
+)
+from repro.models.layers import KVSlice
+from repro.serve.serve_step import bucket_len, sample_tokens
+
+
+class PoolExhausted(RuntimeError):
+    """No free or evictable page is left — the caller must requeue."""
+
+
+def request_ctx_key(req) -> Optional[tuple]:
+    """Prefix-tree root key for a request's non-token context.
+
+    encdec decoder KV depends on the request's source features as well as
+    its tokens, so prompts may only share pages when the sources are
+    byte-identical; other families return None (one shared root)."""
+    src = getattr(req, "src", None)
+    if src is None:
+        return None
+    a = np.ascontiguousarray(np.asarray(src))
+    return ("src", a.shape, hashlib.sha1(a.tobytes()).hexdigest())
+
+
+class _Node:
+    """One interned page: a ``page_size``-token chunk under its parent."""
+
+    __slots__ = ("parent", "key", "children", "page", "refs", "last_used")
+
+    def __init__(self, parent, key, page):
+        self.parent = parent
+        self.key = key                  # tuple of page_size token ids
+        self.children: Dict[tuple, "_Node"] = {}
+        self.page = page                # physical page id (None for roots)
+        self.refs = 0
+        self.last_used = 0
+
+
+class PrefixTree:
+    """Radix tree over ``page_size``-token chunks with refcounted pages.
+
+    Nodes are interned *full* pages only — a prompt's partial tail chunk
+    never enters the tree, so every match is exact by construction.
+    Refcounts track live users (slots holding the page mapped, or
+    in-flight leases); refcount-0 nodes are cache, reclaimable LRU."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._roots: Dict[Optional[tuple], _Node] = {}
+        self._clock = 0
+        self.interned = 0               # live interned (non-root) nodes
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def root(self, ctx_key) -> _Node:
+        if ctx_key not in self._roots:
+            self._roots[ctx_key] = _Node(None, None, None)
+        return self._roots[ctx_key]
+
+    def match(self, prompt, ctx_key) -> List[_Node]:
+        """Longest chain of interned full-chunk nodes matching ``prompt``
+        — capped so at least one suffix token is left to compute (the
+        extend invocation must produce the first output token)."""
+        P = self.page_size
+        L = len(prompt)
+        node = self._roots.get(ctx_key)
+        out: List[_Node] = []
+        if node is None:
+            return out
+        for lp in range(max(L - 1, 0) // P):
+            child = node.children.get(tuple(int(t) for t in
+                                            prompt[lp * P:(lp + 1) * P]))
+            if child is None:
+                break
+            out.append(child)
+            node = child
+        return out
+
+    def acquire(self, nodes: List[_Node]):
+        now = self._tick()
+        for n in nodes:
+            n.refs += 1
+            n.last_used = now
+
+    def release(self, nodes: List[_Node]):
+        now = self._tick()
+        for n in nodes:
+            assert n.refs > 0, "refcount underflow on an interned page"
+            n.refs -= 1
+            n.last_used = now
+
+    def insert(self, parent: _Node, key: tuple, page: int) -> _Node:
+        assert key not in parent.children
+        node = _Node(parent, key, page)
+        node.last_used = self._tick()
+        parent.children[key] = node
+        self.interned += 1
+        return node
+
+    def _walk(self):
+        stack = list(self._roots.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.page is not None:
+                yield n
+
+    def evictable_pages(self) -> int:
+        """Pages reclaimable right now: interned nodes whose whole
+        subtree is refcount-0 (evicting leaf-upward never strands a
+        live descendant's prefix).  One ITERATIVE bottom-up pass — each
+        node's pinned flag is computed once, children before parents;
+        no recursion, so page chains as deep as max_len/page_size (long
+        shared prompts) can never blow the interpreter stack."""
+        total = 0
+        pinned: Dict[int, bool] = {}
+        for root in self._roots.values():
+            stack = [(root, False)]
+            while stack:
+                n, seen = stack.pop()
+                if not seen:
+                    stack.append((n, True))
+                    stack.extend((c, False) for c in n.children.values())
+                    continue
+                p = n.refs > 0 or any(pinned[id(c)]
+                                      for c in n.children.values())
+                pinned[id(n)] = p
+                if n.page is not None and not p:
+                    total += 1
+        return total
+
+    def evict_lru(self) -> Optional[Tuple[_Node, int]]:
+        """Detach the least-recently-used evictable LEAF node; returns
+        (node, freed page id) or None when nothing is evictable.  A
+        childless node's subtree is itself, so evictability is just its
+        own refcount."""
+        best: Optional[_Node] = None
+        for n in self._walk():
+            if (n.refs == 0 and not n.children
+                    and (best is None or n.last_used < best.last_used)):
+                best = n
+        if best is None:
+            return None
+        del best.parent.children[best.key]
+        self.interned -= 1
+        return best, best.page
+
+
+@dataclasses.dataclass
+class PrefixLease:
+    """An acquired (incref'd) chain of shared prefix nodes.
+
+    Held from lookup until the pages are mapped into a slot (ownership
+    transfers to the slot) or the request is abandoned (release)."""
+
+    nodes: List[_Node]
+    page_size: int
+    released: bool = False
+
+    @property
+    def pages(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def tokens(self) -> int:
+        return len(self.nodes) * self.page_size
+
+
+class KVPool:
+    """Page-granular KV arena + block table + prefix tree for one cell.
+
+    Two deployment shapes share this class:
+
+    * a *decode* pool (``slots`` > 0) backs a ``ContinuousBatcher``: the
+      block table is the storage plane its jitted decode step reads
+      through, and slot admission reserves a private-page *pocket* up
+      front (worst case ``ceil((prompt + max_new) / page_size)`` minus
+      the shared prefix) so mid-decode page-boundary growth can never
+      fail — admission is the single choke point that blocks on
+      exhaustion;
+    * a *prefill* pool (``slots`` == 0) backs a ``PrefillWorker``: no
+      block table traffic, just the tree + arena as a prefix cache that
+      lets warm prompts skip their shared chunks' prefill compute.
+    """
+
+    def __init__(self, model, *, max_len: int, page_size: int = 16,
+                 slots: int = 0, num_pages: Optional[int] = None,
+                 accounting=None):
+        if not model.supports_paged_kv:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged KV cache")
+        if max_len % page_size:
+            raise ValueError(f"max_len={max_len} not a multiple of "
+                             f"page_size={page_size}")
+        self.model = model
+        self.max_len = max_len
+        self.page_size = page_size
+        self.slots = slots
+        self.n_logical = max_len // page_size
+        self.num_pages = int(num_pages if num_pages is not None else
+                             (slots + 2) * self.n_logical if slots
+                             else 8 * self.n_logical)
+        if self.num_pages < self.n_logical:
+            raise ValueError("pool smaller than one request's worst case")
+        self.template = model.cache_specs(1, max_len)
+        self.axes = kv_node_axes(model, 1, max_len)
+        self.position_bytes = kv_position_bytes(model, max_len)
+        self.arena = page_arena(model, self.num_pages, page_size)
+        self.sentinel = self.num_pages          # unmapped block-table entry
+        self.block_table = np.full((max(slots, 1), self.n_logical),
+                                   self.sentinel, np.int32)
+        self.tree = PrefixTree(page_size)
+        self.free: deque = deque(range(self.num_pages))
+        self.accounting = accounting
+        # per-slot ownership: shared tree nodes (refcounted), private
+        # pages (this request's divergent/boundary/decode pages), and the
+        # pre-reserved pocket future boundary crossings draw from
+        self._shared: List[List[_Node]] = [[] for _ in range(max(slots, 1))]
+        self._private: List[List[int]] = [[] for _ in range(max(slots, 1))]
+        self._pocket: List[List[int]] = [[] for _ in range(max(slots, 1))]
+        self.pages_evicted = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_miss_tokens = 0
+        self.kv_bytes_saved = 0
+        # arena mutators run jitted with the arena DONATED so updates are
+        # in-place buffer writes, not whole-arena functional copies — the
+        # admission path must not pay O(arena) per request (compiled
+        # variants are bounded by the <= n_logical distinct page counts)
+        self._clean_fn = jax.jit(clean_arena_pages, donate_argnums=(0,))
+        self._write_fn = jax.jit(write_arena_pages, donate_argnums=(0,))
+
+    # -- capability ----------------------------------------------------
+    @staticmethod
+    def supported(model, max_len: int, page_size: int) -> bool:
+        """Pool gate: pageable family, page-aligned cache, and an
+        absolute-position cache layout (a rolling SWA buffer keeps only a
+        window of *slots*, so page ids would not be stable)."""
+        w = model.cfg.sliding_window
+        return (model.supports_paged_kv
+                and max_len % page_size == 0
+                and (w is None or w >= max_len))
+
+    # -- occupancy -----------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        """Allocated pages (slot-held, pocketed, or interned cache)."""
+        return self.num_pages - len(self.free)
+
+    def evictable_pages(self) -> int:
+        return self.tree.evictable_pages()
+
+    def available_pages(self) -> int:
+        """Pages an admission could obtain right now (free + reclaimable
+        refcount-0 interned cache)."""
+        return len(self.free) + self.evictable_pages()
+
+    def occupancy(self) -> float:
+        """Committed (non-reclaimable) fraction of the arena — the
+        autoscale pressure signal: 1.0 means even evicting every cached
+        prefix frees nothing."""
+        return 1.0 - self.available_pages() / self.num_pages
+
+    def stats(self) -> dict:
+        return {
+            "num_pages": self.num_pages,
+            "pages_in_use": self.pages_in_use,
+            "pages_evicted": self.pages_evicted,
+            "interned_pages": self.tree.interned,
+            "occupancy": self.occupancy(),
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_miss_tokens": self.prefix_miss_tokens,
+            "kv_bytes_saved": self.kv_bytes_saved,
+        }
+
+    def _gauge(self):
+        if self.accounting is not None:
+            self.accounting.record_gauge("pages_in_use", self.pages_in_use)
+
+    # -- page supply ---------------------------------------------------
+    def _alloc_raw(self) -> Optional[int]:
+        if self.free:
+            return self.free.popleft()
+        evicted = self.tree.evict_lru()
+        if evicted is None:
+            return None
+        _, page = evicted
+        self.pages_evicted += 1
+        if self.accounting is not None:
+            self.accounting.record_counter("pages_evicted")
+        return page
+
+    def _take_pocket(self, slot: int) -> int:
+        assert self._pocket[slot], (
+            "pocket underflow: admission reserved too few pages")
+        return self._pocket[slot].pop()
+
+    # -- prefix lookup -------------------------------------------------
+    def lease(self, prompt, ctx_key=None) -> PrefixLease:
+        """Match + acquire the longest interned prefix for ``prompt``.
+
+        The acquired nodes are pinned (non-evictable) until the lease is
+        released or its ownership transfers to a slot via ``admit``."""
+        nodes = self.tree.match(prompt, ctx_key)
+        self.tree.acquire(nodes)
+        return PrefixLease(nodes=nodes, page_size=self.page_size)
+
+    def empty_lease(self) -> PrefixLease:
+        """A zero-page lease (cold request / token-at-a-time admit)."""
+        return PrefixLease(nodes=[], page_size=self.page_size)
+
+    def release_lease(self, lease: PrefixLease):
+        if lease is None or lease.released:
+            return
+        self.tree.release(lease.nodes)
+        lease.released = True
+
+    def note_lookup(self, prompt_len: int, hit_tokens: int,
+                    accounting=None, saved_bytes: bool = True):
+        """Record a prefix lookup's hit/miss token split (and the KV
+        bytes the hit avoided recomputing/duplicating).
+
+        Counted per ADMISSION ATTEMPT, matching the rest of the serving
+        ledger (``kv_transfers`` also counts a requeued request's
+        re-send): a request re-admitted after a replica detach really
+        did skip its prefix work twice."""
+        acc = accounting if accounting is not None else self.accounting
+        self.prefix_hit_tokens += hit_tokens
+        self.prefix_miss_tokens += prompt_len - hit_tokens
+        saved = hit_tokens * self.position_bytes if saved_bytes else 0
+        self.kv_bytes_saved += saved
+        if acc is not None:
+            acc.record_counter("prefix_hit_tokens", hit_tokens)
+            acc.record_counter("prefix_miss_tokens", prompt_len - hit_tokens)
+            if saved:
+                acc.record_counter("kv_bytes_saved", saved)
+
+    # -- slot lifecycle ------------------------------------------------
+    def required_pages(self, prompt_len: int, max_new: int,
+                       shared_pages: int = 0) -> int:
+        """Worst-case private pages a request can touch: every page up to
+        its last writable position, minus the shared prefix.  At least
+        one post-prompt position is counted — install always maps the
+        page holding position ``prompt_len`` for the first decode write."""
+        last = min(prompt_len + max(max_new, 1), self.max_len)
+        return -(-last // self.page_size) - shared_pages
+
+    def admit(self, slot: int, lease: PrefixLease, prompt_len: int,
+              max_new: int):
+        """Commit a slot to a request: map the lease's shared pages into
+        the block table (ownership of the lease transfers to the slot)
+        and materialize the full private-page pocket, evicting LRU
+        refcount-0 prefixes as needed.  Raises :class:`PoolExhausted`
+        (with the lease still held by the CALLER to release) when the
+        arena cannot cover the worst case — the admission choke point
+        that makes exhaustion a queueing event, not an OOM."""
+        assert not self._shared[slot] and not self._private[slot] \
+            and not self._pocket[slot], f"slot {slot} not released"
+        need = self.required_pages(prompt_len, max_new, lease.pages)
+        got: List[int] = []
+        for _ in range(need):
+            page = self._alloc_raw()
+            if page is None:
+                self.free.extend(got)
+                raise PoolExhausted(
+                    f"need {need} pages, got {len(got)} "
+                    f"(free={len(self.free)}, "
+                    f"evictable={self.evictable_pages()})")
+            got.append(page)
+        if got:
+            self.arena = self._clean_fn(self.arena,
+                                        jnp.asarray(got, jnp.int32))
+        self._pocket[slot] = got
+        for lp, node in enumerate(lease.nodes):
+            self.block_table[slot, lp] = node.page
+        self._shared[slot] = list(lease.nodes)
+        lease.released = True            # ownership moved to the slot
+        self.note_lookup(prompt_len, lease.tokens)
+        self._gauge()
+
+    def map_private(self, slot: int, logical_page: int) -> int:
+        """Map a pocket page at ``logical_page`` (decode growth / the
+        copy-on-write boundary page)."""
+        page = self._take_pocket(slot)
+        self.block_table[slot, logical_page] = page
+        self._private[slot].append(page)
+        return page
+
+    def ensure_decode_page(self, slot: int, pos: int):
+        """Called before a decode step: make sure the page holding
+        ``pos`` is mapped (drawn from the slot's reserved pocket, so it
+        cannot fail)."""
+        lp = pos // self.page_size
+        if self.block_table[slot, lp] == self.sentinel:
+            self.map_private(slot, lp)
+
+    def install_stacks(self, slot: int, prompt, ctx_key,
+                       stacks: List[KVSlice], start_page: int):
+        """Map a request's computed suffix pages into ``slot``.
+
+        ``stacks``: canonical page stacks covering logical pages
+        ``start_page ..`` up to the prompt's last page.  Full prompt
+        pages are INTERNED (copied into pool pages owned by the tree,
+        refcount 1 held by this slot) so the next request with this
+        prefix shares them; the partial boundary page stays private
+        (copy-on-write edge).  Finally the page holding position
+        ``len(prompt)`` is mapped so the first decode write lands."""
+        P = self.page_size
+        L = len(prompt)
+        n = stacks[0].k.shape[0] if stacks else 0
+        parent = (self._shared[slot][-1] if self._shared[slot]
+                  else self.tree.root(ctx_key))
+        new_ids: List[int] = []         # pages needing a data write,
+        new_rows: List[int] = []        # batched into ONE arena scatter
+        for j in range(n):
+            lp = start_page + j
+            if (lp + 1) * P <= L:
+                key = tuple(int(t) for t in prompt[lp * P:(lp + 1) * P])
+                node = parent.children.get(key)
+                if node is None:
+                    page = self._take_pocket(slot)
+                    node = self.tree.insert(parent, key, page)
+                    new_ids.append(page)
+                    new_rows.append(j)
+                node.refs += 1
+                node.last_used = self.tree._tick()
+                self._shared[slot].append(node)
+                self.block_table[slot, lp] = node.page
+                parent = node
+            else:
+                page = self._take_pocket(slot)
+                new_ids.append(page)
+                new_rows.append(j)
+                self._private[slot].append(page)
+                self.block_table[slot, lp] = page
+        if new_ids:
+            rows = jnp.asarray(new_rows, jnp.int32)
+            sub = [KVSlice(k=s.k[rows], v=s.v[rows],
+                           slot_pos=s.slot_pos[rows]) for s in stacks]
+            self.arena = self._write_fn(self.arena,
+                                        jnp.asarray(new_ids, jnp.int32), sub)
+        self.ensure_decode_page(slot, L)
+        self._gauge()
+
+    def install_rows(self, slot: int, prompt, ctx_key, rows_cache,
+                     row: int, start_page: int):
+        """``install_stacks`` fed straight from a dense prefill/extend
+        rows cache (the colocated batcher path)."""
+        P = self.page_size
+        n_total = -(-len(prompt) // P)
+        stacks = extract_row_pages(rows_cache, self.axes, row, start_page,
+                                   n_total - start_page, P)
+        self.install_stacks(slot, prompt, ctx_key, stacks, start_page)
+
+    def release_slot(self, slot: int):
+        """Free a slot's pages: decref shared prefixes (they stay
+        interned as reclaimable cache), return private + pocket pages to
+        the free list, unmap the block-table row."""
+        self.tree.release(self._shared[slot])
+        self._shared[slot] = []
+        self.free.extend(self._private[slot])
+        self._private[slot] = []
+        self.free.extend(self._pocket[slot])
+        self._pocket[slot] = []
+        self.block_table[slot, :] = self.sentinel
+        self._gauge()
+
+    def release_all(self):
+        for slot in range(len(self._shared)):
+            self.release_slot(slot)
+
+    # -- prefill-side prefix cache (slot-less) -------------------------
+    def intern_rows(self, prompt, ctx_key, rows_cache, row: int):
+        """Best-effort intern of a prompt's full pages from a dense rows
+        cache (the PrefillWorker's cache-fill path — refcounts stay 0,
+        pages are pure reclaimable cache).  Stops silently when no page
+        can be obtained."""
+        P = self.page_size
+        L = len(prompt)
+        parent = self.tree.root(ctx_key)
+        path: List[_Node] = []          # pinned so eviction inside
+        new_ids: List[int] = []         # _alloc_raw can't detach our walk
+        new_lps: List[int] = []
+        try:
+            for lp in range(L // P):
+                key = tuple(int(t) for t in prompt[lp * P:(lp + 1) * P])
+                node = parent.children.get(key)
+                if node is None:
+                    # a fresh node's children can't pre-exist, so from
+                    # the first miss on every page is new — the data
+                    # writes batch into one scatter below
+                    page = self._alloc_raw()
+                    if page is None:
+                        break
+                    node = self.tree.insert(parent, key, page)
+                    new_ids.append(page)
+                    new_lps.append(lp)
+                self.tree.acquire([node])
+                path.append(node)
+                parent = node
+            if new_ids:
+                stacks = extract_row_pages(rows_cache, self.axes, row,
+                                           new_lps[0], len(new_lps), P)
+                self.arena = self._write_fn(
+                    self.arena, jnp.asarray(new_ids, jnp.int32), stacks)
+        finally:
+            self.tree.release(path)
+            self._gauge()
+
+    def read_pages(self, page_ids) -> list:
+        """Canonical page stacks for ``page_ids`` (test / audit surface:
+        the copy-on-write suite snapshots interned pages through this)."""
+        return read_arena_pages(self.arena, page_ids)
+
+
+# --------------------------------------------------------------------------
+# jitted programs over the paged cache
+# --------------------------------------------------------------------------
+def build_paged_serve_step(model, temperature, *, axes, template,
+                           page_size: int):
+    """paged_step(params, arena, resident, block_table, batch, rng) ->
+    (next_tokens, arena, resident).
+
+    Block-table indirection in front of the EXISTING decode kernels:
+    gather dense per-slot KV views from the arena, run the unchanged
+    ``Model.decode`` (``slot_pos`` masking hides unmapped pages), then
+    scatter each slot's current — by invariant private — page back.
+    ``resident`` carries the non-positional cache remainder (encdec
+    cross memory) dense per slot."""
+    def paged_step(params, arena, resident, block_table, batch, rng):
+        nodes = gather_pages(arena, axes, block_table, page_size)
+        cache = rebuild_kv_nodes(template, resident, nodes)
+        logits, new_cache = model.decode(params, cache, batch)
+        arena = scatter_current_pages(
+            arena, kv_cache_nodes(new_cache), axes, block_table,
+            batch["pos"], page_size,
+        )
+        toks = sample_tokens(logits, rng, temperature)
+        return toks, arena, strip_kv_nodes(new_cache)
+    return paged_step
+
+
+def run_extend_group(extend_fn, params, scratch, pool: KVPool, reqs,
+                     leases: List[PrefixLease], *, chunk: int, max_len: int,
+                     rng, model, accounting=None):
+    """ONE suffix-extend invocation over a group of prefix-hit requests.
+
+    Mirrors ``run_prefill_group``: the batch dim pads to the next power
+    of two with dummy rows and all suffixes share one pad bucket, but
+    each row carries its own prefix offset (``pos``), so requests with
+    DIFFERENT hit depths batch together.  The resident-prefix context is
+    materialized with ONE block-table gather over the whole group (rows'
+    leases become block-table rows; everything beyond a prefix reads
+    empty/position-masked by the fill semantics), plus zeroed resident
+    leaves (+ per-request cross memory re-encoded for encdec) — no
+    per-row copies, no stale scratch state by construction.  ``scratch``
+    is a ``batch -> cache`` factory (callers memoize theirs; only its
+    structure and resident leaves are used).  Returns
+    (first_tokens, b_pad-row rows cache, advanced rng, b_pad).
+    """
+    B = len(reqs)
+    b_pad = 1 << (B - 1).bit_length()
+    P = pool.page_size
+    prefix = [lease.tokens for lease in leases] + [0] * (b_pad - B)
+    suffixes = [np.asarray(r.prompt[h:], np.int32)
+                for r, h in zip(reqs, prefix)]
+    s_pad = bucket_len(max(len(s) for s in suffixes), chunk, max_len)
+    tokens = np.zeros((b_pad, s_pad), np.int32)
+    lengths = np.zeros((b_pad,), np.int32)
+    for i, s in enumerate(suffixes):
+        tokens[i, :len(s)] = s
+        lengths[i] = len(s)
+    bt = np.full((b_pad, pool.n_logical), pool.sentinel, np.int32)
+    for i, lease in enumerate(leases):
+        for lp, node in enumerate(lease.nodes):
+            bt[i, lp] = node.page
+    nodes = gather_pages(pool.arena, pool.axes, jnp.asarray(bt), P)
+    resident = jax.tree.map(jnp.zeros_like, strip_kv_nodes(scratch(b_pad)))
+    cache = rebuild_kv_nodes(pool.template, resident, nodes)
+    srcs = [getattr(r, "src", None) for r in reqs] + [None] * (b_pad - B)
+    mem = model.encode_cross_rows(params, srcs, max_len)
+    if mem is not None:
+        cache = install_cross_memory(cache, mem, list(range(b_pad)))
+    batch = {
+        "tokens": jnp.asarray(tokens),
+        "pos": jnp.asarray(prefix, jnp.int32),
+        "length": jnp.asarray(lengths),
+    }
+    rng, sub = jax.random.split(rng)
+    toks, _logits, rows = extend_fn(params, cache, batch, sub)
+    if accounting is not None and b_pad != B:
+        accounting.record_counter("prefill_dummy_rows", b_pad - B)
+    return [int(t) for t in np.asarray(toks)], rows, rng, b_pad

@@ -81,6 +81,23 @@ def build_prefill_step(model: Model, temperature: float = 0.0) -> Callable:
     return prefill_step
 
 
+def build_extend_step(model: Model, temperature: float = 0.0) -> Callable:
+    """extend_step(params, cache, batch, rng) -> (first_tokens, logits, cache).
+
+    The suffix-only sibling of ``prefill_step`` (paged prefix sharing):
+    ``batch`` = {tokens (B, S_ext), pos (B,) prefix offsets, length (B,)
+    true suffix lengths}; ``cache`` is a dense scratch cache whose rows
+    already hold each request's shared prefix (gathered from pool pages)
+    with everything beyond it position-masked.  Buffers are not donated —
+    callers reuse the scratch across invocations.
+    """
+    def extend_step(params, cache, batch, rng):
+        logits, cache = model.prefill_extend(params, batch, cache)
+        toks = sample_tokens(logits, rng, temperature)
+        return toks, logits, cache
+    return extend_step
+
+
 def run_prefill_prompts(step_fn: Callable, params, scratch_cache, prompts,
                         *, chunk: int, max_len: int, rng,
                         model: Optional[Model] = None,
