@@ -24,6 +24,7 @@ bench-smoke:
 	done
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.elastic_sched --smoke
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/prefix_cache.py --smoke
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/multitenant.py --smoke
 
 # full benchmark harness (paper tables/figures)
 bench:

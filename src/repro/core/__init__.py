@@ -13,6 +13,7 @@ from repro.core.spec import (  # noqa: F401
     ClusterSpec,
     SLOTarget,
     SpecError,
+    TenantSpec,
 )
 from repro.core.reconciler import Plan, PlanOp, Reconciler  # noqa: F401
 from repro.core.supervisor import Supervisor  # noqa: F401
@@ -25,5 +26,9 @@ from repro.core.channels import (  # noqa: F401
 from repro.core.elastic import ElasticPolicy, ReconcilePolicy  # noqa: F401
 from repro.core.daemon import SupervisorDaemon  # noqa: F401
 from repro.core.guard import BoundaryGuard, BoundaryViolation  # noqa: F401
-from repro.core.accounting import CellAccounting, collective_bytes  # noqa: F401
+from repro.core.accounting import (  # noqa: F401
+    CellAccounting,
+    collective_bytes,
+    tenant_percentile,
+)
 from repro.core.resharding import reshard_tree, tree_bytes  # noqa: F401

@@ -82,6 +82,7 @@ class RequestMetrics:
     tpot: Optional[float] = None     # per-token decode latency after that
     prompt_len: int = 0
     new_tokens: int = 0
+    tenant: Optional[str] = None     # QoS attribution (None = untagged)
 
 
 def summarize_requests(requests) -> dict:
@@ -96,6 +97,19 @@ def summarize_requests(requests) -> dict:
             out[f"{key}_p50"] = float(np.percentile(xs, 50))
             out[f"{key}_p99"] = float(np.percentile(xs, 99))
     return out
+
+
+def tenant_percentile(requests, metric: str, q: float,
+                      tenant: Optional[str] = None) -> Optional[float]:
+    """Percentile ``q`` of ``metric`` (``"ttft"``/``"tpot"``) over the
+    subset of ``requests`` attributed to ``tenant`` (None = all).  The
+    per-tenant SLO probe: ``tenant_percentile(acct.requests, "ttft", 99,
+    "paid")`` is the number a tenant's SLOTarget is judged against."""
+    import numpy as np
+    xs = [getattr(r, metric) for r in requests
+          if getattr(r, metric, None) is not None
+          and (tenant is None or getattr(r, "tenant", None) == tenant)]
+    return float(np.percentile(xs, q)) if xs else None
 
 
 @dataclasses.dataclass
@@ -129,6 +143,9 @@ class CellAccounting:
         # named event counters (serving-path waste/degradation signals:
         # prefill_dummy_rows, prefill_fallback_requests, ...)
         self.counters: Dict[str, int] = {}
+        # the same counters broken down by tenant label:
+        # tenant -> name -> value
+        self.tenant_counters: Dict[str, Dict[str, int]] = {}
 
     def register_program(self, name: str, compiled, hlo_text: Optional[str] = None):
         ca = _normalize_cost_analysis(compiled.cost_analysis())
@@ -147,9 +164,11 @@ class CellAccounting:
 
     def record_request(self, rid: int, *, ttft: Optional[float] = None,
                        tpot: Optional[float] = None, prompt_len: int = 0,
-                       new_tokens: int = 0) -> RequestMetrics:
+                       new_tokens: int = 0,
+                       tenant: Optional[str] = None) -> RequestMetrics:
         rm = RequestMetrics(rid=rid, ttft=ttft, tpot=tpot,
-                            prompt_len=prompt_len, new_tokens=new_tokens)
+                            prompt_len=prompt_len, new_tokens=new_tokens,
+                            tenant=tenant)
         self.requests.append(rm)
         return rm
 
@@ -157,17 +176,41 @@ class CellAccounting:
         """p50/p99 TTFT and TPOT over every request this cell served."""
         return summarize_requests(self.requests)
 
-    def record_counter(self, name: str, n: int = 1):
+    def tenant_summary(self) -> Dict[str, dict]:
+        """:func:`summarize_requests` broken down by tenant label.
+        Untagged requests roll up under ``None``."""
+        by: Dict[Optional[str], List[RequestMetrics]] = defaultdict(list)
+        for r in self.requests:
+            by[r.tenant].append(r)
+        return {t: summarize_requests(rs) for t, rs in by.items()}
+
+    def tenant_percentile(self, metric: str, q: float,
+                          tenant: Optional[str] = None) -> Optional[float]:
+        """Per-tenant tail probe over this cell's request log."""
+        return tenant_percentile(self.requests, metric, q, tenant)
+
+    def record_counter(self, name: str, n: int = 1,
+                       tenant: Optional[str] = None):
         """Bump a named event counter (e.g. batch-padding dummy rows, or
         requests served over a degraded path) — cheap, exact attribution
-        of serving overheads that program costs alone can't show."""
+        of serving overheads that program costs alone can't show.  With
+        ``tenant=`` the bump is additionally recorded under that label
+        in :attr:`tenant_counters` (the global counter still moves, so
+        unlabeled readers see totals)."""
         self.counters[name] = self.counters.get(name, 0) + n
+        if tenant is not None:
+            tc = self.tenant_counters.setdefault(tenant, {})
+            tc[name] = tc.get(name, 0) + n
 
-    def record_gauge(self, name: str, value: int):
+    def record_gauge(self, name: str, value: int,
+                     tenant: Optional[str] = None):
         """Set a point-in-time counter (e.g. ``pages_in_use`` of the
         cell's KV pool) — unlike :meth:`record_counter` it overwrites,
         reflecting current state rather than a cumulative total."""
-        self.counters[name] = value
+        if tenant is not None:
+            self.tenant_counters.setdefault(tenant, {})[name] = value
+        else:
+            self.counters[name] = value
 
     def record_invocation(self, name: str, n: int = 1):
         if name in self.programs:

@@ -74,7 +74,8 @@ class SupervisorDaemon:
                        cooldown: float = 0.0,
                        autoscale_replicas: bool = False,
                        queue_depth=None, queue_high: int = 4,
-                       pool_occupancy=None, occupancy_high: float = 0.9
+                       pool_occupancy=None, occupancy_high: float = 0.9,
+                       tenant: Optional[str] = None
                        ) -> ReconcilePolicy:
         """Build a policy whose bands derive from the spec's SLOTarget.
 
@@ -86,11 +87,17 @@ class SupervisorDaemon:
         len(disagg_server.pending)``, and optionally ``pool_occupancy``,
         e.g. ``disagg_server.pool_occupancy`` — KV-pool pressure) drives
         the server spec's desired replica count.
+
+        With ``tenant`` set, the band derives from that tenant's own
+        :class:`~repro.core.spec.SLOTarget` (``TenantSpec.slo`` on the
+        server cell, falling back to the cell-level SLO) and the window
+        ingests ONLY that tenant's samples — the cell autoscales for
+        the tenant whose objective is actually violated.
         """
         spec = getattr(self.sup, "desired", None)
         if spec is None or not spec.has_cell(server):
             raise ValueError(f"no applied spec declares cell {server!r}")
-        slo = spec.cell(server).slo
+        slo = self._resolve_slo(spec, server, tenant)
         policy = None
         if donor is not None:
             policy = ElasticPolicy.from_slo(
@@ -105,14 +112,27 @@ class SupervisorDaemon:
             self.sup, server, donor, policy,
             replica_policy=replica_policy, queue_depth=queue_depth,
             queue_high=queue_high, pool_occupancy=pool_occupancy,
-            occupancy_high=occupancy_high))
+            occupancy_high=occupancy_high, tenant=tenant))
         # remembered so tick() re-derives the band when the application
         # re-applies a spec with a CHANGED SLOTarget — the objective is
         # the spec's, never frozen at registration time
         pol._slo_conf = {"metric": metric, "hysteresis": hysteresis,
                          "window": window, "percentile": percentile,
-                         "cooldown": cooldown, "seen": slo}
+                         "cooldown": cooldown, "seen": slo,
+                         "tenant": tenant}
         return pol
+
+    @staticmethod
+    def _resolve_slo(spec, server: str, tenant: Optional[str]):
+        """The SLO a policy bands against: the tenant's own declared
+        target when one exists, else the cell-level target."""
+        cell = spec.cell(server)
+        if tenant is not None and getattr(cell, "has_tenant",
+                                          lambda _n: False)(tenant):
+            tslo = cell.tenant(tenant).slo
+            if tslo is not None:
+                return tslo
+        return cell.slo
 
     def _refresh_slo_bands(self, pol: ReconcilePolicy):
         """Re-derive an add_slo_policy band after the spec's SLO changed."""
@@ -122,7 +142,7 @@ class SupervisorDaemon:
         spec = getattr(self.sup, "desired", None)
         if spec is None or not spec.has_cell(pol.server):
             return
-        slo = spec.cell(pol.server).slo
+        slo = self._resolve_slo(spec, pol.server, conf.get("tenant"))
         if slo is None or slo == conf["seen"]:
             return
         kw = {k: conf[k] for k in

@@ -114,7 +114,8 @@ class ReconcilePolicy:
                  queue_depth: Optional[Callable[[], int]] = None,
                  queue_high: int = 4,
                  pool_occupancy: Optional[Callable[[], float]] = None,
-                 occupancy_high: float = 0.9):
+                 occupancy_high: float = 0.9,
+                 tenant: Optional[str] = None):
         if policy is None and replica_policy is None:
             raise ValueError("need at least one of policy / replica_policy")
         if policy is not None and donor is None:
@@ -134,6 +135,11 @@ class ReconcilePolicy:
         # squeeze, but a near-full pool blocks admissions RIGHT NOW
         self.pool_occupancy = pool_occupancy
         self.occupancy_high = occupancy_high
+        # tenant-scoped elasticity: only that tenant's request samples
+        # feed the window, so the cell grows for the tenant whose SLO is
+        # actually violated — a noisy co-tenant's good latency can't mask
+        # a victim's bad tail (and vice versa).  None = all traffic.
+        self.tenant = tenant
         window = policy.window if policy is not None else replica_policy.window
         self.samples: Deque[float] = deque(maxlen=window)
         self.replica_samples: Deque[float] = deque(
@@ -168,6 +174,9 @@ class ReconcilePolicy:
             if prev_ident != ident or len(reqs) < start:
                 start = 0
             for r in reqs[start:]:
+                if (self.tenant is not None
+                        and getattr(r, "tenant", None) != self.tenant):
+                    continue
                 if self.policy is not None:
                     v = getattr(r, self.policy.metric, None)
                     if v is not None:
@@ -324,6 +333,8 @@ class ReconcilePolicy:
             action = self._maybe_scale_replicas(now)
         if action:
             action["ts"] = now
+            if self.tenant is not None:
+                action["tenant"] = self.tenant
             self.last_action_ts = now
             self.actions.append(action)
         return action

@@ -34,6 +34,20 @@ Conventions:
 * A :class:`ChannelSpec` between replicated specs expands to the cross
   product of instances (one prefill cell fanning out to N decode cells
   declares a single channel spec).
+
+Tenancy — the subOS model one level up the stack: a serving
+:class:`CellSpec` may carry :class:`TenantSpec`\\ s, and each tenant is
+to the cell what a subOS is to the machine.  *Isolate first*: a tenant's
+``page_quota`` is a physical-resource partition of the cell's KV pool (a
+pocket it can exhaust without ever touching another tenant's pages), its
+``rate``/``burst`` token bucket bounds the work it may inject, and its
+``weight`` sets its deficit-round-robin share of decode slots.  *Then
+share*: the only cross-tenant surface is the pool's **public prefix
+namespace** (e.g. a common system prompt) — a read-only, explicitly
+granted mapping (``share_public``), the exact analogue of the paper's
+supervisor-mediated inter-subOS memory grant.  Per-tenant ``slo``
+targets feed :class:`~repro.core.elastic.ReconcilePolicy` so autoscale
+defends the tenant that is out of SLO, not the aggregate.
 """
 from __future__ import annotations
 
@@ -61,6 +75,58 @@ class SLOTarget:
     tpot_p99: Optional[float] = None
 
 
+#: reserved pocket/namespace names (see ``repro.serve.tenancy``)
+RESERVED_TENANTS = ("__public__", "__shared__")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """Per-tenant QoS contract carried on a serving :class:`CellSpec`.
+
+    * ``weight`` — deficit-round-robin share of decode slots / prefill
+      batches (relative to the other tenants on the cell).
+    * ``page_quota`` — fraction of the cell's KV pool reserved as this
+      tenant's private pocket; the tenant can exhaust its pocket but
+      never the pool.  ``None`` = the tenant draws from the shared
+      leftover commons.
+    * ``rate``/``burst`` — token-bucket admission: at most ``burst``
+      tokens of queued work admitted instantly, refilling at ``rate``
+      tokens/second (a token ≈ one prompt or output position).
+      ``rate=None`` = unthrottled.
+    * ``slo`` — this tenant's own latency objective; feeds per-tenant
+      :class:`~repro.core.elastic.ReconcilePolicy` windows.
+    * ``share_public`` — the supervisor grant: may this tenant map the
+      pool's public prefix namespace read-only?
+    """
+
+    name: str
+    weight: float = 1.0
+    page_quota: Optional[float] = None
+    rate: Optional[float] = None
+    burst: Optional[float] = None
+    slo: Optional[SLOTarget] = None
+    share_public: bool = True
+
+    def __post_init__(self):
+        if not self.name or "/" in self.name:
+            raise SpecError(f"bad tenant name {self.name!r}")
+        if self.name in RESERVED_TENANTS:
+            raise SpecError(f"tenant name {self.name!r} is reserved")
+        if not self.weight > 0:
+            raise SpecError(f"tenant {self.name}: weight must be > 0")
+        if self.page_quota is not None and not 0.0 < self.page_quota <= 1.0:
+            raise SpecError(
+                f"tenant {self.name}: page_quota must be in (0, 1]")
+        if self.rate is not None and not self.rate > 0:
+            raise SpecError(f"tenant {self.name}: rate must be > 0")
+        if self.burst is not None and not self.burst > 0:
+            raise SpecError(f"tenant {self.name}: burst must be > 0")
+        if self.burst is not None and self.rate is None:
+            raise SpecError(
+                f"tenant {self.name}: burst without rate builds no bucket "
+                "— declare the rate it caps, or drop it")
+
+
 @dataclasses.dataclass(frozen=True)
 class CellSpec:
     """Desired state of one (possibly replicated) cell."""
@@ -78,8 +144,21 @@ class CellSpec:
     opt_cfg: Optional[OptConfig] = None
     slo: Optional[SLOTarget] = None
     ckpt_dir: Optional[str] = None
+    tenants: Tuple[TenantSpec, ...] = ()
 
     def __post_init__(self):
+        if self.tenants:
+            if self.role != "serve":
+                raise SpecError(
+                    f"{self.name}: tenants only apply to serve cells")
+            names = [t.name for t in self.tenants]
+            if len(names) != len(set(names)):
+                raise SpecError(f"{self.name}: duplicate tenants {names}")
+            reserved = sum(t.page_quota or 0.0 for t in self.tenants)
+            if reserved > 1.0 + 1e-9:
+                raise SpecError(
+                    f"{self.name}: tenant page quotas sum to {reserved:.3f} "
+                    "> 1.0 — pockets may never oversubscribe the pool")
         if "/" in self.name:
             raise SpecError(f"cell name {self.name!r} may not contain '/' "
                             "(reserved for replica instances)")
@@ -133,6 +212,15 @@ class CellSpec:
                                    or self.max_replicas == 1):
             return [self.name]
         return [f"{self.name}/{i}" for i in range(self.replicas)]
+
+    def tenant(self, name: str) -> TenantSpec:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        raise SpecError(f"{self.name}: no tenant spec {name!r}")
+
+    def has_tenant(self, name: str) -> bool:
+        return any(t.name == name for t in self.tenants)
 
 
 @dataclasses.dataclass(frozen=True)

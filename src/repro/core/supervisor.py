@@ -32,7 +32,7 @@ from repro.core.channels import ArrayChannel, ControlPlane
 from repro.core.guard import BoundaryGuard
 from repro.core.partition import DeviceGrid, PartitionError, PartitionTable
 from repro.core.reconciler import Plan, Reconciler
-from repro.core.spec import ClusterSpec
+from repro.core.spec import ClusterSpec, SpecError
 from repro.train.optimizer import OptConfig
 
 
@@ -58,9 +58,28 @@ class Supervisor:
         The spec is total: cells it does not name are destroyed.  Returns
         the executed :class:`~repro.core.reconciler.Plan`.
         """
+        self._validate_tenancy(spec)
         self.desired = spec
         self._log("apply", cells=[c.name for c in spec.cells])
         return self.reconcile()
+
+    @staticmethod
+    def _validate_tenancy(spec: ClusterSpec):
+        """Tenancy is a property of a serving SURFACE, not one cell: a kv
+        channel makes its two ends (prefill feeding decode) one surface,
+        so a tenant contract declared on both ends must be identical —
+        otherwise admission and quota decisions would disagree about the
+        same request depending on which cell looks at it.  Declaring the
+        contract on only one end is fine (the surface adopts it)."""
+        for ch in spec.channels:
+            if ch.kind != "kv":
+                continue
+            a, b = spec.cell(ch.src), spec.cell(ch.dst)
+            if a.tenants and b.tenants and a.tenants != b.tenants:
+                raise SpecError(
+                    f"kv-joined cells {a.name!r} and {b.name!r} declare "
+                    "conflicting tenant contracts — one serving surface, "
+                    "one contract")
 
     def reconcile(self) -> Plan:
         """Converge observed state toward the last applied spec.

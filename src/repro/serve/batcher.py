@@ -31,6 +31,13 @@ prefill chunks entirely (only the suffix runs, one ``prefill_extend``
 invocation per pad bucket), and admission BLOCKS (requests stay queued)
 when the pool is exhausted instead of over-committing memory.  Recurrent
 families (ssm/hybrid) and rolling-SWA layouts keep the dense cache.
+
+ADMISSION IS TENANT-AWARE (``repro.serve.tenancy``): requests carry a
+``tenant`` tag, a persistent deficit-round-robin scheduler shares free
+slots by tenant weight, token buckets rate-limit each tenant's own FIFO,
+and a request blocked on pool pages is scanned PAST instead of stalling
+the whole queue.  With no tenants configured all of this degenerates to
+the old FIFO behavior (minus the head-of-line block).
 """
 from __future__ import annotations
 
@@ -42,6 +49,12 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.tenancy import (
+    DEFAULT_TENANT,
+    TenantRegistry,
+    TenantScheduler,
+)
 
 
 @dataclasses.dataclass
@@ -57,6 +70,11 @@ class Request:
     # per-request source features (S_src, d_model) for encdec models;
     # None = no source (zero cross memory).  Ignored by other families.
     src: Optional[np.ndarray] = None
+    # QoS attribution: which tenant's bucket/weight/page-pocket this
+    # request bills.  ``public=True`` puts its prompt in the shared
+    # prefix namespace any granted tenant may hit read-only.
+    tenant: str = DEFAULT_TENANT
+    public: bool = False
 
     @property
     def latency(self) -> Optional[float]:
@@ -91,7 +109,8 @@ class ContinuousBatcher:
                  temperature: float = 0.0, eos_token: Optional[int] = None,
                  prefill_chunk: Optional[int] = 32, accounting=None,
                  kv_pool: Any = "auto", page_size: int = 16,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None, tenants: Any = None,
+                 tenant_buckets: bool = True, quantum: int = 256):
         from repro.models.cache_utils import cache_batch_axes, strip_kv_nodes
         from repro.serve.kvpool import KVPool, build_paged_serve_step
         from repro.serve.serve_step import (
@@ -111,13 +130,26 @@ class ContinuousBatcher:
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.queue: deque = deque()
         self.done: List[Request] = []
+        # tenant QoS plane: weights + token buckets drive _admit through
+        # a persistent DRR scheduler; page quotas (if any tenant declares
+        # one) partition the pool's arena into bulkheaded pockets.  With
+        # no tenants declared the scheduler degenerates to FIFO-with-
+        # scan-past and the pool stays unpartitioned — the single-tenant
+        # cold path is byte-identical to the pre-tenancy batcher.
+        self.tenants: TenantRegistry = (
+            tenants if isinstance(tenants, TenantRegistry)
+            else TenantRegistry(tenants or (), buckets=tenant_buckets))
+        self.scheduler = TenantScheduler(self.tenants, quantum=quantum)
+        quota_fn = (self.tenants.page_quotas
+                    if any(t.page_quota is not None
+                           for t in self.tenants.specs.values()) else None)
         # paged KV plane: "auto" -> pool iff the family/cache layout
         # supports it; None -> legacy dense per-slot cache; or inject a
         # prebuilt KVPool
         if kv_pool == "auto":
             kv_pool = (KVPool(model, max_len=max_len, page_size=page_size,
                               slots=batch_slots, num_pages=pool_pages,
-                              accounting=accounting)
+                              accounting=accounting, quotas=quota_fn)
                        if KVPool.supported(model, max_len, page_size)
                        else None)
         self.pool: Optional[KVPool] = kv_pool
@@ -177,6 +209,7 @@ class ContinuousBatcher:
             self.accounting.record_request(
                 req.rid, ttft=req.ttft, tpot=req.tpot,
                 prompt_len=len(req.prompt), new_tokens=len(req.output),
+                tenant=getattr(req, "tenant", None),
             )
 
     # -- chunked prefill ------------------------------------------------
@@ -310,7 +343,11 @@ class ContinuousBatcher:
         ``row_cache`` is a 1-row cache already on this batcher's devices.
         Returns False when no slot is free — or, under a paged pool, when
         page admission would exhaust the arena (caller retries later)."""
-        from repro.serve.kvpool import PoolExhausted, request_ctx_key
+        from repro.serve.kvpool import (
+            PoolExhausted,
+            public_ctx_key,
+            request_ctx_key,
+        )
         free = self.free_slots()
         if not free:
             return False
@@ -319,9 +356,12 @@ class ContinuousBatcher:
             self._install_rows([slot], [req], row_cache, [first_token])
             return True
         ctx = request_ctx_key(req)
-        lease = self.pool.lease(req.prompt, ctx)
+        alt = (public_ctx_key(req) if self.tenants.share_public(
+            getattr(req, "tenant", DEFAULT_TENANT)) else None)
+        lease = self.pool.lease(req.prompt, ctx, alt)
         try:
-            self.pool.admit(slot, lease, len(req.prompt), req.max_new_tokens)
+            self.pool.admit(slot, lease, len(req.prompt), req.max_new_tokens,
+                            tenant=getattr(req, "tenant", None))
         except PoolExhausted:
             self.pool.release_lease(lease)
             return False
@@ -346,7 +386,8 @@ class ContinuousBatcher:
             return False
         slot = free[0]
         try:
-            self.pool.admit(slot, lease, len(req.prompt), req.max_new_tokens)
+            self.pool.admit(slot, lease, len(req.prompt), req.max_new_tokens,
+                            tenant=getattr(req, "tenant", None))
         except PoolExhausted:
             return False
         self.pool.install_stacks(slot, req.prompt, request_ctx_key(req),
@@ -358,68 +399,86 @@ class ContinuousBatcher:
         self._post_install([slot], [req], [first_token])
         return True
 
+    def _admit_fallback(self, slot: int, req: Request):
+        """Token-at-a-time admission: the prompt is consumed through the
+        decode path (shared cache keeps slot shapes uniform).
+        Non-positional slot state (recurrent ssm/hybrid state, encdec
+        cross memory) must go back to init values first — unlike stale
+        KV it is not masked by position."""
+        if not self.model.decode_state_positional:
+            from repro.models.cache_utils import (
+                merge_cache_slots,
+                strip_kv_nodes,
+            )
+            if self.pool is not None:
+                self.resident = merge_cache_slots(
+                    self.resident, strip_kv_nodes(self._slot_init()),
+                    self._resident_axes, [slot])
+            else:
+                self.cache = merge_cache_slots(
+                    self.cache, self._slot_init(),
+                    self._cache_axes, [slot])
+        # request-scoped side state (encdec cross memory) still has to
+        # land in the slot up front — the model says what, if anything
+        mem = self.model.encode_cross_rows(
+            self.params, [getattr(req, "src", None)], self.max_len)
+        if mem is not None:
+            from repro.models.cache_utils import install_cross_memory
+            if self.pool is not None:
+                self.resident = install_cross_memory(self.resident, mem,
+                                                     [slot])
+            else:
+                self.cache = install_cross_memory(self.cache, mem, [slot])
+        self.slot_req[slot] = req
+        self.pos[slot] = 0
+        self.cur_tok[slot] = int(req.prompt[0]) if len(req.prompt) else 0
+        req._prompt_cursor = 1  # type: ignore[attr-defined]
+
     def _admit(self):
-        from repro.serve.kvpool import PoolExhausted, request_ctx_key
+        from repro.serve.kvpool import (
+            PoolExhausted,
+            public_ctx_key,
+            request_ctx_key,
+        )
         from repro.serve.serve_step import bucket_len
+        free = self.free_slots()
         staged: List[tuple] = []        # chunked-eligible (slot, req, lease)
-        for slot in range(self.B):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            req.started_at = time.monotonic()
-            chunkable = self.chunked and 0 < len(req.prompt) <= self.max_len - 1
+        taken = [0]                     # free-slot cursor
+
+        def try_admit(req: Request) -> bool:
+            # the scheduler's resource gate: bind the next free slot and
+            # reserve pool pages.  False = blocked (pool/quota) — the
+            # scheduler scans PAST this request, so a huge blocked prompt
+            # no longer head-of-line-blocks a small one that would fit
+            slot = free[taken[0]]
+            chunkable = (self.chunked
+                         and 0 < len(req.prompt) <= self.max_len - 1)
             lease = None
             if self.pool is not None:
-                # page admission first: when the arena (free + evictable)
-                # cannot cover the request's worst case, it goes BACK to
-                # the queue head and admission stops — blocking beats
-                # both dropping the request and over-committing memory
                 ctx = request_ctx_key(req)
-                lease = (self.pool.lease(req.prompt, ctx) if chunkable
+                alt = (public_ctx_key(req)
+                       if chunkable and self.tenants.share_public(
+                           getattr(req, "tenant", DEFAULT_TENANT))
+                       else None)
+                lease = (self.pool.lease(req.prompt, ctx, alt) if chunkable
                          else self.pool.empty_lease())
                 try:
                     self.pool.admit(slot, lease, len(req.prompt),
-                                    req.max_new_tokens)
+                                    req.max_new_tokens,
+                                    tenant=getattr(req, "tenant", None))
                 except PoolExhausted:
                     self.pool.release_lease(lease)
-                    self.queue.appendleft(req)
-                    break
+                    return False
+            taken[0] += 1
+            req.started_at = req.started_at or time.monotonic()
             if chunkable:
                 staged.append((slot, req, lease))
-                continue
-            # fallback: the prompt is consumed token-at-a-time through
-            # the decode path (shared cache keeps slot shapes uniform).
-            # Non-positional slot state (recurrent ssm/hybrid state,
-            # encdec cross memory) must go back to init values first —
-            # unlike stale KV it is not masked by position
-            if not self.model.decode_state_positional:
-                from repro.models.cache_utils import (
-                    merge_cache_slots,
-                    strip_kv_nodes,
-                )
-                if self.pool is not None:
-                    self.resident = merge_cache_slots(
-                        self.resident, strip_kv_nodes(self._slot_init()),
-                        self._resident_axes, [slot])
-                else:
-                    self.cache = merge_cache_slots(
-                        self.cache, self._slot_init(),
-                        self._cache_axes, [slot])
-            # request-scoped side state (encdec cross memory) still has to
-            # land in the slot up front — the model says what, if anything
-            mem = self.model.encode_cross_rows(
-                self.params, [getattr(req, "src", None)], self.max_len)
-            if mem is not None:
-                from repro.models.cache_utils import install_cross_memory
-                if self.pool is not None:
-                    self.resident = install_cross_memory(self.resident, mem,
-                                                         [slot])
-                else:
-                    self.cache = install_cross_memory(self.cache, mem, [slot])
-            self.slot_req[slot] = req
-            self.pos[slot] = 0
-            self.cur_tok[slot] = int(req.prompt[0]) if len(req.prompt) else 0
-            req._prompt_cursor = 1  # type: ignore[attr-defined]
+            else:
+                self._admit_fallback(slot, req)
+            return True
+
+        if free and self.queue:
+            self.scheduler.select(self.queue, try_admit, budget=len(free))
         # same-bucket prompts admitted this tick share one invocation;
         # prefix hits group by their SUFFIX bucket (their shared pages are
         # already mapped — only the divergent tail runs), cold prompts by

@@ -69,8 +69,9 @@ class PrefillWorker:
 
     def __init__(self, cell, *, max_len: int, chunk: int = 32,
                  temperature: float = 0.0, pool_pages: Optional[int] = None,
-                 page_size: int = 16):
+                 page_size: int = 16, tenants=None):
         from repro.serve.kvpool import KVPool
+        from repro.serve.tenancy import TenantRegistry
         if not supports_chunked_prefill(cell.model, max_len):
             # every family chunks exactly now; only a rolling SWA cache
             # layout (sliding_window < max_len) lands here.  DisaggServer
@@ -94,8 +95,14 @@ class PrefillWorker:
         self._axes = None
         self._rng = jax.random.PRNGKey(0)
         self.invocations = 0
+        self.tenants = (tenants if isinstance(tenants, TenantRegistry)
+                        else TenantRegistry(tenants or ()))
+        quota_fn = (self.tenants.page_quotas
+                    if any(t.page_quota is not None
+                           for t in self.tenants.specs.values()) else None)
         self.pool = (KVPool(self.model, max_len=max_len, num_pages=pool_pages,
-                            page_size=page_size, accounting=cell.accounting)
+                            page_size=page_size, accounting=cell.accounting,
+                            quotas=quota_fn)
                      if KVPool.supported(self.model, max_len, page_size)
                      else None)
 
@@ -116,8 +123,13 @@ class PrefillWorker:
         (gathered prefix + computed suffix).
         """
         from repro.models.cache_utils import cache_batch_axes, slice_cache_slots
-        from repro.serve.kvpool import request_ctx_key, run_extend_group
+        from repro.serve.kvpool import (
+            public_ctx_key,
+            request_ctx_key,
+            run_extend_group,
+        )
         from repro.serve.serve_step import build_extend_step
+        from repro.serve.tenancy import DEFAULT_TENANT
         if self._axes is None:
             self._axes = cache_batch_axes(self.model, 1, self.max_len)
         cold: Dict[int, List[Request]] = {}
@@ -127,7 +139,9 @@ class PrefillWorker:
             if not 0 < L <= self.max_len - 1:
                 raise ValueError(
                     f"prompt length {L} does not fit max_len={self.max_len}")
-            lease = (self.pool.lease(req.prompt, request_ctx_key(req))
+            alt = (public_ctx_key(req) if self.tenants.share_public(
+                getattr(req, "tenant", DEFAULT_TENANT)) else None)
+            lease = (self.pool.lease(req.prompt, request_ctx_key(req), alt)
                      if self.pool is not None else None)
             if self.pool is not None:
                 # prefill-side hits are skipped COMPUTE (the bytes-saved
@@ -154,7 +168,8 @@ class PrefillWorker:
             for i, (req, tok) in enumerate(zip(group, toks)):
                 if self.pool is not None:
                     self.pool.intern_rows(req.prompt, request_ctx_key(req),
-                                          cache, i)
+                                          cache, i,
+                                          tenant=getattr(req, "tenant", None))
                 out[req.rid] = (req, tok,
                                 slice_cache_slots(cache, self._axes, [i]))
         for _, group in sorted(warm.items()):
@@ -172,9 +187,14 @@ class PrefillWorker:
             self.invocations += 1
             for i, (req, tok) in enumerate(zip(greqs, toks)):
                 # intern the freshly computed suffix pages, THEN drop the
-                # lease (the pinned prefix keeps the walk safe)
-                self.pool.intern_rows(req.prompt, request_ctx_key(req),
-                                      cache, i)
+                # lease (the pinned prefix keeps the walk safe).  A
+                # FOREIGN (public-grant) hit never interns: the tenant's
+                # private suffix must not shadow-copy into its namespace
+                # page-by-page off a namespace it only reads
+                if not leases[i].foreign:
+                    self.pool.intern_rows(req.prompt, request_ctx_key(req),
+                                          cache, i,
+                                          tenant=getattr(req, "tenant", None))
                 self.pool.release_lease(leases[i])
                 out[req.rid] = (req, tok,
                                 slice_cache_slots(cache, self._axes, [i]))
@@ -213,13 +233,17 @@ class _DecodeReplica:
 
     def pool_admittable(self, req: Request, lease) -> bool:
         """Can this replica's pool cover ``req``'s worst case right now
-        (counting reclaimable refcount-0 prefixes as available)?"""
+        (counting reclaimable refcount-0 prefixes as available)?  Under
+        quotas the answer is scoped to the REQUEST's tenant pocket: an
+        adversary having drained its own pocket never makes a victim's
+        admission look blocked."""
         if self.pool is None:
             return True
         need = self.pool.required_pages(
             len(req.prompt), req.max_new_tokens,
             lease.pages if lease is not None else 0)
-        return need <= self.pool.available_pages()
+        return need <= self.pool.available_pages(
+            getattr(req, "tenant", None))
 
 
 class DisaggServer:
@@ -251,7 +275,10 @@ class DisaggServer:
                  decode_cells: Union[str, Sequence[str]], *,
                  batch_slots: int, max_len: int, chunk: int = 32,
                  temperature: float = 0.0, eos_token: Optional[int] = None,
-                 page_size: int = 16, pool_pages: Optional[int] = None):
+                 page_size: int = 16, pool_pages: Optional[int] = None,
+                 tenants=None, shed_queue: Optional[int] = None,
+                 quantum: int = 256):
+        from repro.serve.tenancy import TenantRegistry, TenantScheduler
         if isinstance(decode_cells, str):
             decode_cells = [decode_cells]
         if not decode_cells:
@@ -267,10 +294,24 @@ class DisaggServer:
         self.pool_pages = pool_pages
         # spec name the decode instances materialize from ("dec/0" -> "dec")
         self._decode_base = decode_cells[0].split("/")[0]
+        # tenant QoS: default to the decode spec's declared contract (the
+        # supervisor-validated source of truth); token buckets + DRR run
+        # HERE at the front door — replica batchers get the same registry
+        # minus buckets, so one request is never rate-charged twice
+        if tenants is None and supervisor.desired is not None \
+                and supervisor.desired.has_cell(self._decode_base):
+            tenants = supervisor.desired.cell(self._decode_base).tenants
+        self.tenants: TenantRegistry = (
+            tenants if isinstance(tenants, TenantRegistry)
+            else TenantRegistry(tenants or ()))
+        self.scheduler = TenantScheduler(self.tenants, quantum=quantum)
+        self.shed_queue = shed_queue    # pending cap; None = never shed
+        self.shed_requests = 0
         self.pending: deque = deque()
         self.rejected: List[Request] = []   # unservable, never routed
         self.requeued = 0               # requests re-homed off a detached replica
         self.blocked_on_pool = 0        # admissions deferred: pool exhausted
+        self.blocked_by_tenant: Dict[str, int] = {}
         self.fallback_requests = 0      # served token-at-a-time (no worker);
                                         # server-owned so a prefill-cell
                                         # recovery can't zero the ledger
@@ -295,7 +336,7 @@ class DisaggServer:
             self.worker: Optional[PrefillWorker] = PrefillWorker(
                 self.prefill_cell, max_len=max_len, chunk=chunk,
                 temperature=temperature, page_size=page_size,
-                pool_pages=pool_pages,
+                pool_pages=pool_pages, tenants=self.tenants,
             )
         else:
             # degraded-but-serving: configs the batcher would silently run
@@ -357,6 +398,11 @@ class DisaggServer:
             temperature=self.temperature, eos_token=self.eos_token,
             prefill_chunk=None, page_size=self.page_size,
             pool_pages=self.pool_pages,
+            # replica-local admission reuses the tenant contract (page
+            # quotas partition each replica's pool; the fallback queue
+            # schedules fairly) but never re-charges the server-level
+            # token buckets
+            tenants=self.tenants.specs.values(), tenant_buckets=False,
         )
         kv_shardings = jax.tree.map(
             lambda s, m=cell.mesh: jax.sharding.NamedSharding(m, s),
@@ -452,7 +498,7 @@ class DisaggServer:
             self.worker = PrefillWorker(
                 live, max_len=self.max_len, chunk=self.chunk,
                 temperature=self.temperature, page_size=self.page_size,
-                pool_pages=self.pool_pages,
+                pool_pages=self.pool_pages, tenants=self.tenants,
             )
         return True
 
@@ -545,7 +591,10 @@ class DisaggServer:
         there.  Replicas that fail the pool check are skipped for THIS
         request only.  Returns (index, lease) or (None, None) when every
         replica is slot- or page-saturated (the caller blocks)."""
-        from repro.serve.kvpool import request_ctx_key
+        from repro.serve.kvpool import public_ctx_key, request_ctx_key
+        from repro.serve.tenancy import DEFAULT_TENANT
+        alt = (public_ctx_key(req) if self.tenants.share_public(
+            getattr(req, "tenant", DEFAULT_TENANT)) else None)
         skipped: Dict[int, int] = {}
         pick, lease = None, None
         while True:
@@ -553,7 +602,7 @@ class DisaggServer:
             if i is None:
                 break
             rep = self.replicas[i]
-            le = (rep.pool.lease(req.prompt, request_ctx_key(req))
+            le = (rep.pool.lease(req.prompt, request_ctx_key(req), alt)
                   if rep.pool is not None else None)
             if rep.pool_admittable(req, le):
                 pick, lease = i, le
@@ -574,6 +623,12 @@ class DisaggServer:
         req.started_at = None
         deferred.append(req)
         self.blocked_on_pool += 1
+        tenant = getattr(req, "tenant", None)
+        if tenant is not None:
+            self.blocked_by_tenant[tenant] = (
+                self.blocked_by_tenant.get(tenant, 0) + 1)
+            self.prefill_cell.accounting.record_counter(
+                "blocked_on_pool", tenant=tenant)
 
     def pump(self) -> int:
         """Prefill waiting requests (up to the replicas' free capacity,
@@ -584,21 +639,81 @@ class DisaggServer:
         Unservable prompts (empty, or longer than the decode cache) are
         finished immediately with empty output rather than poisoning the
         loop — one bad request must not stall every other request."""
+        from repro.serve.kvpool import public_ctx_key, request_ctx_key
+        from repro.serve.tenancy import DEFAULT_TENANT
         self._reap_failed()
         deferred: List[Request] = []    # pool-blocked this tick, FIFO
-        capacity = {i: r.free_capacity() for i, r in enumerate(self.replicas)}
-        budget = sum(c for c in capacity.values() if c > 0)
-        taking: List[Request] = []
-        while self.pending and len(taking) < budget:
-            req = self.pending.popleft()
-            req.started_at = req.started_at or time.monotonic()
-            if not 0 < len(req.prompt) <= self.max_len - 1:
-                # never reached a replica: finish with empty output here so
-                # per-replica stats/accounting only count routed traffic
+        # unservable prompts (empty / overlong) are finished immediately
+        # with empty output so per-replica stats only count routed traffic
+        servable: List[Request] = []
+        for req in self.pending:
+            if 0 < len(req.prompt) <= self.max_len - 1:
+                servable.append(req)
+            else:
+                req.started_at = req.started_at or time.monotonic()
                 req.finished_at = time.monotonic()
                 self.rejected.append(req)
-                continue
+        if len(servable) != len(self.pending):
+            self.pending = deque(servable)
+        # overload shedding: past the pending cap, the LOW-weight tier
+        # loses first (newest first within a tier) — the paying tenant's
+        # backlog survives a free-tier flood
+        if self.shed_queue is not None and len(self.pending) > self.shed_queue:
+            victims = self.scheduler.shed_victims(
+                self.pending, len(self.pending) - self.shed_queue)
+            vids = {id(v) for v in victims}
+            self.pending = deque(r for r in self.pending
+                                 if id(r) not in vids)
+            now = time.monotonic()
+            for req in victims:
+                req.finished_at = now
+                self.rejected.append(req)
+                self.shed_requests += 1
+                self.prefill_cell.accounting.record_counter(
+                    "shed_requests", tenant=getattr(req, "tenant", None))
+        capacity = {i: r.free_capacity() for i, r in enumerate(self.replicas)}
+        budget = sum(c for c in capacity.values() if c > 0)
+
+        def can_place(req: Request) -> bool:
+            """Cheap admission pre-check for the fair scheduler: some
+            replica has a free slot AND (on the paged plane) its pool can
+            cover the request's hit-aware worst case within the request
+            tenant's quota.  No pages are reserved here — the real lease
+            and admission happen at routing — so a False just means the
+            scheduler scans past this request this tick."""
+            ctx = request_ctx_key(req)
+            alt = (public_ctx_key(req)
+                   if self.tenants.share_public(
+                       getattr(req, "tenant", DEFAULT_TENANT))
+                   else None)
+            for i, rep in enumerate(self.replicas):
+                if capacity[i] <= 0:
+                    continue
+                if rep.pool is None:
+                    return True
+                hit = len(rep.pool.tree.match(req.prompt, ctx))
+                if alt is not None:
+                    hit = max(hit, len(rep.pool.tree.match(req.prompt, alt)))
+                need = rep.pool.required_pages(
+                    len(req.prompt), req.max_new_tokens, hit)
+                if need <= rep.pool.available_pages(
+                        getattr(req, "tenant", None)):
+                    return True
+            return False
+
+        taking: List[Request] = []
+
+        def take(req: Request) -> bool:
+            if not can_place(req):
+                return False
+            req.started_at = req.started_at or time.monotonic()
             taking.append(req)
+            return True
+
+        if budget > 0 and self.pending:
+            # weighted-fair intake: DRR over tenants + per-tenant token
+            # buckets, scanning past requests no replica can place yet
+            self.scheduler.select(self.pending, take, budget=budget)
         if taking and self.worker is None:
             # token-at-a-time fallback: no chunked prefill program exists
             # for this config — hand each prompt to a replica's own queue,
@@ -739,6 +854,20 @@ class DisaggServer:
                if rep.pool is not None]
         return max(occ) if occ else 0.0
 
+    def tenant_stats(self) -> dict:
+        """Per-tenant serving rollups over every finished request —
+        live replicas, detached replicas, and rejected/shed alike."""
+        from repro.core.accounting import summarize_requests
+        from repro.serve.tenancy import DEFAULT_TENANT
+        by: Dict[str, List[Request]] = {}
+        for r in self.done:
+            by.setdefault(getattr(r, "tenant", DEFAULT_TENANT) or
+                          DEFAULT_TENANT, []).append(r)
+        return {
+            tenant: summarize_requests(reqs)
+            for tenant, reqs in sorted(by.items())
+        }
+
     def stats(self) -> dict:
         from repro.core.accounting import summarize_requests
         ds = self._detached_stats
@@ -777,4 +906,9 @@ class DisaggServer:
             "requests_detached": ds["requests"],
             "pending": len(self.pending),
             "requeued": self.requeued,
+            "per_tenant": self.tenant_stats(),
+            "shed_requests": self.shed_requests,
+            "blocked_by_tenant": dict(self.blocked_by_tenant),
+            "throttled_by_tenant": dict(self.scheduler.throttled),
+            "served_cost_by_tenant": dict(self.scheduler.served_cost),
         }

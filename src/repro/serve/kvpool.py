@@ -34,6 +34,25 @@ are misses.  Recurrent families (ssm/hybrid) fold history into
 non-positional state and are a declared non-goal — they keep the dense
 per-slot cache (``Model.supports_paged_kv``).
 
+Tenancy applies the same subOS model one level up, to *users* of one
+pool.  Each tenant is a little subOS of the cache plane:
+
+* its **page quota** is a physical-resource partition — ``quotas``
+  splits the arena into per-tenant pockets (plus a shared commons for
+  quota-less tenants), every allocated page is charged to exactly one
+  pocket, and a tenant over its pocket can only reclaim its *own*
+  refcount-0 cache, so it can exhaust its quota but never the pool;
+* its **prefix namespace** is an address space — tree roots are keyed
+  per tenant (:func:`request_ctx_key`), so one tenant's prompts never
+  match another's pages;
+* the **public namespace** is the supervisor-mediated memory grant — a
+  prompt marked public interns under the shared ``__public__`` root
+  (charged to the commons), and any granted tenant may map those pages
+  read-only (:func:`public_ctx_key` fallback in :meth:`KVPool.lease`).
+  A foreign (public) hit never lets the tenant intern *into* the public
+  namespace: its suffix pages stay private, so the grant is strictly
+  read-only — sharing is something the spec grants, never ambient.
+
 The decode step needs only block-table indirection in front of the
 existing kernels: gather dense per-slot views from the arena, run the
 unchanged ``Model.decode``, scatter each slot's current (always-private)
@@ -67,18 +86,17 @@ from repro.models.cache_utils import (
 )
 from repro.models.layers import KVSlice
 from repro.serve.serve_step import bucket_len, sample_tokens
+from repro.serve.tenancy import COMMONS, DEFAULT_TENANT, PUBLIC
 
 
 class PoolExhausted(RuntimeError):
     """No free or evictable page is left — the caller must requeue."""
 
 
-def request_ctx_key(req) -> Optional[tuple]:
-    """Prefix-tree root key for a request's non-token context.
-
-    encdec decoder KV depends on the request's source features as well as
-    its tokens, so prompts may only share pages when the sources are
-    byte-identical; other families return None (one shared root)."""
+def _src_part(req) -> Optional[tuple]:
+    """Source-feature digest component of a ctx key (encdec decoder KV
+    depends on the request's source features as well as its tokens, so
+    prompts may only share pages when the sources are byte-identical)."""
     src = getattr(req, "src", None)
     if src is None:
         return None
@@ -86,18 +104,50 @@ def request_ctx_key(req) -> Optional[tuple]:
     return ("src", a.shape, hashlib.sha1(a.tobytes()).hexdigest())
 
 
+def request_ctx_key(req) -> Optional[tuple]:
+    """Prefix-tree root key for a request: its tenant namespace plus any
+    non-token context.
+
+    The default tenant's private namespace keeps the pre-tenancy keys
+    (None, or the bare source digest) so a single-tenant deployment is
+    byte-identical to the old stack; a request marked ``public`` lives
+    under the shared ``__public__`` root; any other tenant gets a
+    private ``("tenant", name)`` root no other tenant's lookups can
+    reach."""
+    src = _src_part(req)
+    if getattr(req, "public", False):
+        return ("public",) if src is None else ("public", src)
+    tenant = getattr(req, "tenant", DEFAULT_TENANT)
+    if tenant != DEFAULT_TENANT:
+        return (("tenant", tenant) if src is None
+                else ("tenant", tenant, src))
+    return src
+
+
+def public_ctx_key(req) -> Optional[tuple]:
+    """The public-namespace variant of a request's ctx key — the root a
+    granted tenant may additionally match READ-ONLY (the supervisor
+    grant).  None when the request already lives there."""
+    if getattr(req, "public", False):
+        return None
+    src = _src_part(req)
+    return ("public",) if src is None else ("public", src)
+
+
 class _Node:
     """One interned page: a ``page_size``-token chunk under its parent."""
 
-    __slots__ = ("parent", "key", "children", "page", "refs", "last_used")
+    __slots__ = ("parent", "key", "children", "page", "refs", "last_used",
+                 "owner")
 
-    def __init__(self, parent, key, page):
+    def __init__(self, parent, key, page, owner=None):
         self.parent = parent
         self.key = key                  # tuple of page_size token ids
         self.children: Dict[tuple, "_Node"] = {}
         self.page = page                # physical page id (None for roots)
         self.refs = 0
         self.last_used = 0
+        self.owner = owner              # tenant / PUBLIC the page bills to
 
 
 class PrefixTree:
@@ -155,9 +205,10 @@ class PrefixTree:
             n.refs -= 1
             n.last_used = now
 
-    def insert(self, parent: _Node, key: tuple, page: int) -> _Node:
+    def insert(self, parent: _Node, key: tuple, page: int,
+               owner=None) -> _Node:
         assert key not in parent.children
-        node = _Node(parent, key, page)
+        node = _Node(parent, key, page, owner)
         node.last_used = self._tick()
         parent.children[key] = node
         self.interned += 1
@@ -171,13 +222,15 @@ class PrefixTree:
             if n.page is not None:
                 yield n
 
-    def evictable_pages(self) -> int:
+    def evictable_pages(self, visible=None) -> int:
         """Pages reclaimable right now: interned nodes whose whole
         subtree is refcount-0 (evicting leaf-upward never strands a
         live descendant's prefix).  One ITERATIVE bottom-up pass — each
         node's pinned flag is computed once, children before parents;
         no recursion, so page chains as deep as max_len/page_size (long
-        shared prompts) can never blow the interpreter stack."""
+        shared prompts) can never blow the interpreter stack.  With
+        ``visible`` (a node predicate), count only nodes the caller may
+        reclaim — the per-tenant quota view."""
         total = 0
         pinned: Dict[int, bool] = {}
         for root in self._roots.values():
@@ -191,18 +244,21 @@ class PrefixTree:
                 p = n.refs > 0 or any(pinned[id(c)]
                                       for c in n.children.values())
                 pinned[id(n)] = p
-                if n.page is not None and not p:
+                if (n.page is not None and not p
+                        and (visible is None or visible(n))):
                     total += 1
         return total
 
-    def evict_lru(self) -> Optional[Tuple[_Node, int]]:
+    def evict_lru(self, visible=None) -> Optional[Tuple[_Node, int]]:
         """Detach the least-recently-used evictable LEAF node; returns
         (node, freed page id) or None when nothing is evictable.  A
         childless node's subtree is itself, so evictability is just its
-        own refcount."""
+        own refcount.  ``visible`` restricts candidates to nodes the
+        requester may reclaim (its own pocket's cache)."""
         best: Optional[_Node] = None
         for n in self._walk():
             if (n.refs == 0 and not n.children
+                    and (visible is None or visible(n))
                     and (best is None or n.last_used < best.last_used)):
                 best = n
         if best is None:
@@ -217,11 +273,15 @@ class PrefixLease:
     """An acquired (incref'd) chain of shared prefix nodes.
 
     Held from lookup until the pages are mapped into a slot (ownership
-    transfers to the slot) or the request is abandoned (release)."""
+    transfers to the slot) or the request is abandoned (release).
+    ``foreign`` marks a chain matched in a namespace the request does
+    not own (the public grant): its pages map read-only and the slot's
+    suffix never interns under them."""
 
     nodes: List[_Node]
     page_size: int
     released: bool = False
+    foreign: bool = False
 
     @property
     def pages(self) -> int:
@@ -251,7 +311,7 @@ class KVPool:
 
     def __init__(self, model, *, max_len: int, page_size: int = 16,
                  slots: int = 0, num_pages: Optional[int] = None,
-                 accounting=None):
+                 accounting=None, quotas: Any = None):
         if not model.supports_paged_kv:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged KV cache")
@@ -284,6 +344,24 @@ class KVPool:
         self._shared: List[List[_Node]] = [[] for _ in range(max(slots, 1))]
         self._private: List[List[int]] = [[] for _ in range(max(slots, 1))]
         self._pocket: List[List[int]] = [[] for _ in range(max(slots, 1))]
+        # tenant bulkheads: quotas maps pocket name -> page budget (the
+        # COMMONS pocket is the unreserved remainder); every allocated
+        # page is charged to exactly one pocket in ``used``.  A callable
+        # gets the resolved page count (TenantRegistry.page_quotas)
+        if callable(quotas):
+            quotas = quotas(self.num_pages)
+        if quotas is not None:
+            if sum(quotas.values()) > self.num_pages:
+                raise ValueError(
+                    f"quota pockets sum to {sum(quotas.values())}, "
+                    f"pool has only {self.num_pages} pages")
+            if any(q < 0 for q in quotas.values()):
+                raise ValueError("negative page quota pocket")
+        self.quotas = dict(quotas) if quotas is not None else None
+        self.used: Dict[str, int] = ({p: 0 for p in quotas}
+                                     if quotas is not None else {})
+        self._slot_tenant: List[Optional[str]] = [None] * max(slots, 1)
+        self._slot_foreign: List[bool] = [False] * max(slots, 1)
         self.pages_evicted = 0
         self.prefix_hit_tokens = 0
         self.prefix_miss_tokens = 0
@@ -315,19 +393,53 @@ class KVPool:
     def evictable_pages(self) -> int:
         return self.tree.evictable_pages()
 
-    def available_pages(self) -> int:
+    def _pocket_of(self, tenant: Optional[str]) -> Optional[str]:
+        """Charge pocket for a tenant / namespace owner: an explicitly
+        quota'd tenant bills its own pocket; everyone else (quota-less
+        tenants, unknown tenants, the public namespace) shares the
+        commons remainder."""
+        if self.quotas is None:
+            return None
+        if tenant is not None and tenant in self.quotas:
+            return tenant
+        return COMMONS
+
+    def _pocket_visible(self, pocket: str):
+        """Eviction-candidate predicate for a requester charged to
+        ``pocket``: only refcount-0 cache chargeable to the same pocket
+        may be reclaimed — a tenant reclaims its own idle cache (or, in
+        the commons, anyone's commons cache incl. public pages), never a
+        bulkheaded co-tenant's."""
+        return lambda n: self._pocket_of(n.owner) == pocket
+
+    def available_pages(self, tenant: Optional[str] = None) -> int:
         """Pages an admission could obtain right now (free + reclaimable
-        refcount-0 interned cache)."""
-        return len(self.free) + self.evictable_pages()
+        refcount-0 interned cache).
+
+        With quotas, the answer is scoped to the pocket the admission
+        would charge (``_pocket_of``: the tenant's own, or the commons
+        for untagged/unknown tenants): quota headroom plus that pocket's
+        evictable cache.  The bulkhead invariant (pockets sum <= pool,
+        every page charged) guarantees headroom is always physically
+        backed by free pages, so this never overstates — which is the
+        whole point: a True pre-check here means ``admit`` succeeds."""
+        if self.quotas is None:
+            return len(self.free) + self.evictable_pages()
+        pocket = self._pocket_of(tenant)
+        headroom = self.quotas[pocket] - self.used.get(pocket, 0)
+        return headroom + self.tree.evictable_pages(
+            self._pocket_visible(pocket))
 
     def occupancy(self) -> float:
         """Committed (non-reclaimable) fraction of the arena — the
         autoscale pressure signal: 1.0 means even evicting every cached
-        prefix frees nothing."""
-        return 1.0 - self.available_pages() / self.num_pages
+        prefix frees nothing.  Always the GLOBAL view — quota pockets
+        partition who may allocate, not how full the arena is."""
+        free = len(self.free) + self.evictable_pages()
+        return 1.0 - free / self.num_pages
 
     def stats(self) -> dict:
-        return {
+        out = {
             "num_pages": self.num_pages,
             "pages_in_use": self.pages_in_use,
             "pages_evicted": self.pages_evicted,
@@ -337,23 +449,60 @@ class KVPool:
             "prefix_miss_tokens": self.prefix_miss_tokens,
             "kv_bytes_saved": self.kv_bytes_saved,
         }
+        if self.quotas is not None:
+            out["quota_pages"] = dict(self.quotas)
+            out["tenant_pages"] = dict(self.used)
+        return out
 
     def _gauge(self):
         if self.accounting is not None:
             self.accounting.record_gauge("pages_in_use", self.pages_in_use)
 
     # -- page supply ---------------------------------------------------
-    def _alloc_raw(self) -> Optional[int]:
-        if self.free:
-            return self.free.popleft()
-        evicted = self.tree.evict_lru()
-        if evicted is None:
-            return None
-        _, page = evicted
-        self.pages_evicted += 1
-        if self.accounting is not None:
-            self.accounting.record_counter("pages_evicted")
-        return page
+    def _alloc_raw(self, tenant: Optional[str] = None) -> Optional[int]:
+        """One page, charged to ``tenant``'s pocket (when quotas are on).
+
+        Postcondition on success: the returned page is charged to
+        ``_pocket_of(tenant)``.  Quota path: a full pocket may only
+        reclaim refcount-0 cache chargeable to the SAME pocket (charge
+        unchanged — the page moves from tree cache to slot use), so a
+        tenant can exhaust its quota but never another tenant's; an
+        under-quota pocket always finds a free page because pockets sum
+        to at most the pool and every allocated page is charged."""
+        if self.quotas is None:
+            if self.free:
+                return self.free.popleft()
+            evicted = self.tree.evict_lru()
+            if evicted is None:
+                return None
+            _, page = evicted
+            self.pages_evicted += 1
+            if self.accounting is not None:
+                self.accounting.record_counter("pages_evicted")
+            return page
+        pocket = self._pocket_of(tenant)
+        if self.used[pocket] >= self.quotas[pocket]:
+            evicted = self.tree.evict_lru(self._pocket_visible(pocket))
+            if evicted is None:
+                return None             # quota exhausted, pool untouched
+            _, page = evicted
+            self.pages_evicted += 1
+            if self.accounting is not None:
+                self.accounting.record_counter("pages_evicted",
+                                               tenant=tenant)
+            return page
+        assert self.free, "bulkhead invariant broken: headroom w/o free"
+        self.used[pocket] += 1
+        return self.free.popleft()
+
+    def _uncharge(self, tenant: Optional[str], n: int):
+        """Return ``n`` pages' worth of charge from ``tenant``'s pocket
+        (the pages themselves go back on ``self.free`` at the caller)."""
+        if self.quotas is None or n == 0:
+            return
+        pocket = self._pocket_of(tenant)
+        self.used[pocket] -= n
+        assert self.used[pocket] >= 0, f"pocket {pocket} charge underflow"
 
     def _take_pocket(self, slot: int) -> int:
         assert self._pocket[slot], (
@@ -361,14 +510,26 @@ class KVPool:
         return self._pocket[slot].pop()
 
     # -- prefix lookup -------------------------------------------------
-    def lease(self, prompt, ctx_key=None) -> PrefixLease:
+    def lease(self, prompt, ctx_key=None, alt_key=None) -> PrefixLease:
         """Match + acquire the longest interned prefix for ``prompt``.
 
         The acquired nodes are pinned (non-evictable) until the lease is
-        released or its ownership transfers to a slot via ``admit``."""
+        released or its ownership transfers to a slot via ``admit``.
+
+        ``alt_key`` is the read-only fallback namespace (the public
+        grant): both roots are matched and the longer chain wins, the
+        request's own namespace on ties.  A winning ``alt_key`` chain is
+        marked ``foreign`` — its pages map read-only and the suffix will
+        not intern under them."""
         nodes = self.tree.match(prompt, ctx_key)
+        foreign = False
+        if alt_key is not None:
+            alt = self.tree.match(prompt, alt_key)
+            if len(alt) > len(nodes):
+                nodes, foreign = alt, True
         self.tree.acquire(nodes)
-        return PrefixLease(nodes=nodes, page_size=self.page_size)
+        return PrefixLease(nodes=nodes, page_size=self.page_size,
+                           foreign=foreign)
 
     def empty_lease(self) -> PrefixLease:
         """A zero-page lease (cold request / token-at-a-time admit)."""
@@ -411,27 +572,37 @@ class KVPool:
         return -(-last // self.page_size) - shared_pages
 
     def admit(self, slot: int, lease: PrefixLease, prompt_len: int,
-              max_new: int):
+              max_new: int, tenant: Optional[str] = None):
         """Commit a slot to a request: map the lease's shared pages into
         the block table (ownership of the lease transfers to the slot)
         and materialize the full private-page pocket, evicting LRU
-        refcount-0 prefixes as needed.  Raises :class:`PoolExhausted`
-        (with the lease still held by the CALLER to release) when the
-        arena cannot cover the worst case — the admission choke point
-        that makes exhaustion a queueing event, not an OOM."""
+        refcount-0 prefixes as needed — all charged to ``tenant``'s
+        quota pocket.  Raises :class:`PoolExhausted` (with the lease
+        still held by the CALLER to release) when the arena — or the
+        tenant's pocket — cannot cover the worst case: the admission
+        choke point that makes exhaustion a queueing event, not an OOM,
+        and the bulkhead that keeps one tenant's exhaustion out of
+        everyone else's admission."""
         assert not self._shared[slot] and not self._private[slot] \
             and not self._pocket[slot], f"slot {slot} not released"
         need = self.required_pages(prompt_len, max_new, lease.pages)
         got: List[int] = []
         for _ in range(need):
-            page = self._alloc_raw()
+            page = self._alloc_raw(tenant)
             if page is None:
+                self._uncharge(tenant, len(got))
                 self.free.extend(got)
+                if self.accounting is not None and self.quotas is not None:
+                    self.accounting.record_counter("quota_blocked",
+                                                   tenant=tenant)
                 raise PoolExhausted(
                     f"need {need} pages, got {len(got)} "
                     f"(free={len(self.free)}, "
-                    f"evictable={self.evictable_pages()})")
+                    f"evictable={self.evictable_pages()}, "
+                    f"tenant={tenant!r})")
             got.append(page)
+        self._slot_tenant[slot] = tenant
+        self._slot_foreign[slot] = lease.foreign
         if got:
             self.arena = self._clean_fn(self.arena,
                                         jnp.asarray(got, jnp.int32))
@@ -442,6 +613,31 @@ class KVPool:
         lease.released = True            # ownership moved to the slot
         self.note_lookup(prompt_len, lease.tokens)
         self._gauge()
+
+    def _transfer_charge(self, tenant: Optional[str], owner) -> bool:
+        """Move one page's charge from ``tenant``'s pocket to
+        ``owner``'s — interning a slot-billed page into a namespace
+        billed elsewhere (a public prompt's pages move to the commons).
+        Returns False (leave the page private) when the destination
+        pocket cannot absorb the charge even after reclaiming its own
+        idle cache."""
+        if self.quotas is None:
+            return True
+        src = self._pocket_of(tenant)
+        dst = self._pocket_of(owner)
+        if src == dst:
+            return True
+        if self.used[dst] >= self.quotas[dst]:
+            evicted = self.tree.evict_lru(self._pocket_visible(dst))
+            if evicted is None:
+                return False
+            _, page = evicted
+            self.pages_evicted += 1
+            self.free.append(page)
+            self.used[dst] -= 1
+        self.used[src] -= 1
+        self.used[dst] += 1
+        return True
 
     def map_private(self, slot: int, logical_page: int) -> int:
         """Map a pocket page at ``logical_page`` (decode growth / the
@@ -473,20 +669,36 @@ class KVPool:
         P = self.page_size
         L = len(prompt)
         n = stacks[0].k.shape[0] if stacks else 0
+        tenant = self._slot_tenant[slot]
+        owner = (PUBLIC if (ctx_key is not None and ctx_key
+                            and ctx_key[0] == "public")
+                 else (tenant if tenant is not None else DEFAULT_TENANT))
+        # a foreign (public-grant) prefix is read-only: the suffix may
+        # never intern under it, so every suffix page stays private —
+        # one tenant's data can't leak into a namespace it doesn't own
+        can_intern = not self._slot_foreign[slot]
         parent = (self._shared[slot][-1] if self._shared[slot]
                   else self.tree.root(ctx_key))
         new_ids: List[int] = []         # pages needing a data write,
         new_rows: List[int] = []        # batched into ONE arena scatter
         for j in range(n):
             lp = start_page + j
-            if (lp + 1) * P <= L:
+            node = None
+            if can_intern and (lp + 1) * P <= L:
                 key = tuple(int(t) for t in prompt[lp * P:(lp + 1) * P])
                 node = parent.children.get(key)
                 if node is None:
-                    page = self._take_pocket(slot)
-                    node = self.tree.insert(parent, key, page)
-                    new_ids.append(page)
-                    new_rows.append(j)
+                    if self._transfer_charge(tenant, owner):
+                        page = self._take_pocket(slot)
+                        node = self.tree.insert(parent, key, page, owner)
+                        new_ids.append(page)
+                        new_rows.append(j)
+                    else:
+                        # owner pocket full: the rest of the chain stays
+                        # private (a child without its parent interned
+                        # would be unreachable anyway)
+                        can_intern = False
+            if node is not None:
                 node.refs += 1
                 node.last_used = self.tree._tick()
                 self._shared[slot].append(node)
@@ -519,14 +731,20 @@ class KVPool:
 
     def release_slot(self, slot: int):
         """Free a slot's pages: decref shared prefixes (they stay
-        interned as reclaimable cache), return private + pocket pages to
-        the free list, unmap the block-table row."""
+        interned as reclaimable cache, still charged to their owner's
+        pocket), return private + pocket pages to the free list
+        (uncharging the slot tenant's pocket), unmap the block-table
+        row."""
         self.tree.release(self._shared[slot])
         self._shared[slot] = []
+        self._uncharge(self._slot_tenant[slot],
+                       len(self._private[slot]) + len(self._pocket[slot]))
         self.free.extend(self._private[slot])
         self._private[slot] = []
         self.free.extend(self._pocket[slot])
         self._pocket[slot] = []
+        self._slot_tenant[slot] = None
+        self._slot_foreign[slot] = False
         self.block_table[slot, :] = self.sentinel
         self._gauge()
 
@@ -535,13 +753,19 @@ class KVPool:
             self.release_slot(slot)
 
     # -- prefill-side prefix cache (slot-less) -------------------------
-    def intern_rows(self, prompt, ctx_key, rows_cache, row: int):
+    def intern_rows(self, prompt, ctx_key, rows_cache, row: int,
+                    tenant: Optional[str] = None):
         """Best-effort intern of a prompt's full pages from a dense rows
         cache (the PrefillWorker's cache-fill path — refcounts stay 0,
         pages are pure reclaimable cache).  Stops silently when no page
-        can be obtained."""
+        can be obtained.  Pages bill the namespace they land in: the
+        public root charges the commons, a tenant root charges that
+        tenant's pocket."""
         P = self.page_size
         L = len(prompt)
+        owner = (PUBLIC if (ctx_key is not None and ctx_key
+                            and ctx_key[0] == "public")
+                 else (tenant if tenant is not None else DEFAULT_TENANT))
         parent = self.tree.root(ctx_key)
         path: List[_Node] = []          # pinned so eviction inside
         new_ids: List[int] = []         # _alloc_raw can't detach our walk
@@ -554,10 +778,10 @@ class KVPool:
                     # a fresh node's children can't pre-exist, so from
                     # the first miss on every page is new — the data
                     # writes batch into one scatter below
-                    page = self._alloc_raw()
+                    page = self._alloc_raw(owner)
                     if page is None:
                         break
-                    node = self.tree.insert(parent, key, page)
+                    node = self.tree.insert(parent, key, page, owner)
                     new_ids.append(page)
                     new_lps.append(lp)
                 self.tree.acquire([node])

@@ -1,0 +1,555 @@
+"""Multi-tenant QoS — isolate tenants first, share the cache on demand.
+
+Covers the tenancy tentpole across every layer it touches:
+
+  * spec validation — ``TenantSpec`` contracts on a serving cell,
+    reserved names, quota budgets, supervisor cross-cell checks;
+  * DRR fairness (property) — between continuously backlogged tenants
+    the weighted service gap never exceeds one quantum plus one maximal
+    request, regardless of weights/costs/budget;
+  * KVPool bulkheads (property) — pocket charges always balance
+    (``sum(used) == pages_in_use``, ``used[p] <= quota[p]``), and a
+    tenant exhausting its own pocket NEVER fails an allocation another
+    tenant's quota covers;
+  * scoped sharing — private namespaces miss across tenants; the public
+    namespace is hit read-only (foreign leases never intern), and all
+    public refcounts return to zero after drain;
+  * end-to-end — the single-tenant default overlay is token-identical
+    (same outputs, same hit rates) to the pre-tenancy configuration,
+    HOL blocking is gone (a pool-blocked head no longer starves a
+    small admissible request), and token buckets throttle per tenant.
+
+The two randomized properties run here on a seeded driver (no extra
+dependency); ``test_tenancy_properties.py`` re-runs the same checkers
+under hypothesis when the dep is available.
+"""
+import random
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import smoke_config
+from repro.configs.registry import get_arch
+from repro.core.spec import SpecError, TenantSpec
+from repro.models.model import build_model
+from repro.serve.batcher import ContinuousBatcher, Request
+from repro.serve.kvpool import (
+    KVPool,
+    PoolExhausted,
+    public_ctx_key,
+    request_ctx_key,
+)
+from repro.serve.tenancy import (
+    COMMONS,
+    PUBLIC,
+    TenantRegistry,
+    TenantScheduler,
+    TokenBucket,
+    request_cost,
+)
+from repro.sharding.rules import single_device_ctx
+
+MAX_LEN = 32
+CHUNK = 8
+PAGE = 8
+N_LOG = MAX_LEN // PAGE
+
+_CACHE = {}
+
+
+def _model(name="qwen3-4b"):
+    if name not in _CACHE:
+        cfg = smoke_config(get_arch(name))
+        model = build_model(cfg, single_device_ctx())
+        _CACHE[name] = (model, model.init(jax.random.PRNGKey(0)))
+    return _CACHE[name]
+
+
+class FakeReq:
+    """Queue entry for scheduler-only tests (no model involved)."""
+
+    def __init__(self, tenant, cost, rid=0):
+        self.tenant = tenant
+        self.prompt = [0] * (cost - 1)
+        self.max_new_tokens = 1
+        self.rid = rid
+
+    def __repr__(self):
+        return f"FakeReq({self.tenant}, {request_cost(self)})"
+
+
+def _requests(cfg, lens, *, shared=0, max_new=4, seed=0, rid0=0,
+              tenant="default", public=False):
+    srng = np.random.RandomState(1234)
+    sysp = srng.randint(1, cfg.vocab, size=shared).astype(np.int32)
+    rng = np.random.RandomState(seed)
+    out = []
+    for i, L in enumerate(lens):
+        tail = rng.randint(1, cfg.vocab, size=L).astype(np.int32)
+        out.append(Request(rid=rid0 + i, prompt=np.concatenate([sysp, tail]),
+                           max_new_tokens=max_new, tenant=tenant,
+                           public=public))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# spec layer
+# ---------------------------------------------------------------------------
+def test_tenant_spec_validation():
+    TenantSpec("paid", weight=4.0, page_quota=0.5, rate=100.0)
+    with pytest.raises(SpecError):
+        TenantSpec("")                        # empty name
+    with pytest.raises(SpecError):
+        TenantSpec("a/b")                     # separator in name
+    with pytest.raises(SpecError):
+        TenantSpec(PUBLIC)                    # reserved namespace
+    with pytest.raises(SpecError):
+        TenantSpec(COMMONS)
+    with pytest.raises(SpecError):
+        TenantSpec("t", weight=0.0)
+    with pytest.raises(SpecError):
+        TenantSpec("t", page_quota=1.5)
+    with pytest.raises(SpecError):
+        TenantSpec("t", rate=-1.0)
+    with pytest.raises(SpecError):
+        TenantSpec("t", burst=10.0)           # burst without rate
+
+
+def test_cell_spec_tenant_validation():
+    from repro.core.spec import CellSpec
+    cfg = smoke_config(get_arch("qwen3-4b"))
+    ts = (TenantSpec("a", page_quota=0.5), TenantSpec("b", page_quota=0.4))
+    cell = CellSpec(name="srv", arch=cfg, role="serve", ncols=1, tenants=ts)
+    assert cell.tenant("a").page_quota == 0.5 and cell.has_tenant("b")
+    assert not cell.has_tenant("c")
+    with pytest.raises(SpecError):            # duplicate names
+        CellSpec(name="srv", arch=cfg, role="serve", ncols=1,
+                 tenants=(TenantSpec("a"), TenantSpec("a")))
+    with pytest.raises(SpecError):            # quota fractions over-commit
+        CellSpec(name="srv", arch=cfg, role="serve", ncols=1,
+                 tenants=(TenantSpec("a", page_quota=0.7),
+                          TenantSpec("b", page_quota=0.7)))
+    with pytest.raises(SpecError):            # tenants on a train cell
+        CellSpec(name="trn", arch=cfg, role="train", ncols=1,
+                 tenants=(TenantSpec("a"),))
+
+
+def test_registry_page_quotas_partition_exactly():
+    reg = TenantRegistry([TenantSpec("a", page_quota=0.5),
+                          TenantSpec("b", page_quota=0.25),
+                          TenantSpec("c")])
+    q = reg.page_quotas(10)
+    assert q == {"a": 5, "b": 2, COMMONS: 3}
+    assert sum(q.values()) == 10              # pockets partition the pool
+    # floor never over-commits even on awkward pool sizes
+    for n in (1, 3, 7, 13):
+        assert sum(reg.page_quotas(n).values()) == n
+
+
+# ---------------------------------------------------------------------------
+# DRR fairness (randomized property; hypothesis wrapper in
+# test_tenancy_properties.py)
+# ---------------------------------------------------------------------------
+def check_drr_weighted_service_bound(draw_int, draw_from):
+    """Between tenants backlogged for the whole run, the weighted
+    served-work gap is bounded by one quantum plus one maximal request:
+    served_a/w_a - served_b/w_b <= q + max(q, maxcost/min_w).  No
+    tenant ever banks unbounded credit.
+
+    ``draw_int(lo, hi)`` / ``draw_from(seq)`` abstract the randomness
+    source so the same checker runs seeded (here) or under hypothesis.
+    """
+    from collections import deque
+
+    nt = draw_int(2, 4)
+    weights = [draw_from([0.5, 1.0, 2.0, 4.0]) for _ in range(nt)]
+    names = [f"t{i}" for i in range(nt)]
+    reg = TenantRegistry([TenantSpec(n, weight=w)
+                          for n, w in zip(names, weights)])
+    quantum = draw_from([16, 64, 256])
+    sched = TenantScheduler(reg, quantum=quantum)
+    ticks = draw_int(3, 12)
+    budget = draw_int(1, 6)
+    maxcost = 1
+    queue = deque()
+    rid = [0]
+
+    def top_up():
+        # every tenant keeps >= budget+1 queued: always backlogged
+        nonlocal maxcost
+        depth = {n: 0 for n in names}
+        for r in queue:
+            depth[r.tenant] += 1
+        for n in names:
+            while depth[n] < budget + 1:
+                c = draw_int(1, 48)
+                maxcost = max(maxcost, c)
+                queue.append(FakeReq(n, c, rid[0]))
+                rid[0] += 1
+                depth[n] += 1
+
+    for _ in range(ticks):
+        top_up()
+        sched.select(queue, lambda r: True, budget=budget)
+
+    norm = {n: sched.served_cost.get(n, 0.0) / reg.weight(n) for n in names}
+    slack = quantum + max(quantum, maxcost / min(weights))
+    for a in names:
+        for b in names:
+            assert norm[a] - norm[b] <= slack + 1e-9, (
+                norm, weights, quantum, maxcost)
+    # deficits never bank beyond one quantum past a maximal pending request
+    for n in names:
+        cap = (max((request_cost(r) for r in queue if r.tenant == n),
+                   default=0) + quantum * reg.weight(n))
+        assert sched.deficit.get(n, 0.0) <= cap + 1e-9
+
+
+def test_drr_weighted_service_bound_seeded():
+    for seed in range(60):
+        rng = random.Random(seed)
+        check_drr_weighted_service_bound(rng.randint, rng.choice)
+
+
+def test_drr_scan_past_blocked_head():
+    """A resource-blocked request must not head-of-line-block admissible
+    requests behind it — same tenant or any other."""
+    from collections import deque
+    reg = TenantRegistry([])
+    sched = TenantScheduler(reg, quantum=1024)
+    big = FakeReq("default", 24, rid=0)
+    small = FakeReq("default", 4, rid=1)
+    queue = deque([big, small])
+    admitted = sched.select(queue, lambda r: r is not big, budget=2)
+    assert admitted == [small]
+    assert list(queue) == [big]               # blocked head stays queued
+
+
+def test_token_bucket_throttles_only_its_tenant():
+    """A drained bucket blocks its own tenant's FIFO in order; the other
+    tenant's queue flows; refill re-admits (simulated time)."""
+    from collections import deque
+    reg = TenantRegistry([TenantSpec("limited", rate=10.0, burst=20.0),
+                          TenantSpec("open")])
+    sched = TenantScheduler(reg, quantum=1024)
+    queue = deque([FakeReq("limited", 15, 0), FakeReq("limited", 15, 1),
+                   FakeReq("open", 15, 2)])
+    got = sched.select(queue, lambda r: True, budget=8, now=0.0)
+    assert [r.rid for r in got] == [0, 2]     # bucket covers one; open flows
+    assert sched.throttled.get("limited", 0) >= 1
+    got = sched.select(queue, lambda r: True, budget=8, now=0.5)
+    assert got == []                          # 0.5s * 10/s = 5 < 15
+    got = sched.select(queue, lambda r: True, budget=8, now=2.0)
+    assert [r.rid for r in got] == [1]        # refilled
+
+    b = TokenBucket(rate=None, burst=0.0)
+    assert b.take(1e9, now=0.0)               # rate=None never throttles
+
+
+def test_shed_victims_lowest_weight_newest_first():
+    reg = TenantRegistry([TenantSpec("paid", weight=4.0),
+                          TenantSpec("free", weight=1.0)])
+    sched = TenantScheduler(reg)
+    q = [FakeReq("free", 4, 0), FakeReq("paid", 4, 1), FakeReq("free", 4, 2),
+         FakeReq("paid", 4, 3), FakeReq("free", 4, 4)]
+    victims = sched.shed_victims(q, 3)
+    assert [v.rid for v in victims] == [4, 2, 0]   # free tier, newest first
+    victims = sched.shed_victims(q, 4)
+    assert [v.rid for v in victims] == [4, 2, 0, 3]  # then newest paid
+
+
+# ---------------------------------------------------------------------------
+# KVPool bulkheads (randomized property; hypothesis wrapper in
+# test_tenancy_properties.py)
+# ---------------------------------------------------------------------------
+def check_pool_quota_accounting_balances(pool, draw_int, draw_from):
+    """Random admit/release traffic across quota'd tenants: pocket
+    charges always balance the arena (sum(used) == pages_in_use), no
+    pocket exceeds its quota, and an admission the tenant's own pocket
+    covers NEVER fails — co-tenant exhaustion cannot leak across the
+    bulkhead.  All charges return to zero when the last slot releases."""
+    assert sum(pool.quotas.values()) == pool.num_pages
+    held = {}
+    for _ in range(draw_int(1, 24)):
+        op = draw_from(["admit", "release"])
+        if op == "admit":
+            free_slots = [s for s in range(pool.slots) if s not in held]
+            if not free_slots:
+                continue
+            slot = free_slots[0]
+            tenant = draw_from(["a", "b", "c", None])
+            plen = draw_int(1, 15)
+            need = pool.required_pages(plen, 4)
+            covered = need <= pool.available_pages(tenant)
+            try:
+                pool.admit(slot, pool.empty_lease(), plen, 4, tenant=tenant)
+                held[slot] = tenant
+            except PoolExhausted:
+                # the bulkhead promise: a covered allocation never fails
+                assert not covered, (tenant, need, pool.stats())
+        elif held:
+            slot = draw_from(sorted(held))
+            pool.release_slot(slot)
+            del held[slot]
+        assert sum(pool.used.values()) == pool.pages_in_use
+        for p, q in pool.quotas.items():
+            assert pool.used[p] <= q, (p, pool.used, pool.quotas)
+    for slot in list(held):
+        pool.release_slot(slot)
+    assert pool.pages_in_use == 0
+    assert all(v == 0 for v in pool.used.values())
+
+
+def _quota_pool():
+    model, _ = _model()
+    reg = TenantRegistry([TenantSpec("a", page_quota=0.5),
+                          TenantSpec("b", page_quota=0.25)])
+    return KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=4,
+                  num_pages=2 * N_LOG, quotas=reg.page_quotas)
+
+
+def test_pool_quota_accounting_balances_seeded():
+    for seed in range(25):
+        rng = random.Random(seed)
+        check_pool_quota_accounting_balances(
+            _quota_pool(), rng.randint, rng.choice)
+
+
+def test_pool_exhausted_tenant_never_starves_cotenant():
+    """Tenant A fully commits its pocket; B's first admission (covered
+    by B's own quota) still succeeds, while A's next one blocks."""
+    model, _ = _model()
+    reg = TenantRegistry([TenantSpec("a", page_quota=0.5),
+                          TenantSpec("b", page_quota=0.5)])
+    pool = KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=3,
+                  num_pages=2 * N_LOG, quotas=reg.page_quotas)
+    pool.admit(0, pool.empty_lease(), 28, 4, tenant="a")   # 4 pages: a full
+    assert pool.used["a"] == pool.quotas["a"]
+    with pytest.raises(PoolExhausted):
+        pool.admit(1, pool.empty_lease(), 1, 1, tenant="a")
+    pool.admit(2, pool.empty_lease(), 28, 4, tenant="b")   # b unaffected
+    assert pool.used["b"] == 4 and pool.pages_in_use == 8
+
+
+# ---------------------------------------------------------------------------
+# scoped sharing: private namespaces, public grant, foreign read-only
+# ---------------------------------------------------------------------------
+def test_ctx_keys_namespace_tenants():
+    default = Request(rid=0, prompt=np.arange(4), max_new_tokens=1)
+    assert request_ctx_key(default) is None          # pre-tenancy key
+    assert public_ctx_key(default) == ("public",)
+    other = Request(rid=1, prompt=np.arange(4), max_new_tokens=1,
+                    tenant="acme")
+    assert request_ctx_key(other) == ("tenant", "acme")
+    pub = Request(rid=2, prompt=np.arange(4), max_new_tokens=1,
+                  tenant="acme", public=True)
+    assert request_ctx_key(pub) == ("public",)
+    assert public_ctx_key(pub) is None               # already public
+
+
+def test_private_namespaces_do_not_cross_tenants():
+    """The same prompt served by two tenants interns twice — tenant B's
+    lookups never reach tenant A's private tree."""
+    model, params = _model()
+    cfg = model.cfg
+    bat = ContinuousBatcher(model, params, batch_slots=2, max_len=MAX_LEN,
+                            prefill_chunk=CHUNK, page_size=PAGE,
+                            tenants=[TenantSpec("a", share_public=False),
+                                     TenantSpec("b", share_public=False)])
+    for r in _requests(cfg, [3], shared=18, tenant="a"):
+        bat.submit(r)
+    bat.run_until_drained()
+    assert bat.pool.prefix_hit_tokens == 0
+    for r in _requests(cfg, [3], shared=18, tenant="b", rid0=10):
+        bat.submit(r)
+    bat.run_until_drained()
+    assert bat.pool.prefix_hit_tokens == 0           # no cross-tenant hit
+    owners = {n.owner for n in bat.pool.tree._walk()}
+    assert owners == {"a", "b"}                      # both interned privately
+
+
+def test_public_namespace_shared_read_only():
+    """A public request seeds the shared namespace; a granted tenant hits
+    it (foreign lease) without interning its own suffix there, and every
+    public refcount returns to zero after drain."""
+    model, params = _model()
+    cfg = model.cfg
+    bat = ContinuousBatcher(model, params, batch_slots=2, max_len=MAX_LEN,
+                            prefill_chunk=CHUNK, page_size=PAGE,
+                            tenants=[TenantSpec("a"),
+                                     TenantSpec("b", share_public=False)])
+    for r in _requests(cfg, [3], shared=18, tenant="a", public=True):
+        bat.submit(r)
+    bat.run_until_drained()
+    pub_before = [n for n in bat.pool.tree._walk() if n.owner == PUBLIC]
+    assert pub_before, "public request must intern under the public root"
+
+    for r in _requests(cfg, [3], shared=18, tenant="a", rid0=10):
+        bat.submit(r)
+    bat.run_until_drained()
+    assert bat.pool.prefix_hit_tokens > 0            # granted: read hit
+    pub_after = [n for n in bat.pool.tree._walk() if n.owner == PUBLIC]
+    # read-only grant: the hit added NOTHING to the public namespace
+    assert len(pub_after) == len(pub_before)
+
+    hits = bat.pool.prefix_hit_tokens
+    for r in _requests(cfg, [3], shared=18, tenant="b", rid0=20):
+        bat.submit(r)
+    bat.run_until_drained()
+    assert bat.pool.prefix_hit_tokens == hits        # b has no grant
+    assert all(n.refs == 0 for n in bat.pool.tree._walk())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end QoS
+# ---------------------------------------------------------------------------
+def test_single_tenant_overlay_is_token_identical():
+    """Declaring a tenant overlay (weight/quota/bucket) around a
+    single-tenant workload changes NOTHING: same tokens, same hit rate —
+    the cold path is byte-identical to the pre-tenancy stack."""
+    model, params = _model()
+    cfg = model.cfg
+
+    def run(**kw):
+        bat = ContinuousBatcher(model, params, batch_slots=2,
+                                max_len=MAX_LEN, prefill_chunk=CHUNK,
+                                page_size=PAGE, **kw)
+        for r in _requests(cfg, [3, 5, 2], shared=18):
+            bat.submit(r)
+        bat.run_until_drained()
+        for r in _requests(cfg, [4, 7], shared=18, seed=5, rid0=10):
+            bat.submit(r)
+        out = {r.rid: r.output for r in bat.run_until_drained()}
+        return out, bat.pool.prefix_hit_tokens
+
+    plain, hits_plain = run()
+    overlay, hits_overlay = run(tenants=[TenantSpec(
+        "default", weight=2.0, page_quota=0.5, rate=1e9)])
+    assert plain == overlay
+    assert hits_plain == hits_overlay > 0
+
+
+def test_quota_bulkhead_victim_admits_under_flood():
+    """An adversary flooding its own pocket cannot block a victim whose
+    pocket covers its allocation — the batcher admits the victim on the
+    same tick the adversary saturates."""
+    model, params = _model()
+    cfg = model.cfg
+    bat = ContinuousBatcher(model, params, batch_slots=4, max_len=MAX_LEN,
+                            prefill_chunk=CHUNK, page_size=PAGE,
+                            pool_pages=2 * N_LOG,
+                            tenants=[TenantSpec("victim", page_quota=0.5),
+                                     TenantSpec("adv", page_quota=0.5)])
+    for r in _requests(cfg, [20] * 4, tenant="adv"):          # 3 pages each
+        bat.submit(r)
+    for r in _requests(cfg, [20], tenant="victim", rid0=10):
+        bat.submit(r)
+    bat.step()
+    slotted = {bat.slot_req[s].rid for s in range(4)
+               if bat.slot_req[s] is not None}
+    assert 10 in slotted, "victim must admit despite the adversary flood"
+    assert len([r for r in slotted if r < 10]) == 1           # adv: 1 fits
+    done = bat.run_until_drained(max_steps=5_000)
+    assert {r.rid for r in done} == {0, 1, 2, 3, 10}          # nothing lost
+
+
+def test_weighted_slots_favor_heavy_tenant():
+    """With both tenants backlogged, DRR admits the heavy tenant's
+    backlog first: its requests finish earlier on average (everything
+    still drains — weights shape ORDER, never starve)."""
+    model, params = _model()
+    cfg = model.cfg
+    bat = ContinuousBatcher(model, params, batch_slots=2, max_len=MAX_LEN,
+                            prefill_chunk=CHUNK, page_size=PAGE, quantum=16,
+                            tenants=[TenantSpec("paid", weight=3.0),
+                                     TenantSpec("free", weight=1.0)])
+    for i in range(8):
+        bat.submit(_requests(cfg, [6], tenant="paid", rid0=i)[0])
+        bat.submit(_requests(cfg, [6], tenant="free", rid0=100 + i)[0])
+    done = bat.run_until_drained(max_steps=5_000)
+    assert len(done) == 16                    # weights never starve anyone
+    rank = {r.rid: i for i, r in enumerate(done)}
+    mean_paid = sum(rank[i] for i in range(8)) / 8
+    mean_free = sum(rank[100 + i] for i in range(8)) / 8
+    assert mean_paid < mean_free, (rank, mean_paid, mean_free)
+
+
+def test_disagg_tenant_stats_and_shedding():
+    """DisaggServer: tenant spec flows from the applied ClusterSpec,
+    per-tenant rollups appear in stats(), and overload sheds the
+    low-weight tier first (victims finish rejected, not lost)."""
+    from repro.core import DeviceGrid, Supervisor
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = _model()
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=2,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    sup.create_cell("prefill", cfg, "serve", ncols=1)
+    dec = sup.create_cell("dec0", cfg, "serve", ncols=1)
+    dec.init_serve(rng=jax.random.PRNGKey(0))
+    srv = DisaggServer(sup, "prefill", ["dec0"], batch_slots=2,
+                       max_len=MAX_LEN, chunk=CHUNK, page_size=PAGE,
+                       tenants=[TenantSpec("paid", weight=4.0),
+                                TenantSpec("free", weight=1.0)],
+                       shed_queue=4)
+    for r in _requests(cfg, [4] * 4, tenant="paid"):
+        srv.submit(r)
+    for r in _requests(cfg, [4] * 4, tenant="free", rid0=100):
+        srv.submit(r)
+    done = srv.run_until_drained(max_steps=2_000)
+    assert len(done) == 8                                    # none lost
+    st = srv.stats()
+    assert set(st["per_tenant"]) == {"paid", "free"}
+    assert st["shed_requests"] == 4
+    # shed victims are the newest FREE-tier requests, finished empty
+    shed = [r for r in done if not len(r.output)]
+    assert {r.tenant for r in shed} == {"free"}
+    served = [r for r in done if len(r.output)]
+    assert sum(r.tenant == "paid" for r in served) == 4
+
+
+def test_elastic_policy_filters_by_tenant():
+    """A tenant-scoped ReconcilePolicy ingests only that tenant's
+    samples — a co-tenant's latency cannot mask (or fake) a violation."""
+    from types import SimpleNamespace
+
+    from repro.core.accounting import RequestMetrics
+    from repro.core.elastic import ElasticPolicy, ReconcilePolicy
+
+    reqs = [RequestMetrics(rid=i, prompt_len=4, new_tokens=4,
+                           ttft=t, tpot=t, tenant=n)
+            for i, (n, t) in enumerate([("paid", 0.9), ("free", 0.1),
+                                        ("paid", 0.8), ("free", 0.2)])]
+    cell = SimpleNamespace(accounting=SimpleNamespace(requests=reqs, uid=7))
+    sup = SimpleNamespace(desired=None, cells={"srv": cell})
+    pol = ReconcilePolicy(
+        sup, "srv",
+        replica_policy=ElasticPolicy(lt=0.2, ut=0.5, metric="tpot"),
+        tenant="paid")
+    assert pol.pull() == 2
+    assert sorted(pol.replica_samples) == [0.8, 0.9]
+
+
+def test_accounting_tenant_labels():
+    from repro.core.accounting import (
+        CellAccounting,
+        RequestMetrics,
+        tenant_percentile,
+    )
+    acct = CellAccounting("srv")
+    acct.record_counter("blocked_on_pool", tenant="a")
+    acct.record_counter("blocked_on_pool", 2, tenant="b")
+    acct.record_counter("blocked_on_pool")
+    assert acct.counters["blocked_on_pool"] == 4      # global always moves
+    assert acct.tenant_counters["a"]["blocked_on_pool"] == 1
+    assert acct.tenant_counters["b"]["blocked_on_pool"] == 2
+    reqs = [RequestMetrics(rid=i, prompt_len=1, new_tokens=1,
+                           ttft=float(i), tpot=0.1, tenant="a" if i < 3
+                           else "b") for i in range(5)]
+    assert tenant_percentile(reqs, "ttft", 50.0, tenant="a") == 1.0
+    assert tenant_percentile(reqs, "ttft", 50.0, tenant="b") == 3.5
+    assert tenant_percentile(reqs, "ttft", 50.0, tenant="nobody") is None

@@ -1,0 +1,41 @@
+"""Hypothesis drivers for the tenancy QoS property checkers.
+
+The checkers themselves live in ``test_tenancy.py`` (where they also
+run on a seeded driver without the dep); here hypothesis explores the
+same invariants adversarially:
+
+  * DRR weighted-service bound — no quantum/weight/cost/budget mix lets
+    one backlogged tenant outrun another by more than one quantum plus
+    one maximal request;
+  * KVPool pocket accounting — charges balance the arena, quotas bind,
+    covered allocations never fail, all charges drain to zero.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from test_tenancy import (  # noqa: E402
+    _quota_pool,
+    check_drr_weighted_service_bound,
+    check_pool_quota_accounting_balances,
+)
+
+
+def _draws(data):
+    return (lambda lo, hi: data.draw(st.integers(lo, hi)),
+            lambda seq: data.draw(st.sampled_from(list(seq))))
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_drr_weighted_service_bound(data):
+    check_drr_weighted_service_bound(*_draws(data))
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_pool_quota_accounting_balances(data):
+    check_pool_quota_accounting_balances(_quota_pool(), *_draws(data))
