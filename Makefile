@@ -25,6 +25,7 @@ bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.elastic_sched --smoke
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/prefix_cache.py --smoke
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/multitenant.py --smoke
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/cluster_cache.py --smoke
 
 # full benchmark harness (paper tables/figures)
 bench:

@@ -1,0 +1,211 @@
+"""Cluster cache plane benchmark: prefix locality across replicas + drain.
+
+Two claims from the PR 7 tentpole (``repro.serve.cacheplane``), measured:
+
+1. **Prefix-locality routing** — K distinct system prompts served by N
+   decode replicas.  A cold wave scatters the prefixes (each replica
+   interns a disjoint subset); warm waves then carry one new suffix per
+   prefix.  Blind most-free routing would land a warm request on the
+   replica holding its prefix ~1/N of the time; digest routing through
+   the supervisor-held index sends it where the prefix lives, so the
+   AGGREGATE hit rate stays at the single-replica level.
+2. **Drain-before-detach** — with ``migrate=True`` a spec-driven
+   scale-down (3 -> 2) fires the supervisor drain hook: the victim's hot
+   pages and mid-decode slots move to survivors, nothing requeues, and
+   the disrupted wave's TTFT tail is indistinguishable from steady state
+   (a requeue would re-prefill from scratch and blow the p99).
+
+Reported per phase: TTFT p50/p99, prefix hit rate (phase delta), warm/
+cold routing counts, pages migrated, drain handoffs.  ``--smoke`` gates
+(CI): multi-replica warm hit rate >= 0.9x single-replica warm hit rate;
+scale-down requeues NOTHING (``drain_handoffs`` > 0, ``pages_migrated``
+> 0); disrupted-wave TTFT p99 <= 1.3x steady-wave TTFT p99; migrated
+prefixes still hit afterwards.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import smoke_config
+from repro.configs.registry import get_arch
+from repro.core import CellSpec, ChannelSpec, ClusterSpec, DeviceGrid, Supervisor
+from repro.serve.batcher import Request
+from repro.serve.disagg import DisaggServer
+
+_RID = [0]
+
+
+def _wave(cfg, prefixes, suffix_len, seed, max_new=6):
+    """One request per distinct system prompt, each with a fresh suffix."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for sysp in prefixes:
+        tail = rng.randint(1, cfg.vocab, size=suffix_len).astype(np.int32)
+        out.append(Request(rid=_RID[0], prompt=np.concatenate([sysp, tail]),
+                           max_new_tokens=max_new))
+        _RID[0] += 1
+    return out
+
+
+def _phase(srv, reqs, *, mid_wave=None):
+    """Run one wave; counters are PHASE DELTAS (the ledgers are
+    cumulative).  ``mid_wave`` runs after every request has its first
+    token but while decode is still in flight — the scale-down hook."""
+    before = srv.stats()
+    t0 = time.monotonic()
+    for r in reqs:
+        srv.submit(r)
+    if mid_wave is not None:
+        srv.step()
+        srv.step()
+        mid_wave()
+    srv.run_until_drained(max_steps=20_000)
+    wall = time.monotonic() - t0
+    rids = {r.rid for r in reqs}
+    ttfts = sorted(r.ttft for r in srv.done if r.rid in rids)
+    assert len(ttfts) == len(reqs), "wave lost requests"
+    st = srv.stats()
+    hits = st["prefix_hit_tokens"] - before["prefix_hit_tokens"]
+    miss = st["prefix_miss_tokens"] - before["prefix_miss_tokens"]
+    return {
+        "wall_s": wall,
+        "ttft_p50": float(np.percentile(ttfts, 50)),
+        "ttft_p99": float(np.percentile(ttfts, 99)),
+        "hit_rate": hits / max(hits + miss, 1),
+        "prefix_hit_tokens": hits,
+        "routed_warm": st["routed_warm"] - before["routed_warm"],
+        "requeued": st["requeued"] - before["requeued"],
+    }
+
+
+def _server(cfg, n_replicas, *, batch_slots, max_len, chunk, page_size,
+            migrate):
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1,
+                                cols=1 + n_replicas, allow_reuse=True)
+    sup = Supervisor(grid)
+    spec = ClusterSpec(
+        cells=(CellSpec("prefill", cfg, "serve", ncols=1),
+               CellSpec("decode", cfg, "serve", ncols=1,
+                        replicas=n_replicas, min_replicas=1,
+                        max_replicas=n_replicas)),
+        channels=(ChannelSpec("prefill", "decode", kind="kv"),),
+    )
+    sup.apply(spec)
+    first = spec.cell("decode").instances()[0]
+    sup.cells[first].init_serve(rng=jax.random.PRNGKey(0))
+    srv = DisaggServer(sup, "prefill", spec.cell("decode").instances(),
+                       batch_slots=batch_slots, max_len=max_len,
+                       chunk=chunk, page_size=page_size, migrate=migrate)
+    assert srv.worker is not None and srv.worker.pool is not None, \
+        "cluster-cache benchmark needs the paged cache plane"
+    return sup, srv
+
+
+def run(arch: str = "qwen3-4b", *, max_len: int = 128, chunk: int = 16,
+        page_size: int = 16, system_len: int = 96, suffix_len: int = 12,
+        n_prefixes: int = 4, batch_slots: int = 4, smoke: bool = False):
+    cfg = smoke_config(get_arch(arch))
+    if cfg.sliding_window is not None and cfg.sliding_window < max_len:
+        cfg = cfg.replace(sliding_window=max_len)
+    rng = np.random.RandomState(0)
+    prefixes = [rng.randint(1, cfg.vocab, size=system_len).astype(np.int32)
+                for _ in range(n_prefixes)]
+
+    # -- baseline: ONE replica holds every prefix; its warm hit rate is
+    #    the ceiling the cluster must match
+    sup1, srv1 = _server(cfg, 1, batch_slots=batch_slots, max_len=max_len,
+                         chunk=chunk, page_size=page_size, migrate=False)
+    _phase(srv1, _wave(cfg, prefixes, suffix_len, seed=1))   # compile+cold
+    single = _phase(srv1, _wave(cfg, prefixes, suffix_len, seed=2))
+
+    # -- cluster: prefixes scatter across 3 replicas on the cold wave;
+    #    warm waves must find them through the supervisor-held index
+    sup3, srv3 = _server(cfg, 3, batch_slots=batch_slots, max_len=max_len,
+                         chunk=chunk, page_size=page_size, migrate=True)
+    _phase(srv3, _wave(cfg, prefixes, suffix_len, seed=1))   # compile+cold
+    multi = _phase(srv3, _wave(cfg, prefixes, suffix_len, seed=2))
+    steady = _phase(srv3, _wave(cfg, prefixes, suffix_len, seed=3))
+
+    # -- live scale-down mid-wave: drain decode/2 into the survivors
+    def shrink():
+        sup3.apply(sup3.desired.with_cell(dataclasses.replace(
+            sup3.desired.cell("decode"), replicas=2)))
+        srv3.sync(sup3.desired)
+
+    disrupted = _phase(srv3, _wave(cfg, prefixes, suffix_len, seed=4),
+                       mid_wave=shrink)
+    post = _phase(srv3, _wave(cfg, prefixes, suffix_len, seed=5))
+    st = srv3.stats()
+
+    rate_ratio = multi["hit_rate"] / max(single["hit_rate"], 1e-9)
+    ttft_ratio = disrupted["ttft_p99"] / max(steady["ttft_p99"], 1e-9)
+    out = {
+        "arch": cfg.name, "max_len": max_len, "page_size": page_size,
+        "system_len": system_len, "n_prefixes": n_prefixes,
+        "single": single, "multi": multi, "steady": steady,
+        "disrupted": disrupted, "post": post,
+        "multi_over_single_hit_rate": rate_ratio,
+        "disrupted_over_steady_ttft_p99": ttft_ratio,
+        "pages_migrated": st["pages_migrated"],
+        "drain_handoffs": st["drain_handoffs"],
+    }
+    print(f"== cluster_cache [{cfg.name}] {n_prefixes} prefixes "
+          f"x {system_len} tok, 3 replicas ==")
+    for name in ("single", "multi", "steady", "disrupted", "post"):
+        p = out[name]
+        print(f"  {name:9s} ttft p50 {p['ttft_p50'] * 1e3:8.1f} ms   "
+              f"p99 {p['ttft_p99'] * 1e3:8.1f} ms   "
+              f"hit rate {p['hit_rate']:.3f}   warm-routed "
+              f"{p['routed_warm']}   requeued {p['requeued']}")
+    print(f"  aggregate/single hit rate = {rate_ratio:.3f}   "
+          f"disrupted/steady ttft p99 = {ttft_ratio:.3f}   "
+          f"migrated {st['pages_migrated']} pages, "
+          f"{st['drain_handoffs']} slot handoffs")
+
+    if smoke:
+        assert single["hit_rate"] > 0, "single-replica warm wave missed"
+        assert multi["routed_warm"] > 0, "index routed nothing warm"
+        assert rate_ratio >= 0.9, (
+            f"aggregate hit rate must be >= 0.9x single-replica, "
+            f"got {rate_ratio:.3f}")
+        assert st["drain_handoffs"] > 0 and st["pages_migrated"] > 0, \
+            "scale-down migrated nothing"
+        assert disrupted["requeued"] == 0, \
+            "drain-before-detach must not requeue"
+        assert ttft_ratio <= 1.3, (
+            f"scale-down TTFT p99 must stay <= 1.3x steady, "
+            f"got {ttft_ratio:.3f}")
+        assert post["prefix_hit_tokens"] > 0, \
+            "migrated prefixes stopped hitting after the scale-down"
+        print("SMOKE OK")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + the CI acceptance gates")
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--system-len", type=int, default=None)
+    ap.add_argument("--n-prefixes", type=int, default=None)
+    args = ap.parse_args()
+    kw = {}
+    if args.smoke:
+        kw = dict(max_len=128, system_len=96, suffix_len=12, n_prefixes=4,
+                  smoke=True)
+    for k in ("max_len", "system_len", "n_prefixes"):
+        v = getattr(args, k)
+        if v is not None:
+            kw[k] = v
+    run(args.arch, **kw)
+
+
+if __name__ == "__main__":
+    main()

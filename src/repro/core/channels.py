@@ -105,7 +105,10 @@ class ArrayChannel:
     ``map`` hands over the buffer without copy when the destination
     sharding equals the source (zero-copy shared mapping); ``send_kv``/
     ``recv_kv`` carry per-request KV-cache rows for the disaggregated
-    prefill-cell -> decode-cell handoff (see ``repro.serve.disagg``).
+    prefill-cell -> decode-cell handoff (see ``repro.serve.disagg``);
+    ``send_pages``/``poll_pages`` carry interned page subtrees between
+    decode replicas for live cache migration (``kind="pages"`` — see
+    ``repro.serve.cacheplane``).
     """
 
     _ids = itertools.count()
@@ -162,6 +165,22 @@ class ArrayChannel:
         out, stats = self._transfer(slot_cache, target_shardings)
         self._inbox.append(KVEnvelope(meta=dict(meta or {}), cache=out))
         return stats
+
+    def send_pages(self, stacks: Any, target_shardings: Any = None,
+                   *, meta: Optional[dict] = None) -> dict:
+        """Stream interned KV PAGE stacks replica-to-replica (the cluster
+        cache plane's migration path — see ``repro.serve.cacheplane``).
+        ``stacks`` is a canonical page-stack list as produced by
+        ``KVPool.export_subtree``; ``meta`` carries the tree records /
+        request bookkeeping needed to re-intern on the destination."""
+        self._check_open()
+        out, stats = self._transfer(stacks, target_shardings)
+        self._inbox.append(KVEnvelope(meta=dict(meta or {}), cache=out))
+        return stats
+
+    def poll_pages(self) -> Optional[KVEnvelope]:
+        """Non-raising pop of the next in-flight page envelope."""
+        return self.poll_kv()
 
     def map(self, tree: Any) -> dict:
         """Zero-copy publish (shared mapping analogue): the peer sees the

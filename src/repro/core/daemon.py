@@ -21,7 +21,13 @@ Tick order (each stage feeds the next):
    the spec (columns and/or replicas).  Threshold bands come from the
    spec's declared :class:`~repro.core.spec.SLOTarget` via
    :meth:`add_slo_policy` — the application states its latency
-   objective, not scaling thresholds.
+   objective, not scaling thresholds.  A policy-driven scale-down
+   executes its ``destroy`` ops INSIDE this stage (apply -> reconcile),
+   so drain-before-detach cannot wait for stage 4: the supervisor's
+   ``drain_hooks`` fire from the reconciler's destroy branch while the
+   doomed cell and its channels are still live, letting a migrating
+   ``DisaggServer`` (``migrate=True``) hand the victim's hot KV pages
+   and in-flight slots to survivors (``repro.serve.cacheplane``).
 4. **sync** — attached :class:`~repro.serve.disagg.DisaggServer`\\ s
    converge their live replica surface to the (possibly rescaled) spec:
    fresh decode instances attach, vanished ones detach with their

@@ -180,6 +180,11 @@ class Reconciler:
         for op in plan.ops:
             try:
                 if op.verb == "destroy":
+                    # drain-before-destroy: the serving plane may hand the
+                    # doomed cell's state to survivors while its channels
+                    # are still open (live subOS resize — cacheplane)
+                    for hook in getattr(self.sup, "drain_hooks", ()):
+                        hook(op.cell)
                     op.result = self.sup.destroy_cell(op.cell) or {}
                     op.status = "ok"
                 elif op.verb == "shrink":

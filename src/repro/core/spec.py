@@ -229,7 +229,7 @@ class ChannelSpec:
 
     src: str
     dst: str
-    kind: str = "array"                # "array" | "kv"
+    kind: str = "array"                # "array" | "kv" | "pages"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -273,11 +273,18 @@ class ClusterSpec:
         return out
 
     def instance_channels(self) -> List[Tuple[str, str, str]]:
-        """Expand channels over replica instances: (src, dst, kind)."""
+        """Expand channels over replica instances: (src, dst, kind).
+
+        A self-referential spec (``src == dst``, e.g. a replicated decode
+        cell's peer "pages" mesh) expands to every ORDERED pair of
+        distinct instances — a channel from an instance to itself is
+        meaningless and is skipped."""
         out = []
         for ch in self.channels:
             for s in self.cell(ch.src).instances():
                 for d in self.cell(ch.dst).instances():
+                    if s == d:
+                        continue
                     out.append((s, d, ch.kind))
         return out
 

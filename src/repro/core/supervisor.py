@@ -48,6 +48,12 @@ class Supervisor:
         self.events: List[dict] = []
         self.channels: List[ArrayChannel] = []
         self.desired: Optional[ClusterSpec] = None
+        # drain-before-destroy hooks: each is called with the doomed
+        # cell's name while the cell and its channels are still live —
+        # the serving plane's chance to hand state (hot KV pages,
+        # in-flight requests) to survivors before the zone is released
+        # (the paper's live subOS resize; see repro.serve.cacheplane)
+        self.drain_hooks: List = []
 
     # ------------------------------------------------------------------
     # declarative control plane
@@ -296,6 +302,11 @@ class Supervisor:
             return {"action": "recovered", "cell": self.recover_cell(name).name}
         return {"action": "none"}
 
+    def add_drain_hook(self, fn):
+        """Register a drain-before-destroy hook (``fn(cell_name)``), run
+        by the reconciler right before ``destroy_cell`` executes."""
+        self.drain_hooks.append(fn)
+
     # ------------------------------------------------------------------
     # channels (on-demand sharing)
     # ------------------------------------------------------------------
@@ -304,7 +315,8 @@ class Supervisor:
 
         ``kind`` is a label for the event log / introspection: "array" for
         generic pytree transfer (weight sync), "kv" for the disaggregated
-        prefill->decode KV handoff (see ``repro.serve.disagg``).
+        prefill->decode KV handoff (see ``repro.serve.disagg``), "pages"
+        for replica-to-replica KV page migration (``repro.serve.cacheplane``).
         """
         ch = ArrayChannel(self.cells[src], self.cells[dst], kind=kind)
         self.channels.append(ch)

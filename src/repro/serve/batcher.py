@@ -399,6 +399,83 @@ class ContinuousBatcher:
         self._post_install([slot], [req], [first_token])
         return True
 
+    def export_slot(self, slot: int) -> dict:
+        """Snapshot a busy slot's full mid-decode state for migration
+        (the cluster cache plane's drain-before-detach): the request, its
+        decode cursor (``pos``/``cur_tok``), every WRITTEN page's data
+        (positions ``[0, pos)`` — all mapped by the decode invariant) and
+        the slot's resident cache row.  Read-only: the caller drops the
+        slot only after a successful adopt on the destination."""
+        from repro.models.cache_utils import slice_cache_slots
+        req = self.slot_req[slot]
+        assert req is not None and self.pool is not None
+        pos = int(self.pos[slot])
+        P = self.pool.page_size
+        n_pages = -(-pos // P)
+        page_ids = np.asarray(self.pool.block_table[slot, :n_pages],
+                              np.int32)
+        assert not (page_ids == self.pool.sentinel).any(), \
+            "written page unmapped — block-table invariant broken"
+        resident_row = None
+        if jax.tree.leaves(self.resident):
+            resident_row = slice_cache_slots(self.resident,
+                                             self._resident_axes, [slot])
+        return {
+            "req": req, "pos": pos, "cur_tok": int(self.cur_tok[slot]),
+            "stacks": self.pool.read_pages(jnp.asarray(page_ids)),
+            "resident": resident_row,
+        }
+
+    def adopt_slot(self, req: Request, stacks, resident_row, pos: int,
+                   cur_tok: int) -> bool:
+        """Adopt a MIGRATED in-flight request mid-decode (the other half
+        of :meth:`export_slot`): admit it into a free slot, map its
+        written pages (interning full prompt pages — the migrated prefix
+        becomes shareable cache here too) and resume the decode cursor
+        exactly where the source replica left it.  The request's token
+        bookkeeping (``output``, TTFT stamps) is NOT re-run — decode
+        continues, it does not restart.  Returns False (nothing changed)
+        when no slot is free or page admission would exhaust the pool —
+        the caller requeues for an ordinary cold restart instead."""
+        from repro.serve.kvpool import (
+            PoolExhausted,
+            public_ctx_key,
+            request_ctx_key,
+        )
+        free = self.free_slots()
+        if not free or self.pool is None:
+            return False
+        slot = free[0]
+        ctx = request_ctx_key(req)
+        alt = (public_ctx_key(req) if self.tenants.share_public(
+            getattr(req, "tenant", DEFAULT_TENANT)) else None)
+        lease = self.pool.lease(req.prompt, ctx, alt)
+        try:
+            self.pool.admit(slot, lease, len(req.prompt),
+                            req.max_new_tokens,
+                            tenant=getattr(req, "tenant", None))
+        except PoolExhausted:
+            self.pool.release_lease(lease)
+            return False
+        # the locally shared prefix maps from this pool's own interned
+        # pages; only the remainder of the migrated stacks installs (and
+        # its full prompt pages re-intern here — prefix migration rides
+        # along with the slot)
+        start = lease.pages
+        if start:
+            rows = jnp.arange(start, stacks[0].k.shape[0])
+            stacks = [type(s)(k=s.k[rows], v=s.v[rows],
+                              slot_pos=s.slot_pos[rows]) for s in stacks]
+        self.pool.install_stacks(slot, req.prompt, ctx, stacks, start)
+        if resident_row is not None and jax.tree.leaves(resident_row):
+            from repro.models.cache_utils import merge_cache_slots
+            self.resident = merge_cache_slots(
+                self.resident, resident_row, self._resident_axes, [slot])
+        self.slot_req[slot] = req
+        self.pos[slot] = pos
+        self.cur_tok[slot] = cur_tok
+        return True
+
     def _admit_fallback(self, slot: int, req: Request):
         """Token-at-a-time admission: the prompt is consumed through the
         decode path (shared cache keeps slot shapes uniform).

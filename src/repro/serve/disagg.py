@@ -220,6 +220,7 @@ class _DecodeReplica:
         # suffix was routed (pins the shared pages against eviction until
         # install transfers them to the slot)
         self.leases: Dict[int, object] = {}
+        self.drained = False            # state already handed to survivors
 
     @property
     def pool(self):
@@ -277,7 +278,8 @@ class DisaggServer:
                  temperature: float = 0.0, eos_token: Optional[int] = None,
                  page_size: int = 16, pool_pages: Optional[int] = None,
                  tenants=None, shed_queue: Optional[int] = None,
-                 quantum: int = 256):
+                 quantum: int = 256, migrate: bool = False):
+        from repro.serve.cacheplane import CachePlane
         from repro.serve.tenancy import TenantRegistry, TenantScheduler
         if isinstance(decode_cells, str):
             decode_cells = [decode_cells]
@@ -322,7 +324,20 @@ class DisaggServer:
                                 "prefix_hit_tokens": 0,
                                 "prefix_miss_tokens": 0,
                                 "pages_evicted": 0, "kv_bytes_saved": 0}
-        self._rr = 0                    # round-robin cursor for routing ties
+        # cluster cache plane: a supervisor-held prefix index routes warm
+        # prompts to the replica already holding their deepest prefix.
+        # Live page/slot migration (drain-before-detach) is OPT-IN via
+        # ``migrate=True``: it changes detach semantics (a victim's
+        # slotted requests finish on survivors instead of requeueing) and
+        # opens replica-to-replica "pages" channels on demand
+        self.cacheplane = CachePlane(supervisor, page_size=page_size)
+        self.migrate = migrate
+        self.routed_warm = 0            # index-directed warm routings
+        self.routed_cold = 0            # capacity-routed (no usable index hit)
+        self.pages_migrated = 0         # prefix pages re-interned on survivors
+        self.drain_handoffs = 0         # in-flight slots adopted by survivors
+        if migrate:
+            supervisor.add_drain_hook(self._drain_hook)
 
         primary = supervisor.cells[decode_cells[0]]
         if primary.serve_params is None:
@@ -349,6 +364,7 @@ class DisaggServer:
         self.replicas: List[_DecodeReplica] = []
         for name in decode_cells:
             self._attach(name)
+        self._refresh_index()
 
     # -- replica lifecycle ---------------------------------------------
     def _sync_weights(self, dst_name: str, src_name: str):
@@ -469,6 +485,86 @@ class DisaggServer:
             rep.channel.close()
         return n
 
+    # -- cluster cache plane -------------------------------------------
+    def _refresh_index(self):
+        """One advert round: live replicas advertise their interned roots
+        to the supervisor-held prefix index (control-plane messages —
+        metadata only, no pages move)."""
+        self.cacheplane.refresh(
+            {rep.cell.name: rep.pool for rep in self.replicas})
+
+    def _pages_channel(self, src: _DecodeReplica, dst: _DecodeReplica):
+        """Replica-to-replica page-migration channel, opened through the
+        supervisor on first use (on-demand inter-subOS communication)."""
+        s, d = src.cell.name, dst.cell.name
+        return (self.sup.find_channel(s, d, "pages")
+                or self.sup.open_channel(s, d, kind="pages"))
+
+    def _drain_hook(self, cell_name: str):
+        """Supervisor drain hook (``migrate=True``): runs from the
+        reconciler's destroy branch, while the doomed cell and its
+        channels are still live — the only window where a policy-driven
+        scale-down can still move state off the victim."""
+        for rep in self.replicas:
+            if rep.cell.name == cell_name:
+                self._drain(rep)
+                return
+
+    def _drain(self, rep: _DecodeReplica) -> int:
+        """Live subOS resize: hand a doomed replica's hot state to the
+        survivors BEFORE it detaches — interned prefix subtrees migrate
+        over a "pages" channel to the survivor with the most free pool
+        pages, and every slotted in-flight request's written pages +
+        decode cursor are adopted by a survivor with a free slot, so the
+        request keeps decoding instead of cold-restarting (no TTFT
+        cliff).  Best-effort and idempotent: what cannot be placed is
+        left for ``_detach`` to requeue the ordinary way.  Returns the
+        number of requests handed off."""
+        from repro.serve.cacheplane import migrate_prefixes
+        if rep.drained or rep.pool is None:
+            return 0
+        rep.drained = True
+        survivors = [r for r in self.replicas
+                     if r is not rep and self._alive(r)
+                     and r.pool is not None]
+        if not survivors:
+            return 0
+        # hot prefixes -> the survivor with the most free pages (stable
+        # replica order breaks ties, so migration is deterministic)
+        dst = survivors[0]
+        for r in survivors[1:]:
+            if len(r.pool.free) > len(dst.pool.free):
+                dst = r
+        self.pages_migrated += migrate_prefixes(
+            rep.pool, dst.pool, self._pages_channel(rep, dst))
+        # in-flight slotted requests -> any survivor with a free slot
+        handoffs = 0
+        for slot, req in enumerate(rep.batcher.slot_req):
+            if req is None:
+                continue
+            if getattr(req, "_prompt_cursor",
+                       len(req.prompt)) < len(req.prompt):
+                continue        # mid-prompt fallback slot: requeue instead
+            snap = rep.batcher.export_slot(slot)
+            for r in survivors:
+                if not r.batcher.free_slots():
+                    continue
+                ch = self._pages_channel(rep, r)
+                ch.send_pages({"stacks": snap["stacks"],
+                               "resident": snap["resident"]},
+                              meta={"rid": req.rid, "pos": snap["pos"],
+                                    "cur_tok": snap["cur_tok"]})
+                env = ch.poll_pages()
+                if r.batcher.adopt_slot(req, env.cache["stacks"],
+                                        env.cache["resident"],
+                                        env.meta["pos"],
+                                        env.meta["cur_tok"]):
+                    rep.batcher.drop_slot(slot)
+                    handoffs += 1
+                    break
+        self.drain_handoffs += handoffs
+        return handoffs
+
     def _refresh_prefill(self) -> bool:
         """Rebind to a prefill cell the supervisor replaced under us.
 
@@ -541,6 +637,13 @@ class DisaggServer:
             name = rep.cell.name
             if name in desired and self._alive(rep):
                 continue
+            if self.migrate and self._alive(rep):
+                # spec-driven scale-down with the victim still live: hand
+                # its hot prefixes and slotted requests to survivors so
+                # the detach below finds (mostly) nothing to requeue.
+                # Idempotent — the reconciler's drain hook may already
+                # have run during apply().
+                self._drain(rep)
             requeued += self._detach(rep)
             detached.append(name)
         current = {rep.cell.name for rep in self.replicas}
@@ -551,6 +654,9 @@ class DisaggServer:
                 continue
             if self._attach(name) is not None:
                 attached.append(name)
+        # the surface changed (or may have): re-advertise so the prefix
+        # index never routes to a detached replica or misses a fresh one
+        self._refresh_index()
         return {"attached": attached, "detached": detached,
                 "requeued": requeued}
 
@@ -573,46 +679,81 @@ class DisaggServer:
         self.pending.append(req)
 
     def _route(self, capacity: Dict[int, int]) -> Optional[int]:
-        """Pick the replica with the most free capacity (per-request
-        routing); round-robin breaks ties so uniform load spreads."""
+        """Pick the replica with the most free capacity; the LOWEST index
+        wins ties (stable replica order), so routing is a pure function
+        of observable state — no hidden round-robin cursor — and the same
+        queue state always routes the same way.  Load still spreads:
+        every placement debits ``capacity``, which re-ranks the next
+        pick."""
         best, best_cap = None, 0
-        n = len(self.replicas)
-        for off in range(n):
-            i = (self._rr + off) % n
+        for i in range(len(self.replicas)):
             if capacity[i] > best_cap:
                 best, best_cap = i, capacity[i]
-        if best is not None:
-            self._rr = (best + 1) % n
         return best
 
     def _route_paged(self, capacity: Dict[int, int], req: Request):
-        """Slot routing + page admission: pick the most-free replica
-        whose pool can also cover the request, leasing its shared prefix
-        there.  Replicas that fail the pool check are skipped for THIS
-        request only.  Returns (index, lease) or (None, None) when every
-        replica is slot- or page-saturated (the caller blocks)."""
+        """Cache-aware slot routing + page admission.
+
+        Warm first: the supervisor-held prefix index names the replica
+        already holding the request's deepest interned prefix; when that
+        replica has a free slot and its pool admits the request, it wins
+        — the lease re-maps the prefix pages instead of re-computing and
+        re-streaming them, so with N replicas the aggregate hit rate
+        stays at the single-replica level instead of ~1/N of it.  When
+        no candidate advertises a chunk (or the warm pick is saturated)
+        the request falls back to most-free-slots placement
+        (:meth:`_route`), leasing wherever it lands.  Replicas that fail
+        the pool check are skipped for THIS request only.  Returns
+        (index, lease) or (None, None) when every replica is slot- or
+        page-saturated (the caller blocks)."""
         from repro.serve.kvpool import public_ctx_key, request_ctx_key
         from repro.serve.tenancy import DEFAULT_TENANT
+        ctx = request_ctx_key(req)
         alt = (public_ctx_key(req) if self.tenants.share_public(
             getattr(req, "tenant", DEFAULT_TENANT)) else None)
+
+        def try_lease(i: int):
+            rep = self.replicas[i]
+            le = (rep.pool.lease(req.prompt, ctx, alt)
+                  if rep.pool is not None else None)
+            if rep.pool_admittable(req, le):
+                capacity[i] -= 1
+                return True, le
+            if le is not None:
+                rep.pool.release_lease(le)
+            return False, None
+
+        # warm path: deepest advertised prefix among replicas with slots
+        cand = {r.cell.name: i for i, r in enumerate(self.replicas)
+                if capacity[i] > 0 and r.pool is not None}
+        if cand:
+            keys = [ctx] + ([alt] if alt is not None else [])
+            name, depth = self.cacheplane.best_replica(
+                req.prompt, keys, list(cand))
+            if name is not None and depth > 0:
+                ok, le = try_lease(cand[name])
+                if ok and le is not None and le.tokens > 0:
+                    self.routed_warm += 1
+                    return cand[name], le
+                if ok:   # admitted but the advert was stale (no hit):
+                    self.routed_cold += 1
+                    return cand[name], le
+        # cold path: most-free-slots, deterministic tie-break
         skipped: Dict[int, int] = {}
         pick, lease = None, None
         while True:
             i = self._route(capacity)
             if i is None:
                 break
-            rep = self.replicas[i]
-            le = (rep.pool.lease(req.prompt, request_ctx_key(req), alt)
-                  if rep.pool is not None else None)
-            if rep.pool_admittable(req, le):
+            ok, le = try_lease(i)
+            if ok:
                 pick, lease = i, le
-                capacity[i] -= 1
                 break
-            if le is not None:
-                rep.pool.release_lease(le)
             skipped[i] = capacity[i]
             capacity[i] = 0
         capacity.update(skipped)
+        if pick is not None:
+            self.routed_cold += 1
         return pick, lease
 
     def _block_on_pool(self, req: Request, deferred: List[Request]):
@@ -731,6 +872,9 @@ class DisaggServer:
                 extract_row_pages,
                 strip_kv_nodes,
             )
+            # fresh adverts before routing: what each replica interned
+            # since the last pump is exactly what warm routing needs
+            self._refresh_index()
             for req, tok, row_cache in self.worker.prefill_many(taking):
                 i, lease = self._route_paged(capacity, req)
                 if i is None:
@@ -878,10 +1022,26 @@ class DisaggServer:
         def pool_sum(key):
             return ds[key] + sum(p[key] for p in pools)
 
+        def hit_rate(hit, miss):
+            return hit / max(hit + miss, 1)
+
         return {
             "paged_kv": bool(pools),
             "prefix_hit_tokens": pool_sum("prefix_hit_tokens"),
             "prefix_miss_tokens": pool_sum("prefix_miss_tokens"),
+            # aggregate + per-replica warm fraction of looked-up tokens;
+            # the aggregate folds detached replicas in, so a scale-down
+            # never flatters the cluster-wide rate
+            "prefix_hit_rate": hit_rate(pool_sum("prefix_hit_tokens"),
+                                        pool_sum("prefix_miss_tokens")),
+            "per_replica_prefix_hit_rate": [
+                hit_rate(p["prefix_hit_tokens"], p["prefix_miss_tokens"])
+                for p in pools],
+            "routed_warm": self.routed_warm,
+            "routed_cold": self.routed_cold,
+            "pages_migrated": self.pages_migrated,
+            "drain_handoffs": self.drain_handoffs,
+            "cache_index_entries": len(self.cacheplane.index),
             "pages_evicted": pool_sum("pages_evicted"),
             "kv_bytes_saved": pool_sum("kv_bytes_saved"),
             "pages_in_use": sum(p["pages_in_use"] for p in pools),

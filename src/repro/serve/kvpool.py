@@ -801,6 +801,87 @@ class KVPool:
         the copy-on-write suite snapshots interned pages through this)."""
         return read_arena_pages(self.arena, page_ids)
 
+    # -- replica-to-replica migration (the cluster cache plane) --------
+    def export_subtree(self, ctx_key=None,
+                       max_pages: Optional[int] = None) -> tuple:
+        """Serialize one namespace's interned prefix tree for migration.
+
+        Returns ``(records, stacks)``: ``records[i]`` is ``{"key":
+        chunk-token tuple, "owner": billing owner, "parent": j}`` with
+        ``j`` the index of the node's parent record (``-1`` = root), in
+        pre-order so every parent precedes its children; ``stacks`` is
+        the canonical page data aligned row-for-row with ``records``
+        (``read_pages`` over the nodes' arena pages).  ``max_pages``
+        caps the export — children of an unexported node are dropped
+        with it (a child without its parent would be unreachable).
+        Read-only: refcounts and the tree are untouched."""
+        root = self.tree._roots.get(ctx_key)
+        records: List[dict] = []
+        pages: List[int] = []
+        if root is None:
+            return records, []
+        stack: List[tuple] = [(root, -1)]
+        while stack and (max_pages is None or len(records) < max_pages):
+            node, pidx = stack.pop()
+            if node.page is not None:
+                idx = len(records)
+                records.append({"key": node.key, "owner": node.owner,
+                                "parent": pidx})
+                pages.append(node.page)
+            else:
+                idx = pidx
+            stack.extend((c, idx) for c in node.children.values())
+        stacks = (self.read_pages(jnp.asarray(pages, jnp.int32))
+                  if pages else [])
+        return records, stacks
+
+    def import_subtree(self, ctx_key, records, stacks) -> int:
+        """Best-effort re-intern of an exported subtree into this pool.
+
+        Refcount-correct: imported nodes arrive as refs-0 reclaimable
+        cache (no phantom pins survive the migration), each page is
+        charged to its record's ORIGINAL owner's pocket, and nodes this
+        tree already holds are skipped (the interned page is
+        bit-identical by the exactness invariant).  A record whose page
+        cannot be allocated — or whose parent was skipped — is dropped
+        with its descendants, never partially linked.  The walked chain
+        is pinned during the import so an eviction triggered by
+        ``_alloc_raw`` can never reap a just-imported leaf mid-walk.
+        Returns the number of NEW pages interned."""
+        root = self.tree.root(ctx_key)
+        nodes: List[Optional[_Node]] = [None] * len(records)
+        pinned: List[_Node] = []
+        new_ids: List[int] = []
+        new_rows: List[int] = []
+        try:
+            for i, rec in enumerate(records):
+                parent = (root if rec["parent"] < 0
+                          else nodes[rec["parent"]])
+                if parent is None:      # parent dropped -> drop subtree
+                    continue
+                key = tuple(rec["key"])
+                node = parent.children.get(key)
+                if node is None:
+                    page = self._alloc_raw(rec["owner"])
+                    if page is None:
+                        continue        # exhausted: siblings may still fit
+                    node = self.tree.insert(parent, key, page, rec["owner"])
+                    new_ids.append(page)
+                    new_rows.append(i)
+                self.tree.acquire([node])
+                pinned.append(node)
+                nodes[i] = node
+            if new_ids:
+                rows = jnp.asarray(new_rows, jnp.int32)
+                sub = [KVSlice(k=s.k[rows], v=s.v[rows],
+                               slot_pos=s.slot_pos[rows]) for s in stacks]
+                self.arena = self._write_fn(
+                    self.arena, jnp.asarray(new_ids, jnp.int32), sub)
+        finally:
+            self.tree.release(pinned)
+            self._gauge()
+        return len(new_ids)
+
 
 # --------------------------------------------------------------------------
 # jitted programs over the paged cache

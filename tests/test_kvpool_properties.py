@@ -156,3 +156,101 @@ def test_prefix_tree_invariants(data):
     assert tree.evictable_pages() == tree.interned
 
 
+# ---------------------------------------------------------------------------
+# cluster cache plane: export/import round-trips the tree AND the pages
+# ---------------------------------------------------------------------------
+def _tree_paths(pool):
+    """Canonical view of a pool's interned state: (ctx_key, key-path) ->
+    node.  Paths, not record sequences — export order is DFS-stack, so a
+    round-trip legitimately reorders siblings."""
+    out = {}
+    for ck, root in pool.tree._roots.items():
+        stack = [(root, ())]
+        while stack:
+            node, path = stack.pop()
+            for key, child in node.children.items():
+                p = path + (key,)
+                out[(ck, p)] = child
+                stack.append((child, p))
+    return out
+
+
+def _page_data(pool, node):
+    return [np.asarray(s.k, np.float32)
+            for s in pool.read_pages(jax.numpy.asarray([node.page]))]
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_export_import_subtree_roundtrip(data):
+    """``KVPool.export_subtree`` / ``import_subtree`` (the migration
+    path) round-trip exactly: the destination reproduces the source's
+    key-paths, owners and page DATA; imported nodes arrive refs-0
+    (reclaimable cache); the source is untouched; re-import is
+    idempotent; and a too-small destination degrades best-effort without
+    breaking tree invariants."""
+    from repro.serve.kvpool import KVPool
+
+    model, _ = _model("qwen3-4b")
+    cfg = model.cfg
+    src = KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=2)
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    rng = np.random.RandomState(seed)
+    ctx_keys = [None, ("tenant", "a")]
+    for _ in range(data.draw(st.integers(1, 4), label="prompts")):
+        n_tok = data.draw(st.integers(PAGE + 1, MAX_LEN - 1), label="len")
+        # tiny alphabet -> maximal prefix collisions across prompts
+        prompt = np.asarray(data.draw(
+            st.lists(st.integers(1, 3), min_size=n_tok, max_size=n_tok),
+            label="prompt"), np.int32)
+        ck = data.draw(st.sampled_from(ctx_keys), label="ctx")
+        cache = jax.tree.map(
+            lambda x: jax.numpy.asarray(
+                rng.standard_normal(x.shape).astype(np.float32)
+            ).astype(x.dtype), model.init_cache(1, MAX_LEN))
+        src.intern_rows(prompt, ck, cache, 0)
+    before_paths = _tree_paths(src)
+    before_in_use = src.pages_in_use
+
+    dst = KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=2)
+    imported = 0
+    for ck in list(src.tree._roots):
+        records, stacks = src.export_subtree(ck)
+        assert len(records) == (len(stacks[0].k) if stacks else 0)
+        imported += dst.import_subtree(ck, records, stacks)
+    got_paths = _tree_paths(dst)
+    assert set(got_paths) == set(before_paths)
+    assert imported == len(before_paths) == dst.tree.interned
+    for key, node in got_paths.items():
+        ref = before_paths[key]
+        assert node.refs == 0 and node.owner == ref.owner
+        for a, b in zip(_page_data(dst, node), _page_data(src, ref)):
+            assert np.array_equal(a, b)
+    # the source is untouched
+    assert _tree_paths(src).keys() == before_paths.keys()
+    assert src.pages_in_use == before_in_use
+    # idempotent: everything already present imports nothing
+    for ck in list(src.tree._roots):
+        records, stacks = src.export_subtree(ck)
+        assert dst.import_subtree(ck, records, stacks) == 0
+    # best-effort under pressure: a pool with barely one request's worth
+    # of pages imports at most its capacity and keeps invariants
+    tiny = KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=0,
+                  num_pages=N_LOG)
+    for ck in list(src.tree._roots):
+        records, stacks = src.export_subtree(ck)
+        tiny.import_subtree(ck, records, stacks)
+    # refs-0 imports are ordinary reclaimable cache, so a later chain may
+    # evict an earlier one — LIVE state must still fit and stay sound
+    assert tiny.pages_in_use <= tiny.num_pages
+    pages = [n.page for n in tiny.tree._walk()]
+    assert len(pages) == len(set(pages)) == tiny.tree.interned
+    assert all(n.refs == 0 for n in tiny.tree._walk())
+    # every surviving path is a path the source holds, with equal data
+    src_paths = _tree_paths(src)
+    for key, node in _tree_paths(tiny).items():
+        for a, b in zip(_page_data(tiny, node),
+                        _page_data(src, src_paths[key])):
+            assert np.array_equal(a, b)
+
+
