@@ -16,8 +16,11 @@ BENCH_FAMILY_ARCHS := qwen3-4b mixtral-8x7b mamba2-2.7b zamba2-2.7b seamless-m4t
 
 # CI-friendly benchmark smoke: colocated-vs-disaggregated serving latency
 # (small shapes, swept over one config per family: dense, moe, ssm,
-# hybrid, encdec) + the daemon-driven elastic scheduling trace (short)
-# + the prefix-cache cold/warm gate (warm TTFT < 0.6x cold, bytes saved)
+# hybrid, encdec) + the paged-vs-dense decode step-time gate (native
+# paged step must be <= 1.0x the dense-cache step; skipped for
+# non-pageable families) + the daemon-driven elastic scheduling trace
+# (short) + the prefix-cache cold/warm gate (warm TTFT < 0.6x cold,
+# bytes saved)
 bench-smoke:
 	for arch in $(BENCH_FAMILY_ARCHS); do \
 		PYTHONPATH=$(PYTHONPATH) python benchmarks/disagg_serving.py --smoke --arch $$arch || exit 1; \

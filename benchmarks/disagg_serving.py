@@ -137,6 +137,54 @@ def run(rows: List[dict], smoke: bool = True, arch: str = "qwen3-4b"):
         f"chunked prefill must cut prompt-phase invocations >=4x, got {reduction:.1f}x"
     )
 
+    # -- paged vs dense decode step time (the gather-tax gate) ----------
+    # The native paged step feeds the arena + width-trimmed block table
+    # straight into Model.decode; it must be no slower than the legacy
+    # dense per-slot cache step.  Prompt depth and step count are chosen
+    # so the pow2 width bucket stays constant over the timed window (no
+    # recompile mid-measurement).  Skipped for families without a
+    # pageable cache (ssm/hybrid state, rolling SWA).
+    # the gate runs at its own cache depth: the dense step streams the
+    # whole (B, gate_len) allocation every token while the paged step
+    # walks ~2 pages/row, so gate_len sets the size of the tax being
+    # measured (at toy depths per-op dispatch noise drowns it out)
+    from repro.serve.kvpool import KVPool
+    gate_len = max(max_len, 512)
+    if KVPool.supported(solo.model, gate_len, 16):
+        def _decode_step_time(kv_pool):
+            gate_reqs = _make_requests(cfg.vocab, [17] * slots, 24, seed=1)
+            b = ContinuousBatcher(solo.model, solo.serve_params,
+                                  batch_slots=slots, max_len=gate_len,
+                                  prefill_chunk=chunk, kv_pool=kv_pool,
+                                  pool_pages=gate_len // 16)
+            for r in gate_reqs:
+                b.submit(r)
+            for _ in range(3):       # admit + prefill + warm the decode jit
+                b.step()
+            t0 = time.perf_counter()
+            for _ in range(8):
+                b.step()
+            jax.block_until_ready(b.pool.arena if b.pool is not None
+                                  else b.cache)
+            return (time.perf_counter() - t0) / 8
+
+        dense_t = _decode_step_time(None)
+        paged_t = _decode_step_time("auto")
+        ratio = paged_t / dense_t
+        rows.append({
+            "name": f"{tag}/paged_vs_dense_decode",
+            "us_per_call": paged_t * 1e6,
+            "derived": (
+                f"dense={dense_t*1e3:.2f}ms paged={paged_t*1e3:.2f}ms "
+                f"ratio={ratio:.2f} GATE<=1.0 MEASURED"
+            ),
+        })
+        assert ratio <= 1.0, (
+            f"paged decode step must not exceed the dense baseline: "
+            f"paged={paged_t*1e3:.2f}ms dense={dense_t*1e3:.2f}ms "
+            f"({ratio:.2f}x)"
+        )
+
     # -- disaggregated: prefill cell -> decode cell ---------------------
     spec = (spec
             .with_cell(CellSpec("prefill", cfg, "serve",

@@ -55,6 +55,8 @@ def _ns(mesh, pspec_tree):
 
 def _cost(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):        # older jax returns [dict] per device
+        ca = ca[0] if ca else {}
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),
@@ -432,6 +434,50 @@ def ideal_bytes_per_device(arch: ArchConfig, shape: ShapeConfig, model, ctx,
     return P_dev + kv + act
 
 
+def paged_decode_bytes_per_device(arch: ArchConfig, shape: ShapeConfig, model,
+                                  ctx, page_size: int = 16,
+                                  kv_elt: int = 2) -> float | None:
+    """Analytic HBM traffic for the native paged decode step.
+
+    The dense decode model above streams the whole ``(B, max_len)`` cache
+    allocation; the paged kernel instead walks each row's block-table
+    entries and streams KV at **page granularity** — ``ceil(kv_len / P)``
+    pages per row per attention layer — plus the int32 block-table row and
+    per-slot position metadata the kernel prefetches, plus the one slot it
+    writes.  Weights and residual-stream activations match the dense
+    model.  Returns ``None`` when the paged pool would not engage (no
+    pageable KV: ssm/hybrid state, rolling-SWA slot reuse).  ``kv_elt`` is
+    the arena element size — pass 1 for an int8 arena (the per-(page,
+    layer) scales are counted separately).
+    """
+    cfg = arch
+    w = cfg.sliding_window
+    if (shape.kind != "decode" or not cfg.num_kv_heads
+            or not getattr(model, "supports_paged_kv", False)
+            or (w is not None and w < shape.seq_len)):
+        return None
+    n_dev = ctx.mesh.devices.size
+    dp = max(ctx.dp_size(), 1)
+    P_dev = model.n_params() * 2 / n_dev
+    d, L = cfg.d_model, cfg.num_layers
+    B = shape.global_batch
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim or 0
+    n_attn = L
+    pages = -(-shape.seq_len // page_size)
+    kv_read = 2 * B * pages * page_size * hkv * dh * kv_elt * n_attn
+    meta = B * pages * 4 * n_attn                    # block-table row
+    meta += B * pages * page_size * 4 * n_attn       # slot_pos validity
+    if kv_elt == 1:
+        meta += 2 * B * pages * 4 * n_attn           # k/v per-page scales
+    kv_write = 2 * B * hkv * dh * kv_elt * n_attn
+    cross = 0.0
+    if cfg.family == "encdec":                       # cross memory is dense
+        s_src = model.source_len(shape.seq_len)
+        cross = 2 * B * s_src * hkv * dh * kv_elt * L
+    act = 30 * B * d * 2 * L / dp
+    return P_dev + (kv_read + meta + kv_write + cross) / n_dev + act
+
+
 # ---------------------------------------------------------------------------
 # analytic model flops (usefulness ratio)
 # ---------------------------------------------------------------------------
@@ -491,6 +537,9 @@ def roofline_row(arch_name: str, shape_name: str, dryrun_dir: str = "experiments
     t_memory_hlo = tot["bytes"] / HBM_BW
     ideal_b = ideal_bytes_per_device(arch, shape, acc.model, acc.ctx, out["n_micro"])
     t_memory = ideal_b / HBM_BW
+    paged_b = paged_decode_bytes_per_device(arch, shape, acc.model, acc.ctx)
+    paged_b_int8 = paged_decode_bytes_per_device(
+        arch, shape, acc.model, acc.ctx, kv_elt=1)
     t_coll = tot["coll"] / ICI_BW
     dominant = max(("compute", t_compute), ("memory", t_memory),
                    ("collective", t_coll), key=lambda kv: kv[1])[0]
@@ -506,6 +555,9 @@ def roofline_row(arch_name: str, shape_name: str, dryrun_dir: str = "experiments
         "flops_dev": tot["flops"],
         "bytes_dev_hlo": tot["bytes"],
         "bytes_dev_ideal": ideal_b,
+        "bytes_dev_paged": paged_b,
+        "bytes_dev_paged_int8": paged_b_int8,
+        "t_memory_paged_s": paged_b / HBM_BW if paged_b else None,
         "coll_dev": tot["coll"],
         "t_compute_s": t_compute,
         "t_memory_s": t_memory,
@@ -544,12 +596,17 @@ def main(argv=None):
             path = os.path.join(args.out, f"{a}__{s.name}__{args.level}.json")
             with open(path, "w") as f:
                 json.dump(row, f, indent=1)
+            paged = (
+                f" Mp={row['t_memory_paged_s']*1e3:9.2f}ms"
+                if row.get("t_memory_paged_s") else ""
+            )
             print(
                 f"[roofline] {a:24s} {s.name:12s} "
                 f"C={row['t_compute_s']*1e3:9.2f}ms M={row['t_memory_s']*1e3:9.2f}ms "
                 f"(hlo {row['t_memory_hlo_s']*1e3:9.2f}ms) "
                 f"X={row['t_collective_s']*1e3:9.2f}ms dom={row['dominant']:10s} "
                 f"frac={row['roofline_fraction']:.3f} useful={row['useful_ratio']:.2f}"
+                f"{paged}"
             )
 
 

@@ -1,4 +1,4 @@
-"""Flash-decode TPU kernel: one query token vs a long KV cache.
+"""Flash-decode TPU kernels: one query token vs a long KV cache.
 
 Decode is HBM-bandwidth-bound (the entire KV cache is streamed once per
 token), so the kernel's job is to keep the streaming dense and the
@@ -7,7 +7,25 @@ step loads a (block_k, Dh) K/V tile, updates the running (m, l, acc) for
 all G query heads of the kv group, and emits the normalized output on the
 last step.  Length masking comes from a per-batch ``kv_len`` scalar block.
 
-On real hardware the nk dimension maps to the sequential grid walk
+Two variants share that structure:
+
+* ``decode_attention_bhd`` — dense per-slot caches (B, S, Hkv, Dh).
+* ``paged_decode_attention_bhd`` — the NATIVE PAGED kernel.  The KV lives
+  in a physical page arena (num_pages, page_size, L, Hkv, Dh) shared by
+  every request; each batch row's pages are named by a block-table row.
+  The block table, per-row ``kv_len`` and the arena ``layer`` index ride
+  scalar prefetch (``pltpu.PrefetchScalarGridSpec``), so the K/V
+  BlockSpec index maps dereference ``block_table[b, j]`` and the kernel
+  walks each row's physical pages DIRECTLY in the arena — no contiguous
+  per-slot KV copy is ever materialized (the "gather tax" of
+  serve/kvpool.py's dense fallback).  Sentinel entries (>= num_pages)
+  are clamped in the index map and fully masked in the body (their
+  ``slot_pos`` is ignored), so unmapped pages contribute nothing.
+  Per-slot absolute positions come from the arena's ``slot_pos`` plane,
+  which also masks partially filled pages.  Int8 arenas dequantize
+  in-kernel with a per-(page, layer) scale block.
+
+On real hardware the page/nk dimension maps to the sequential grid walk
 (``arbitrary``), giving the classic split-KV streaming pattern; splits
 across the model axis are combined outside the kernel with an LSE merge
 (see serve/distributed decode).
@@ -110,4 +128,133 @@ def decode_attention_bhd(
         interpret=interpret,
         name="decode_attention",
     )(kv_len, qg, k_cache, v_cache)
+    return out.reshape(B, Hq, Dh)
+
+
+def _paged_decode_kernel(
+    bt_ref, kvlen_ref, layer_ref,        # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref, sp_ref, *rest,
+    scale: float, page: int, n_log: int, G: int, num_pages: int, quant: bool,
+):
+    del layer_ref  # consumed by the BlockSpec index maps only
+    if quant:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    page_id = bt_ref[b * n_log + j]
+    kv_len = kvlen_ref[b]
+
+    # skip unmapped pages and pages entirely past the row's valid length
+    # (absolute-position layout: logical page j holds positions [j*P, j*P+P))
+    @pl.when((page_id < num_pages) & (j * page < kv_len))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)                # (G, Dh)
+        k = k_ref[0, :, 0, 0].astype(jnp.float32)          # (P, Dh)
+        v = v_ref[0, :, 0, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (G, P)
+        sp = sp_ref[0, :, 0]                               # (P,)
+        valid = (sp >= 0) & (sp < kv_len)
+        s = jnp.where(valid[None, :], s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == n_log - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_bhd(
+    q, k_arena, v_arena, slot_pos, block_table, kv_len, layer,
+    *, k_scale=None, v_scale=None, interpret: bool = True,
+):
+    """Paged flash-decode: q (B, Hq, Dh) vs a block-table-indirected arena.
+
+    k/v_arena: (N, P, L, Hkv, Dh); slot_pos: (N, P, L) int32 absolute
+    position per slot (-1 = empty); block_table: (B, n_log) int32, entries
+    >= N are unmapped sentinels; kv_len: (B,) valid count; layer: () int32
+    arena layer to read.  k/v_scale: (N, L) f32 per-(page, layer)
+    dequantization scales for int8 arenas (None = float arena).
+    Returns (B, Hq, Dh).
+    """
+    B, Hq, Dh = q.shape
+    N, P, _L, Hkv, _ = k_arena.shape
+    G = Hq // Hkv
+    n_log = block_table.shape[1]
+    qg = q.reshape(B, Hkv, G, Dh)
+    bt_flat = block_table.reshape(-1).astype(jnp.int32)
+    layer_arr = jnp.asarray(layer, jnp.int32).reshape(1)
+    quant = k_scale is not None
+
+    def phys(b, j, bt):
+        return jnp.minimum(bt[b * n_log + j], N - 1)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt, kvl, lyr: (b, h, 0, 0)),
+        pl.BlockSpec((1, P, 1, 1, Dh),
+                     lambda b, h, j, bt, kvl, lyr: (phys(b, j, bt), 0, lyr[0], h, 0)),
+        pl.BlockSpec((1, P, 1, 1, Dh),
+                     lambda b, h, j, bt, kvl, lyr: (phys(b, j, bt), 0, lyr[0], h, 0)),
+        pl.BlockSpec((1, P, 1),
+                     lambda b, h, j, bt, kvl, lyr: (phys(b, j, bt), 0, lyr[0])),
+    ]
+    args = [qg, k_arena, v_arena, slot_pos]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda b, h, j, bt, kvl, lyr: (phys(b, j, bt), lyr[0])),
+            pl.BlockSpec((1, 1), lambda b, h, j, bt, kvl, lyr: (phys(b, j, bt), lyr[0])),
+        ]
+        args += [k_scale, v_scale]
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        scale=1.0 / math.sqrt(Dh), page=P, n_log=n_log, G=G,
+        num_pages=N, quant=quant,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, n_log),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, j, bt, kvl, lyr: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="paged_decode_attention",
+    )(bt_flat, kv_len.astype(jnp.int32), layer_arr, *args)
     return out.reshape(B, Hq, Dh)

@@ -1,4 +1,4 @@
-"""jit'd wrapper for the flash-decode kernel + distributed LSE combine."""
+"""Wrappers for the flash-decode kernels + distributed LSE combine."""
 from __future__ import annotations
 
 import functools
@@ -6,7 +6,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import decode_attention_bhd
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_bhd,
+    paged_decode_attention_bhd,
+)
 
 
 def _on_tpu() -> bool:
@@ -19,6 +22,21 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 512):
     out = decode_attention_bhd(
         q[:, 0], k_cache, v_cache, kv_len.astype(jnp.int32),
         block_k=block_k, interpret=not _on_tpu(),
+    )
+    return out[:, None]
+
+
+def paged_decode_attention(q, k_arena, v_arena, slot_pos, block_table,
+                           kv_len, layer, *, k_scale=None, v_scale=None):
+    """q: (B, 1, Hq, Dh) vs a paged arena (see ``paged_decode_attention_bhd``).
+
+    Unjitted on purpose — traced inside the caller's (model) jit so the
+    arena is never copied across a jit boundary per layer.
+    """
+    out = paged_decode_attention_bhd(
+        q[:, 0], k_arena, v_arena, slot_pos, block_table,
+        kv_len.astype(jnp.int32), layer,
+        k_scale=k_scale, v_scale=v_scale, interpret=not _on_tpu(),
     )
     return out[:, None]
 

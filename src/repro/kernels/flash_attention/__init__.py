@@ -1,2 +1,18 @@
-from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
-from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401
+"""Flash attention: dense prefill/train kernel + native paged extend.
+
+``paged_extend_attention`` serves the prefix-hit suffix path: ``q (B, S,
+Hq, Dh)`` suffix queries attend over a paged KV arena through the
+serving block table (same arena/block-table/sentinel convention as
+``repro.kernels.decode_attention``), with per-row ``pos`` giving the
+absolute position of each row's first query — so a shared prefix is
+attended in place, never densified.  ``*_ref`` are the pure-jnp parity
+oracles and the CPU fallback math.
+"""
+from repro.kernels.flash_attention.ops import (  # noqa: F401
+    flash_attention,
+    paged_extend_attention,
+)
+from repro.kernels.flash_attention.ref import (  # noqa: F401
+    attention_ref,
+    paged_extend_attention_ref,
+)

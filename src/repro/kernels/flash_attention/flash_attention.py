@@ -10,6 +10,12 @@ Block sizes are chosen so the working set
 (q_blk + k_blk + v_blk + acc = bq*Dh*4 + 2*bk*Dh*2 + bq*bk*4 bytes)
 fits comfortably in the ~16 MiB of VMEM with MXU-aligned (128-multiple)
 tile dims.
+
+``paged_extend_attention_bhsd`` is the block-table variant for the paged
+suffix-extend path (prefix-hit prefill): K/V stream straight from the
+physical page arena through scalar-prefetched block-table index maps —
+same calling convention as the paged decode kernel (see
+kernels/decode_attention), with per-row absolute query offsets.
 """
 from __future__ import annotations
 
@@ -131,3 +137,140 @@ def flash_attention_bhsd(
         interpret=interpret,
         name="flash_attention",
     )(q, k, v)
+
+
+def _paged_extend_kernel(
+    bt_ref, pos_ref, layer_ref,          # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref, sp_ref, *rest,
+    scale: float, block_q: int, page: int, n_log: int, num_pages: int,
+    quant: bool,
+):
+    del layer_ref  # consumed by the BlockSpec index maps only
+    if quant:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    page_id = bt_ref[b * n_log + j]
+    # newest attendable position for this q block (absolute layout:
+    # logical page j holds positions [j*P, j*P + P))
+    q_hi = pos_ref[b] + (qi + 1) * block_q - 1
+
+    @pl.when((page_id < num_pages) & (j * page <= q_hi))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)                # (bq, Dh)
+        k = k_ref[0, :, 0, 0].astype(jnp.float32)          # (P, Dh)
+        v = v_ref[0, :, 0, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                          # (bq, P)
+        q_pos = pos_ref[b] + qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page), 0)
+        sp = sp_ref[0, :, 0]                               # (P,)
+        valid = (sp[None, :] >= 0) & (sp[None, :] <= q_pos)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == n_log - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_extend_attention_bhsd(
+    q, k_arena, v_arena, slot_pos, block_table, pos, layer,
+    *, k_scale=None, v_scale=None, block_q: int = 128,
+    interpret: bool = True,
+):
+    """Paged suffix-extend attention: q (B, Hq, Sq, Dh) vs an arena.
+
+    The multi-query sibling of ``paged_decode_attention_bhd`` (see
+    kernels/decode_attention): row b's queries sit at absolute positions
+    ``pos[b] + i`` behind a prefix already resident in the block-table's
+    pages; a slot is attended iff its ``slot_pos`` is valid (>= 0) and
+    <= the query position.  k/v_arena: (N, P, L, Hkv, Dh); slot_pos:
+    (N, P, L); block_table: (B, n_log) int32 (>= N = unmapped); pos:
+    (B,) int32 per-row offsets; layer: () int32.  Returns (B, Hq, Sq, Dh).
+    """
+    B, Hq, Sq, Dh = q.shape
+    N, P, _L, Hkv, _ = k_arena.shape
+    G = Hq // Hkv
+    n_log = block_table.shape[1]
+    block_q = min(block_q, Sq)
+    assert Sq % block_q == 0, (Sq, block_q)
+    nq = Sq // block_q
+    bt_flat = block_table.reshape(-1).astype(jnp.int32)
+    layer_arr = jnp.asarray(layer, jnp.int32).reshape(1)
+    quant = k_scale is not None
+
+    def phys(b, j, bt):
+        return jnp.minimum(bt[b * n_log + j], N - 1)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, Dh),
+                     lambda b, h, i, j, bt, ps, lyr: (b, h, i, 0)),
+        pl.BlockSpec((1, P, 1, 1, Dh),
+                     lambda b, h, i, j, bt, ps, lyr: (phys(b, j, bt), 0, lyr[0], h // G, 0)),
+        pl.BlockSpec((1, P, 1, 1, Dh),
+                     lambda b, h, i, j, bt, ps, lyr: (phys(b, j, bt), 0, lyr[0], h // G, 0)),
+        pl.BlockSpec((1, P, 1),
+                     lambda b, h, i, j, bt, ps, lyr: (phys(b, j, bt), 0, lyr[0])),
+    ]
+    args = [q, k_arena, v_arena, slot_pos]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda b, h, i, j, bt, ps, lyr: (phys(b, j, bt), lyr[0])),
+            pl.BlockSpec((1, 1), lambda b, h, i, j, bt, ps, lyr: (phys(b, j, bt), lyr[0])),
+        ]
+        args += [k_scale, v_scale]
+
+    kernel = functools.partial(
+        _paged_extend_kernel,
+        scale=1.0 / math.sqrt(Dh), block_q=block_q, page=P, n_log=n_log,
+        num_pages=N, quant=quant,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hq, nq, n_log),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda b, h, i, j, bt, ps, lyr: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="paged_extend_attention",
+    )(bt_flat, pos.astype(jnp.int32), layer_arr, *args)

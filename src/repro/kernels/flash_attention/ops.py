@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the flash-attention kernel.
+"""Public wrappers for the flash-attention kernels.
 
 Accepts the model's (B, S, H, Dh) layout, dispatches to the Pallas kernel
 (interpret=True on CPU — the kernel body executes for correctness; real
@@ -7,11 +7,15 @@ Mosaic lowering on TPU).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 
-from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_bhsd,
+    paged_extend_attention_bhsd,
+)
 
 
 def _on_tpu() -> bool:
@@ -32,5 +36,24 @@ def flash_attention(
     out = flash_attention_bhsd(
         qt, kt, vt, causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def paged_extend_attention(q, k_arena, v_arena, slot_pos, block_table,
+                           pos, layer, *, k_scale=None, v_scale=None,
+                           block_q: int = 128):
+    """q: (B, S, Hq, Dh) vs a paged arena (see ``paged_extend_attention_bhsd``).
+
+    Unjitted on purpose — traced inside the caller's (model) jit so the
+    arena is never copied across a jit boundary per layer.  ``block_q``
+    snaps to a divisor of S so any bucketed suffix length tiles cleanly.
+    """
+    S = q.shape[1]
+    bq = S if S <= block_q else math.gcd(S, block_q)
+    out = paged_extend_attention_bhsd(
+        q.transpose(0, 2, 1, 3), k_arena, v_arena, slot_pos, block_table,
+        pos, layer, k_scale=k_scale, v_scale=v_scale, block_q=bq,
+        interpret=not _on_tpu(),
     )
     return out.transpose(0, 2, 1, 3)

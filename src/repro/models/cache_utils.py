@@ -20,7 +20,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import KVSlice
+from repro.models.layers import KVSlice, PagedKVCache
 from repro.models.param import tree_map_pspec
 
 
@@ -93,7 +93,7 @@ def install_cross_memory(cache: Any, mem, slots: Sequence[int]) -> Any:
 
 
 def _is_kv(x) -> bool:
-    return isinstance(x, KVSlice)
+    return isinstance(x, (KVSlice, PagedKVCache))
 
 
 def kv_cache_nodes(cache: Any) -> list:
@@ -241,6 +241,78 @@ def clean_arena_pages(arena: list, page_ids) -> list:
     a recycled page's stale contents can never be attended."""
     idx = jnp.asarray(page_ids, jnp.int32)
     return [a._replace(slot_pos=a.slot_pos.at[idx].set(-1)) for a in arena]
+
+
+# --------------------------------------------------------------------------
+# native paged views: the arena itself flows through Model.decode
+# --------------------------------------------------------------------------
+
+
+def paged_view(template: Any, resident: Any, arena: list,
+               block_table: jnp.ndarray, scales=None) -> Any:
+    """Build the cache pytree that carries the arena THROUGH the model.
+
+    Each positional KV node becomes a :class:`PagedKVCache` wrapping the
+    whole arena node plus the batch's block table (``layer`` starts 0; the
+    layer scan rebinds it per step — see ``Model._scan_stack``).  The
+    resident tree contributes everything that stays dense per-slot (encdec
+    cross memory).  ``scales``: per-node ``(k_scale, v_scale)`` list for
+    int8 arenas, or None.
+    """
+    nodes = []
+    for i, a in enumerate(arena):
+        ks, vs = (scales[i] if scales is not None else (None, None))
+        nodes.append(PagedKVCache(
+            k=a.k, v=a.v, slot_pos=a.slot_pos, block_table=block_table,
+            layer=jnp.zeros((), jnp.int32), k_scale=ks, v_scale=vs,
+        ))
+    return rebuild_kv_nodes(template, resident, nodes)
+
+
+def extract_paged(cache: Any):
+    """Inverse of :func:`paged_view`: (arena nodes, scales, resident)."""
+    nodes = kv_cache_nodes(cache)
+    arena = [KVSlice(k=n.k, v=n.v, slot_pos=n.slot_pos) for n in nodes]
+    scales = [(n.k_scale, n.v_scale) for n in nodes]
+    if all(k is None for k, _ in scales):
+        scales = None
+    return arena, scales, strip_kv_nodes(cache)
+
+
+# --------------------------------------------------------------------------
+# int8 KV pages: per-page symmetric quantization
+# --------------------------------------------------------------------------
+
+
+def _bshape(ndim: int, keep_axes, scale_shape) -> tuple:
+    shape = [1] * ndim
+    for a, s in zip(keep_axes, scale_shape):
+        shape[a] = s
+    return tuple(shape)
+
+
+def quantize_page(x: jnp.ndarray, *, keep_axes=(0,)):
+    """Symmetric int8 quantization with one scale per kept-axes index.
+
+    ``keep_axes`` (sorted ascending) name the axes that keep their own
+    scale — e.g. ``(0, 2)`` on a canonical ``(n_pages, P, L, Hkv, Dh)``
+    page stack gives one scale per (page, layer).  Returns
+    ``(q int8, scale f32)`` with ``scale.shape == tuple(x.shape[a] for a
+    in keep_axes)``.  All-zero groups get scale 0 (dequantizes to 0).
+    """
+    x32 = x.astype(jnp.float32)
+    red = tuple(a for a in range(x.ndim) if a not in keep_axes)
+    amax = jnp.max(jnp.abs(x32), axis=red)
+    scale = amax / 127.0
+    b = scale.reshape(_bshape(x.ndim, keep_axes, scale.shape))
+    q = jnp.clip(jnp.round(x32 / jnp.maximum(b, 1e-8)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_page(q: jnp.ndarray, scale: jnp.ndarray, *, keep_axes=(0,)):
+    """Inverse of :func:`quantize_page` (f32 output)."""
+    b = scale.reshape(_bshape(q.ndim, keep_axes, scale.shape))
+    return q.astype(jnp.float32) * b
 
 
 def load_pages_into_row(cache: Any, template: Any, axes: list, row: int,

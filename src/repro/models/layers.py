@@ -238,6 +238,134 @@ class KVSlice(NamedTuple):
     slot_pos: jnp.ndarray   # (B, S_cache) int32
 
 
+class PagedKVCache(NamedTuple):
+    """Paged KV view: the whole physical page arena + one batch's block table.
+
+    The native-paged calling convention (see ``serve/kvpool.py``): instead
+    of gathering pool pages into a dense per-slot cache, the serving layer
+    hands attention the arena itself plus a ``(B, n_log)`` block table.
+    Attention writes the current token(s) straight into their physical
+    pages (`.at[...].set(mode="drop")` — sentinel entries ``>= N`` drop the
+    write) and reads by walking the block-table row, so no contiguous KV
+    copy is ever materialized.  ``layer`` selects the arena layer slice this
+    view reads/writes; the layer scan rebinds it per step so one arena
+    rides the scan carry (see ``Model._scan_stack``).
+
+    Precondition: absolute-position layout only — slot ``i`` of logical
+    page ``j`` holds position ``j*P + i``.  The KVPool gate guarantees it
+    (``sliding_window`` is None or >= max_len), so window masking never
+    binds and the paged kernels ignore it.
+
+    k/v: (N, P, L, Hkv, Dh) arena (float, or int8 with per-page scales);
+    slot_pos: (N, P, L) int32 absolute position per slot (-1 = empty);
+    block_table: (B, n_log) int32 physical page per logical page;
+    layer: () int32 arena layer of this view;
+    k_scale/v_scale: (N, L) f32 per-(page, layer) scales for int8 arenas.
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray
+    block_table: jnp.ndarray
+    layer: jnp.ndarray
+    k_scale: Optional[jnp.ndarray] = None
+    v_scale: Optional[jnp.ndarray] = None
+
+
+def paged_gather(cache: "PagedKVCache"):
+    """Walk a block table in pure jnp: (B, n_log*P) dense K/V/slot_pos view.
+
+    The interpret-mode half of the paged attention contract — identical
+    masking semantics to the Pallas kernels (sentinel pages contribute
+    slot_pos -1, i.e. masked zeros), and bit-identical inputs to the dense
+    refs, so CPU serving keeps token-identical output vs the dense path.
+    Int8 arenas are dequantized with their per-page scales on gather.
+    """
+    N, P = cache.k.shape[0], cache.k.shape[1]
+    layer, bt = cache.layer, cache.block_table
+    B, n_log = bt.shape
+    btc = jnp.minimum(bt, N - 1)                      # clamp sentinels
+    k_l = jnp.take(cache.k, layer, axis=2)            # (N, P, Hkv, Dh)
+    v_l = jnp.take(cache.v, layer, axis=2)
+    sp_l = jnp.take(cache.slot_pos, layer, axis=2)    # (N, P)
+    k_pg = k_l[btc]                                   # (B, n_log, P, Hkv, Dh)
+    v_pg = v_l[btc]
+    if cache.k_scale is not None:
+        ks = jnp.take(cache.k_scale, layer, axis=1)[btc]   # (B, n_log)
+        vs = jnp.take(cache.v_scale, layer, axis=1)[btc]
+        k_pg = k_pg.astype(F32) * ks[..., None, None, None]
+        v_pg = v_pg.astype(F32) * vs[..., None, None, None]
+    sp = jnp.where((bt < N)[:, :, None], sp_l[btc], -1)
+    return (k_pg.reshape(B, n_log * P, *k_pg.shape[3:]),
+            v_pg.reshape(B, n_log * P, *v_pg.shape[3:]),
+            sp.reshape(B, n_log * P))
+
+
+def _quantize_to(arena_dtype, vals, scale):
+    """Quantize (..., Hkv, Dh) floats with broadcast (...,) scales."""
+    q = jnp.round(vals.astype(F32) / jnp.maximum(scale, 1e-8)[..., None, None])
+    return jnp.clip(q, -127, 127).astype(arena_dtype)
+
+
+def _paged_write_decode(cache: "PagedKVCache", k, v, pos):
+    """Write one token per row into its physical page; returns new cache.
+
+    k/v: (B, Hkv, Dh) values for position ``pos`` (B,).  Sentinel/unmapped
+    target pages drop the write.  Int8 arenas lazily initialize the
+    per-page scale on first touch (scale 0 = untouched page).
+    """
+    N, P = cache.k.shape[0], cache.k.shape[1]
+    layer, bt = cache.layer, cache.block_table
+    phys = jnp.take_along_axis(bt, (pos // P)[:, None], axis=1)[:, 0]  # (B,)
+    off = pos % P
+    ks, vs = cache.k_scale, cache.v_scale
+    if ks is not None:
+        physc = jnp.minimum(phys, N - 1)
+        amax_k = jnp.max(jnp.abs(k.astype(F32)), axis=(1, 2))          # (B,)
+        amax_v = jnp.max(jnp.abs(v.astype(F32)), axis=(1, 2))
+        sck = jnp.where(ks[physc, layer] > 0, ks[physc, layer], amax_k / 127.0)
+        scv = jnp.where(vs[physc, layer] > 0, vs[physc, layer], amax_v / 127.0)
+        ks = ks.at[phys, layer].set(sck, mode="drop")
+        vs = vs.at[phys, layer].set(scv, mode="drop")
+        k = _quantize_to(cache.k.dtype, k, sck)
+        v = _quantize_to(cache.v.dtype, v, scv)
+    k_a = cache.k.at[phys, off, layer].set(k, mode="drop")
+    v_a = cache.v.at[phys, off, layer].set(v, mode="drop")
+    sp_a = cache.slot_pos.at[phys, off, layer].set(pos, mode="drop")
+    return cache._replace(k=k_a, v=v_a, slot_pos=sp_a, k_scale=ks, v_scale=vs)
+
+
+def _paged_write_extend(cache: "PagedKVCache", k, v, positions):
+    """Write S suffix tokens per row into their physical pages.
+
+    k/v: (B, S, Hkv, Dh); positions: (B, S) absolute.  Positions whose
+    logical page is beyond the block-table width or unmapped drop the
+    write.  Int8 scales use a scatter-max per target page.
+    """
+    N, P = cache.k.shape[0], cache.k.shape[1]
+    layer, bt = cache.layer, cache.block_table
+    n_log = bt.shape[1]
+    lp = positions // P
+    phys = jnp.where(
+        lp < n_log,
+        jnp.take_along_axis(bt, jnp.minimum(lp, n_log - 1), axis=1),
+        N,
+    )                                                             # (B, S)
+    off = positions % P
+    ks, vs = cache.k_scale, cache.v_scale
+    if ks is not None:
+        physc = jnp.minimum(phys, N - 1)
+        amax_k = jnp.max(jnp.abs(k.astype(F32)), axis=(2, 3))     # (B, S)
+        amax_v = jnp.max(jnp.abs(v.astype(F32)), axis=(2, 3))
+        ks = ks.at[phys, layer].max(amax_k / 127.0, mode="drop")
+        vs = vs.at[phys, layer].max(amax_v / 127.0, mode="drop")
+        k = _quantize_to(cache.k.dtype, k, ks[physc, layer])
+        v = _quantize_to(cache.v.dtype, v, vs[physc, layer])
+    k_a = cache.k.at[phys, off, layer].set(k, mode="drop")
+    v_a = cache.v.at[phys, off, layer].set(v, mode="drop")
+    sp_a = cache.slot_pos.at[phys, off, layer].set(positions, mode="drop")
+    return cache._replace(k=k_a, v=v_a, slot_pos=sp_a, k_scale=ks, v_scale=vs)
+
+
 def qkv_project(p, x, cfg: ArchConfig, positions):
     """x: (B,S,D) -> q (B,S,Hq,Dh), k,v (B,S,Hkv,Dh), roped."""
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -359,19 +487,58 @@ def attention_block(
         # overwritten by decode before its position becomes attendable,
         # so no extra validity mask is needed (see serve/kvpool.py).
         assert cache is not None and pos is not None
-        S_c = cache.k.shape[1]
         positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
         q, k, v = qkv_project(p, x, cfg, positions)
-        bidx = jnp.arange(B)[:, None]
-        k_c = cache.k.at[bidx, positions].set(k, mode="drop")
-        v_c = cache.v.at[bidx, positions].set(v, mode="drop")
-        sp = cache.slot_pos.at[bidx, positions].set(positions, mode="drop")
-        out = extend_attention_ref(q, k_c, v_c, sp, positions, window=window)
-        new_cache = KVSlice(k=k_c, v=v_c, slot_pos=sp)
+        if isinstance(cache, PagedKVCache):
+            # Native paged suffix extension: write straight into the
+            # arena's physical pages, attend via the block table.
+            new_cache = _paged_write_extend(cache, k, v, positions)
+            if jax.default_backend() == "tpu":
+                from repro.kernels.flash_attention.ops import (
+                    paged_extend_attention,
+                )
+                out = paged_extend_attention(
+                    q, new_cache.k, new_cache.v, new_cache.slot_pos,
+                    new_cache.block_table, pos, new_cache.layer,
+                    k_scale=new_cache.k_scale, v_scale=new_cache.v_scale,
+                )
+            else:
+                k_d, v_d, sp_d = paged_gather(new_cache)
+                out = extend_attention_ref(q, k_d, v_d, sp_d, positions,
+                                           window=window)
+        else:
+            bidx = jnp.arange(B)[:, None]
+            k_c = cache.k.at[bidx, positions].set(k, mode="drop")
+            v_c = cache.v.at[bidx, positions].set(v, mode="drop")
+            sp = cache.slot_pos.at[bidx, positions].set(positions, mode="drop")
+            out = extend_attention_ref(q, k_c, v_c, sp, positions, window=window)
+            new_cache = KVSlice(k=k_c, v=v_c, slot_pos=sp)
     elif mode == "decode":
         assert cache is not None and pos is not None
         positions = pos[:, None]                              # (B,1)
         q, k, v = qkv_project(p, x, cfg, positions)           # S == 1
+        if isinstance(cache, PagedKVCache):
+            # Native paged decode: one token per row written to its
+            # physical page, attention walks the block table (no dense
+            # gather/scatter around the step).  Sharded decode does not
+            # apply — the arena is replicated, rows are block-table rows.
+            new_cache = _paged_write_decode(cache, k[:, 0], v[:, 0], pos)
+            if jax.default_backend() == "tpu":
+                from repro.kernels.decode_attention.ops import (
+                    paged_decode_attention,
+                )
+                out = paged_decode_attention(
+                    q, new_cache.k, new_cache.v, new_cache.slot_pos,
+                    new_cache.block_table, pos + 1, new_cache.layer,
+                    k_scale=new_cache.k_scale, v_scale=new_cache.v_scale,
+                )
+            else:
+                k_d, v_d, sp_d = paged_gather(new_cache)
+                out = decode_attention_ref(
+                    q, k_d, v_d, pos + 1, window=window, slot_pos=sp_d
+                )
+            y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            return y, new_cache
         S_c = cache.k.shape[1]
         use_sharded = (
             cfg.sharded_decode and ctx is not None and cfg.decode_kv_shard_seq

@@ -22,6 +22,7 @@ from repro.models import encdec as encdec_mod
 from repro.models import transformer as tfm
 from repro.models import zamba2 as zmb
 from repro.models.layers import (
+    PagedKVCache,
     embed_spec,
     kv_slice_specs,
     logits_fn,
@@ -80,6 +81,53 @@ def _scan_stack(fn, x, stacked, cache, *, remat: bool, policy: str,
         return fn(h, lp, csl)
 
     body_fn = jax.checkpoint(wrapped, policy=_policy(policy)) if remat else wrapped
+
+    is_paged = lambda n: isinstance(n, PagedKVCache)
+    paged_nodes = (
+        [n for n in jax.tree.leaves(cache, is_leaf=is_paged) if is_paged(n)]
+        if cache is not None else []
+    )
+    if paged_nodes:
+        # Paged KV rides the scan CARRY, not the xs: arena leaves have no
+        # layer-stacked leading dim (the whole (N, P, L, ...) arena flows
+        # through every step), so slicing them per layer is impossible.
+        # Instead the per-step xs carry only the layer index; the body
+        # rebinds each PagedKVCache's ``layer`` field and threads the
+        # updated arena through the carry.  Output ys for paged positions
+        # are dummies; the real arenas are spliced back after the scan.
+        L = jax.tree.leaves(stacked)[0].shape[0]
+        idx = jnp.arange(L, dtype=jnp.int32)
+        cache_x = jax.tree.map(lambda n: idx if is_paged(n) else n, cache,
+                               is_leaf=is_paged)
+
+        def body(carry, xs):
+            h, aux, pnodes = carry
+            lp, csl_x = xs
+            it = iter(pnodes)
+            csl = jax.tree.map(
+                lambda t, sx: next(it)._replace(layer=sx) if is_paged(t) else sx,
+                cache, csl_x, is_leaf=is_paged,
+            )
+            h, ncsl, a = body_fn(h, lp, csl)
+            if constrain is not None:
+                h = constrain(h)
+            new_p = [n for n in jax.tree.leaves(ncsl, is_leaf=is_paged)
+                     if is_paged(n)]
+            ys = jax.tree.map(
+                lambda n: jnp.zeros((), jnp.int32) if is_paged(n) else n,
+                ncsl, is_leaf=is_paged,
+            )
+            return (h, aux + a, new_p), ys
+
+        (x, aux, pnodes), ys = jax.lax.scan(
+            body, (x, jnp.float32(0.0), paged_nodes), (stacked, cache_x))
+        it = iter(pnodes)
+        new_cache = jax.tree.map(
+            lambda t, y: (next(it)._replace(layer=jnp.zeros((), jnp.int32))
+                          if is_paged(t) else y),
+            cache, ys, is_leaf=is_paged,
+        )
+        return x, new_cache, aux
 
     def body(carry, xs):
         h, aux = carry

@@ -110,7 +110,8 @@ class ContinuousBatcher:
                  prefill_chunk: Optional[int] = 32, accounting=None,
                  kv_pool: Any = "auto", page_size: int = 16,
                  pool_pages: Optional[int] = None, tenants: Any = None,
-                 tenant_buckets: bool = True, quantum: int = 256):
+                 tenant_buckets: bool = True, quantum: int = 256,
+                 kv_dtype: Optional[str] = None):
         from repro.models.cache_utils import cache_batch_axes, strip_kv_nodes
         from repro.serve.kvpool import KVPool, build_paged_serve_step
         from repro.serve.serve_step import (
@@ -149,20 +150,22 @@ class ContinuousBatcher:
         if kv_pool == "auto":
             kv_pool = (KVPool(model, max_len=max_len, page_size=page_size,
                               slots=batch_slots, num_pages=pool_pages,
-                              accounting=accounting, quotas=quota_fn)
+                              accounting=accounting, quotas=quota_fn,
+                              kv_dtype=kv_dtype)
                        if KVPool.supported(model, max_len, page_size)
                        else None)
         self.pool: Optional[KVPool] = kv_pool
         if self.pool is not None:
             self.cache = None
             self.resident = strip_kv_nodes(model.init_cache(batch_slots, max_len))
+            # native paged decode: the arena + block table flow straight
+            # into Model.decode (no gather/scatter); arena, scales and
+            # resident are donated so the jitted step mutates in place
             self._step = jax.jit(
                 build_paged_serve_step(
-                    model, temperature, axes=self.pool.axes,
-                    template=self.pool.template,
-                    page_size=self.pool.page_size,
+                    model, temperature, template=self.pool.template,
                 ),
-                donate_argnums=(1, 2),
+                donate_argnums=(1, 2, 3),
             )
         else:
             self.cache = model.init_cache(batch_slots, max_len)
@@ -262,22 +265,45 @@ class ContinuousBatcher:
         lease) triples whose suffixes share a pad bucket — the shared
         prefix pages are already mapped, so only the divergence tail is
         computed (mixed hit depths batch fine: each row carries its own
-        offset)."""
-        from repro.serve.kvpool import run_extend_group
-        from repro.serve.serve_step import build_extend_step
+        offset).
+
+        NATIVE paged: each row's block-table row IS its slot's row, so
+        the suffix K/V lands directly in the slot's arena pages — no
+        dense rows cache, no post-install page copy.  Afterwards the
+        freshly written full prompt pages are interned by ownership
+        transfer (``promote_slot_pages``)."""
+        from repro.serve.kvpool import (
+            build_paged_extend_step,
+            request_ctx_key,
+            run_extend_group,
+        )
         if self._extend is None:
-            self._extend = jax.jit(build_extend_step(self.model,
-                                                     self.temperature))
+            self._extend = jax.jit(
+                build_paged_extend_step(self.model, self.temperature,
+                                        template=self.pool.template),
+                donate_argnums=(1, 2, 3),
+            )
+        slots = [s for s, _, _ in group]
         reqs = [r for _, r, _ in group]
         leases = [le for _, _, le in group]
-        toks, rows_cache, self._rng, _b_pad = run_extend_group(
+        for slot, req in zip(slots, reqs):
+            self.pool.map_suffix_pages(slot, len(req.prompt))
+        bt_rows = np.asarray(self.pool.block_table[slots], np.int32)
+        toks, resident_rows, self._rng, _b_pad = run_extend_group(
             self._extend, self.params, self._scratch, self.pool, reqs,
-            leases, chunk=self.prefill_chunk, max_len=self.max_len,
-            rng=self._rng, model=self.model, accounting=self.accounting,
+            leases, bt_rows, chunk=self.prefill_chunk,
+            max_len=self.max_len, rng=self._rng, model=self.model,
+            accounting=self.accounting,
         )
         self.prefill_invocations += 1
         self.prefill_batch_sizes.append(len(group))
-        self._install_pool_rows(group, rows_cache, toks[:len(group)])
+        for slot, req in zip(slots, reqs):
+            self.pool.promote_slot_pages(slot, req.prompt,
+                                         request_ctx_key(req))
+            self.pool.ensure_decode_page(slot, len(req.prompt))
+        self._merge_resident_rows(resident_rows, list(range(len(group))),
+                                  slots)
+        self._post_install(slots, reqs, toks[:len(group)])
 
     def _install_pool_rows(self, group, rows_cache, first_tokens):
         """Map each request's computed pages out of a dense rows cache
@@ -593,10 +619,20 @@ class ContinuousBatcher:
             # the pocket its admission reserved — cannot fail mid-decode)
             for s in busy:
                 self.pool.ensure_decode_page(s, int(self.pos[s]))
-            toks, self.pool.arena, self.resident = self._step(
-                self.params, self.pool.arena, self.resident,
-                jnp.asarray(self.pool.block_table), batch, sub,
-            )
+            # width-trim the block table to the pow2 page bucket covering
+            # the deepest busy slot: the paged kernel's page walk then
+            # scales with occupancy, not max_len (compiled variants stay
+            # O(log n_logical))
+            n_act = max(int(self.pos[s]) // self.pool.page_size + 1
+                        for s in busy)
+            width = min(1 << (n_act - 1).bit_length(), self.pool.n_logical)
+            toks, self.pool.arena, self.pool.kv_scales, self.resident = \
+                self._step(
+                    self.params, self.pool.arena, self.pool.kv_scales,
+                    self.resident,
+                    jnp.asarray(self.pool.block_table[:, :width]),
+                    batch, sub,
+                )
         else:
             toks, _logits, self.cache = self._step(self.params, self.cache,
                                                    batch, sub)

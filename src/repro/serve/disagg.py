@@ -45,6 +45,7 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
+import numpy as np
 
 from repro.serve.batcher import ContinuousBatcher, Request
 from repro.serve.serve_step import (
@@ -60,9 +61,12 @@ class PrefillWorker:
 
     When the model's cache plane is pageable the worker also keeps a
     slot-less :class:`~repro.serve.kvpool.KVPool` as a prefix CACHE: a
-    prompt whose leading chunks match an interned prefix gathers those
-    pages into the scratch row and runs only its suffix through one
-    ``prefill_extend`` invocation — the shared chunks' prefill compute is
+    prompt whose leading chunks match an interned prefix runs only its
+    suffix through one NATIVE paged ``prefill_extend`` invocation — the
+    lease's pages plus freshly allocated temp pages form the row's block
+    table, the suffix K/V lands directly in the arena (no dense prefix
+    gather), and full pages intern afterwards by ownership transfer
+    (``intern_arena_pages``).  The shared chunks' prefill compute is
     skipped entirely (``prefix_hit_tokens`` on the prefill cell's
     accounting), independent of what the decode side has cached.
     """
@@ -111,24 +115,67 @@ class PrefillWorker:
             self._scratch_caches[batch] = self.model.init_cache(batch, self.max_len)
         return self._scratch_caches[batch]
 
+    def _cold_group(self, group, out):
+        """ONE cold prefill invocation over same-bucket requests, interned
+        into the prefix cache and emitted through :meth:`_payload`."""
+        from repro.serve.kvpool import request_ctx_key
+        toks, cache, self._rng, _b_pad = run_prefill_group(
+            self._step, self.cell.serve_params, self._scratch, group,
+            chunk=self.chunk, max_len=self.max_len, rng=self._rng,
+            model=self.model, accounting=self.cell.accounting,
+        )
+        self.invocations += 1
+        for i, (req, tok) in enumerate(zip(group, toks)):
+            if self.pool is not None:
+                self.pool.intern_rows(req.prompt, request_ctx_key(req),
+                                      cache, i,
+                                      tenant=getattr(req, "tenant", None))
+            out[req.rid] = (req, tok, self._payload(cache, i, req))
+
+    def _payload(self, cache, row: int, req: Request):
+        """The per-request handoff artifact: with a pool, a dict of FULL-
+        prompt canonical page stacks (floats — an int8 arena dequantizes
+        on read) plus the 1-row resident remainder, so ``pump`` can slice
+        from any replica's shared-prefix depth without a dense row; with
+        no pool, the legacy dense 1-row cache."""
+        from repro.models.cache_utils import (
+            extract_row_pages,
+            slice_cache_slots,
+            strip_kv_nodes,
+        )
+        if self.pool is None:
+            return slice_cache_slots(cache, self._axes, [row])
+        P = self.pool.page_size
+        n_total = -(-len(req.prompt) // P)
+        res = strip_kv_nodes(cache)
+        if jax.tree.leaves(res):
+            res = slice_cache_slots(res, strip_kv_nodes(self._axes), [row])
+        return {
+            "stacks": extract_row_pages(cache, self.pool.axes, row, 0,
+                                        n_total, P),
+            "resident": res,
+        }
+
     def prefill_many(self, reqs: Sequence[Request]):
         """Prefill a batch of requests, ONE invocation per pad bucket.
 
         Batch dims are padded to the next power of two (dummy rows masked
         and discarded, their waste accounted) — see ``run_prefill_group``.
         Prefix-cache hits group by their SUFFIX bucket (mixed hit depths
-        share an invocation) and every computed full page is interned for
-        the next prompt.  Returns ``[(req, first_token, 1-row cache),
-        ...]`` in input order — the row always holds the FULL prompt KV
-        (gathered prefix + computed suffix).
-        """
+        share one NATIVE paged extend: prefix pages + temp pages form
+        each row's block table, suffix K/V lands in the arena directly)
+        and every computed full page is interned for the next prompt by
+        ownership transfer.  Returns ``[(req, first_token, payload),
+        ...]`` in input order — ``payload`` covers the FULL prompt KV
+        (see :meth:`_payload`)."""
         from repro.models.cache_utils import cache_batch_axes, slice_cache_slots
         from repro.serve.kvpool import (
+            PoolExhausted,
+            build_paged_extend_step,
             public_ctx_key,
             request_ctx_key,
             run_extend_group,
         )
-        from repro.serve.serve_step import build_extend_step
         from repro.serve.tenancy import DEFAULT_TENANT
         if self._axes is None:
             self._axes = cache_batch_axes(self.model, 1, self.max_len)
@@ -159,45 +206,74 @@ class PrefillWorker:
                                 ).append(req)
         out = {}
         for _, group in sorted(cold.items()):
-            toks, cache, self._rng, _b_pad = run_prefill_group(
-                self._step, self.cell.serve_params, self._scratch, group,
-                chunk=self.chunk, max_len=self.max_len, rng=self._rng,
-                model=self.model, accounting=self.cell.accounting,
-            )
-            self.invocations += 1
-            for i, (req, tok) in enumerate(zip(group, toks)):
-                if self.pool is not None:
-                    self.pool.intern_rows(req.prompt, request_ctx_key(req),
-                                          cache, i,
-                                          tenant=getattr(req, "tenant", None))
-                out[req.rid] = (req, tok,
-                                slice_cache_slots(cache, self._axes, [i]))
+            self._cold_group(group, out)
         for _, group in sorted(warm.items()):
             if self._extend is None:
-                self._extend = jax.jit(build_extend_step(self.model,
-                                                         self.temperature))
+                self._extend = jax.jit(
+                    build_paged_extend_step(self.model, self.temperature,
+                                            template=self.pool.template),
+                    donate_argnums=(1, 2, 3),
+                )
             greqs = [r for r, _ in group]
             leases = [le for _, le in group]
-            toks, cache, self._rng, _b_pad = run_extend_group(
+            P = self.pool.page_size
+            # temp pages back the suffix writes (lease depth through the
+            # prompt's last page); exhaustion demotes the whole group to
+            # the cold path — nothing is held on the failure
+            temps: List[List[int]] = []
+            try:
+                for req, lease in group:
+                    n_t = -(-len(req.prompt) // P) - lease.pages
+                    temps.append(self.pool.alloc_temp_pages(
+                        n_t, tenant=getattr(req, "tenant", None)))
+            except PoolExhausted:
+                for t, (req, _le) in zip(temps, group):
+                    self.pool.free_temp_pages(
+                        t, tenant=getattr(req, "tenant", None))
+                for _, lease in group:
+                    self.pool.release_lease(lease)
+                regroup: Dict[int, List[Request]] = {}
+                for req, _le in group:
+                    regroup.setdefault(
+                        bucket_len(len(req.prompt), self.chunk,
+                                   self.max_len), []).append(req)
+                for _, g in sorted(regroup.items()):
+                    self._cold_group(g, out)
+                continue
+            bt_rows = np.full((len(group), self.pool.n_logical),
+                              self.pool.sentinel, np.int32)
+            for i, (req, lease) in enumerate(group):
+                for lp, node in enumerate(lease.nodes):
+                    bt_rows[i, lp] = node.page
+                for j, pg in enumerate(temps[i]):
+                    bt_rows[i, lease.pages + j] = pg
+            toks, rows, self._rng, _b_pad = run_extend_group(
                 self._extend, self.cell.serve_params, self._scratch,
-                self.pool, greqs, leases, chunk=self.chunk,
+                self.pool, greqs, leases, bt_rows, chunk=self.chunk,
                 max_len=self.max_len, rng=self._rng, model=self.model,
                 accounting=self.cell.accounting,
             )
             self.invocations += 1
+            from repro.models.cache_utils import strip_kv_nodes
             for i, (req, tok) in enumerate(zip(greqs, toks)):
-                # intern the freshly computed suffix pages, THEN drop the
-                # lease (the pinned prefix keeps the walk safe).  A
-                # FOREIGN (public-grant) hit never interns: the tenant's
-                # private suffix must not shadow-copy into its namespace
-                # page-by-page off a namespace it only reads
-                if not leases[i].foreign:
-                    self.pool.intern_rows(req.prompt, request_ctx_key(req),
-                                          cache, i,
-                                          tenant=getattr(req, "tenant", None))
+                # snapshot the FULL prompt pages (prefix + fresh suffix)
+                # BEFORE interning may free/recycle the temp pages
+                page_ids = ([n.page for n in leases[i].nodes] + temps[i])
+                stacks = self.pool.read_pages(np.asarray(page_ids, np.int32))
+                res = rows
+                if jax.tree.leaves(res):
+                    res = slice_cache_slots(
+                        res, strip_kv_nodes(self._axes), [i])
+                payload = {"stacks": stacks, "resident": res}
+                # intern the freshly written suffix pages by ownership
+                # transfer, THEN drop the lease (the pinned prefix keeps
+                # the walk safe).  A FOREIGN (public-grant) hit never
+                # interns — intern_arena_pages frees every temp instead
+                self.pool.intern_arena_pages(
+                    req.prompt, request_ctx_key(req), leases[i], temps[i],
+                    tenant=getattr(req, "tenant", None))
                 self.pool.release_lease(leases[i])
-                out[req.rid] = (req, tok,
-                                slice_cache_slots(cache, self._axes, [i]))
+                out[req.rid] = (req, tok, payload)
         self.cell.heartbeat()
         return [out[r.rid] for r in reqs]
 
@@ -868,10 +944,7 @@ class DisaggServer:
             self.prefill_cell.accounting.record_counter(
                 "prefill_fallback_requests", len(taking))
         elif taking:
-            from repro.models.cache_utils import (
-                extract_row_pages,
-                strip_kv_nodes,
-            )
+            import jax.numpy as jnp
             # fresh adverts before routing: what each replica interned
             # since the last pump is exactly what warm routing needs
             self._refresh_index()
@@ -893,15 +966,20 @@ class DisaggServer:
                 else:
                     # paged handoff: ONLY the page suffix the decode pool
                     # does not already hold crosses the channel — the
-                    # shared prefix is re-mapped from its interned pages
-                    # (pinned by ``lease`` until install)
-                    P = rep.pool.page_size
-                    n_total = -(-len(req.prompt) // P)
+                    # worker's payload carries FULL-prompt page stacks, so
+                    # slicing from THIS replica's shared-prefix depth is a
+                    # row slice, not a dense-cache extraction (the prefix
+                    # is re-mapped from its interned pages, pinned by
+                    # ``lease`` until install)
+                    stacks = row_cache["stacks"]
+                    if lease.pages:
+                        rows = jnp.arange(lease.pages, stacks[0].k.shape[0])
+                        stacks = [type(s)(k=s.k[rows], v=s.v[rows],
+                                          slot_pos=s.slot_pos[rows])
+                                  for s in stacks]
                     payload = {
-                        "stacks": extract_row_pages(
-                            row_cache, rep.pool.axes, 0, lease.pages,
-                            n_total - lease.pages, P),
-                        "resident": strip_kv_nodes(row_cache),
+                        "stacks": stacks,
+                        "resident": row_cache["resident"],
                     }
                     rep.channel.send_kv(
                         payload, None,

@@ -53,10 +53,28 @@ pool.  Each tenant is a little subOS of the cache plane:
   namespace: its suffix pages stay private, so the grant is strictly
   read-only — sharing is something the spec grants, never ambient.
 
-The decode step needs only block-table indirection in front of the
-existing kernels: gather dense per-slot views from the arena, run the
-unchanged ``Model.decode``, scatter each slot's current (always-private)
-page back.  ``slot_pos`` position-masking already hides unmapped slots.
+The decode/extend hot path is NATIVELY paged — the block table reaches
+the kernels instead of being flattened away above them.  The calling
+convention (``build_paged_serve_step`` / ``build_paged_extend_step``):
+the step function takes ``(params, arena, scales, resident, block_table,
+batch, rng)``; ``cache_utils.paged_view`` wraps each positional arena
+node in a :class:`~repro.models.layers.PagedKVCache` carrying the whole
+``(num_pages, page_size, L, Hkv, Dh)`` arena plus the batch's
+``(B, n_logical)`` block table, and ``Model.decode`` /
+``Model.prefill_extend`` thread that view into every attention layer
+(the arena rides the layer-scan carry; each step rebinds the ``layer``
+index).  Attention writes the current token(s) straight into their
+physical pages — sentinel entries drop the write — and the paged Pallas
+kernels (``kernels/decode_attention``, ``kernels/flash_attention``) walk
+each row's pages directly in the arena via scalar-prefetched block-table
+index maps; on CPU an equivalent jnp page gather feeds the dense
+reference attention, bit-identical to the pre-paged path.  No contiguous
+per-slot KV copy is ever materialized in steady state:
+``gather_pages``/``scatter_current_pages`` survive only on the
+export/import/migration and cold-install paths.  With
+``kv_dtype="int8"`` the arena stores int8 pages with per-(page, layer)
+scales — quantize on page write, dequantize in-kernel — doubling pool
+capacity at documented (small, non-exact) accuracy cost.
 """
 from __future__ import annotations
 
@@ -71,16 +89,16 @@ import numpy as np
 
 from repro.models.cache_utils import (
     clean_arena_pages,
+    dequantize_page,
+    extract_paged,
     extract_row_pages,
-    gather_pages,
     install_cross_memory,
-    kv_cache_nodes,
     kv_node_axes,
     kv_position_bytes,
     page_arena,
+    paged_view,
+    quantize_page,
     read_arena_pages,
-    rebuild_kv_nodes,
-    scatter_current_pages,
     strip_kv_nodes,
     write_arena_pages,
 )
@@ -292,6 +310,31 @@ class PrefixLease:
         return len(self.nodes) * self.page_size
 
 
+def _write_pages_q(arena: list, scales: list, page_ids, stacks: list):
+    """``write_arena_pages`` for an int8 arena: quantize each float page
+    stack per (page, layer) and update the scale tables alongside."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    new_arena, new_scales = [], []
+    for a, (ks, vs), s in zip(arena, scales, stacks):
+        kq, ksc = quantize_page(s.k, keep_axes=(0, 2))
+        vq, vsc = quantize_page(s.v, keep_axes=(0, 2))
+        new_arena.append(KVSlice(
+            k=a.k.at[idx].set(kq), v=a.v.at[idx].set(vq),
+            slot_pos=a.slot_pos.at[idx].set(s.slot_pos)))
+        new_scales.append((ks.at[idx].set(ksc), vs.at[idx].set(vsc)))
+    return new_arena, new_scales
+
+
+def _clean_pages_q(arena: list, scales: list, page_ids):
+    """``clean_arena_pages`` for an int8 arena: also zero the recycled
+    pages' scales so the lazy in-place scale init sees them untouched."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    arena = clean_arena_pages(arena, idx)
+    scales = [(ks.at[idx].set(0.0), vs.at[idx].set(0.0))
+              for ks, vs in scales]
+    return arena, scales
+
+
 class KVPool:
     """Page-granular KV arena + block table + prefix tree for one cell.
 
@@ -311,7 +354,8 @@ class KVPool:
 
     def __init__(self, model, *, max_len: int, page_size: int = 16,
                  slots: int = 0, num_pages: Optional[int] = None,
-                 accounting=None, quotas: Any = None):
+                 accounting=None, quotas: Any = None,
+                 kv_dtype: Optional[str] = None):
         if not model.supports_paged_kv:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged KV cache")
@@ -332,6 +376,24 @@ class KVPool:
         self.axes = kv_node_axes(model, 1, max_len)
         self.position_bytes = kv_position_bytes(model, max_len)
         self.arena = page_arena(model, self.num_pages, page_size)
+        if kv_dtype is None:
+            self.kv_scales = None
+        elif kv_dtype == "int8":
+            # int8 page scaffolding: k/v store int8 with one f32 scale
+            # per (page, layer) per tensor — quantized on page write,
+            # dequantized in-kernel on the paged hot path (and on
+            # read_pages / export, so migration round-trips via floats)
+            self.arena = [KVSlice(k=jnp.zeros(a.k.shape, jnp.int8),
+                                  v=jnp.zeros(a.v.shape, jnp.int8),
+                                  slot_pos=a.slot_pos)
+                          for a in self.arena]
+            self.kv_scales = [
+                (jnp.zeros((self.num_pages, a.k.shape[2]), jnp.float32),
+                 jnp.zeros((self.num_pages, a.k.shape[2]), jnp.float32))
+                for a in self.arena]
+        else:
+            raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+        self.kv_dtype = kv_dtype
         self.sentinel = self.num_pages          # unmapped block-table entry
         self.block_table = np.full((max(slots, 1), self.n_logical),
                                    self.sentinel, np.int32)
@@ -370,8 +432,29 @@ class KVPool:
         # in-place buffer writes, not whole-arena functional copies — the
         # admission path must not pay O(arena) per request (compiled
         # variants are bounded by the <= n_logical distinct page counts)
-        self._clean_fn = jax.jit(clean_arena_pages, donate_argnums=(0,))
-        self._write_fn = jax.jit(write_arena_pages, donate_argnums=(0,))
+        if self.kv_scales is None:
+            self._clean_fn = jax.jit(clean_arena_pages, donate_argnums=(0,))
+            self._write_fn = jax.jit(write_arena_pages, donate_argnums=(0,))
+        else:
+            self._clean_fn = jax.jit(_clean_pages_q, donate_argnums=(0, 1))
+            self._write_fn = jax.jit(_write_pages_q, donate_argnums=(0, 1))
+
+    def _clean_pages(self, page_ids):
+        """In-place (donated) page clean; also resets int8 scales."""
+        if self.kv_scales is None:
+            self.arena = self._clean_fn(self.arena, page_ids)
+        else:
+            self.arena, self.kv_scales = self._clean_fn(
+                self.arena, self.kv_scales, page_ids)
+
+    def _write_pages(self, page_ids, stacks):
+        """In-place (donated) page write from FLOAT canonical stacks;
+        quantizes into an int8 arena (updating the scale tables)."""
+        if self.kv_scales is None:
+            self.arena = self._write_fn(self.arena, page_ids, stacks)
+        else:
+            self.arena, self.kv_scales = self._write_fn(
+                self.arena, self.kv_scales, page_ids, stacks)
 
     # -- capability ----------------------------------------------------
     @staticmethod
@@ -604,8 +687,7 @@ class KVPool:
         self._slot_tenant[slot] = tenant
         self._slot_foreign[slot] = lease.foreign
         if got:
-            self.arena = self._clean_fn(self.arena,
-                                        jnp.asarray(got, jnp.int32))
+            self._clean_pages(jnp.asarray(got, jnp.int32))
         self._pocket[slot] = got
         for lp, node in enumerate(lease.nodes):
             self.block_table[slot, lp] = node.page
@@ -654,6 +736,60 @@ class KVPool:
         lp = pos // self.page_size
         if self.block_table[slot, lp] == self.sentinel:
             self.map_private(slot, lp)
+
+    def map_suffix_pages(self, slot: int, prompt_len: int):
+        """Map pocket pages under every logical page a suffix extend
+        will write (lease depth through the prompt's last page).  The
+        native paged extend writes K/V straight into the slot's arena
+        pages, so they must be mapped BEFORE the kernel runs — a
+        sentinel block-table entry silently drops the write.  Pocket-
+        backed, so it cannot fail; decode growth past the prompt keeps
+        drawing pages per step via ``ensure_decode_page``."""
+        for lp in range(-(-prompt_len // self.page_size)):
+            if self.block_table[slot, lp] == self.sentinel:
+                self.map_private(slot, lp)
+
+    def promote_slot_pages(self, slot: int, prompt, ctx_key):
+        """Intern a warm-extended slot's full prompt pages by OWNERSHIP
+        TRANSFER — the paged extend already wrote the suffix KV in place,
+        so no page data moves: each full-page chunk either joins the
+        tree as-is (the slot's private page becomes the interned node,
+        refcount 1 held by this slot) or, when the chunk is already
+        interned, the slot remaps to the existing node and frees its
+        now-redundant private copy (bit-identical by the exactness
+        invariant).  The partial boundary page stays private (the
+        copy-on-write edge); a foreign-prefix slot never interns
+        (read-only public grant)."""
+        if self._slot_foreign[slot]:
+            return
+        P = self.page_size
+        L = len(prompt)
+        tenant = self._slot_tenant[slot]
+        owner = (PUBLIC if (ctx_key is not None and ctx_key
+                            and ctx_key[0] == "public")
+                 else (tenant if tenant is not None else DEFAULT_TENANT))
+        parent = (self._shared[slot][-1] if self._shared[slot]
+                  else self.tree.root(ctx_key))
+        for lp in range(len(self._shared[slot]), L // P):
+            page = int(self.block_table[slot, lp])
+            key = tuple(int(t) for t in prompt[lp * P:(lp + 1) * P])
+            node = parent.children.get(key)
+            if node is not None:
+                # chunk already interned: share it, free our copy
+                self.block_table[slot, lp] = node.page
+                self._private[slot].remove(page)
+                self.free.append(page)
+                self._uncharge(tenant, 1)
+            elif self._transfer_charge(tenant, owner):
+                node = self.tree.insert(parent, key, page, owner)
+                self._private[slot].remove(page)
+            else:
+                break                   # owner pocket full: stay private
+            node.refs += 1
+            node.last_used = self.tree._tick()
+            self._shared[slot].append(node)
+            parent = node
+        self._gauge()
 
     def install_stacks(self, slot: int, prompt, ctx_key,
                        stacks: List[KVSlice], start_page: int):
@@ -714,8 +850,7 @@ class KVPool:
             rows = jnp.asarray(new_rows, jnp.int32)
             sub = [KVSlice(k=s.k[rows], v=s.v[rows],
                            slot_pos=s.slot_pos[rows]) for s in stacks]
-            self.arena = self._write_fn(self.arena,
-                                        jnp.asarray(new_ids, jnp.int32), sub)
+            self._write_pages(jnp.asarray(new_ids, jnp.int32), sub)
         self.ensure_decode_page(slot, L)
         self._gauge()
 
@@ -790,16 +925,101 @@ class KVPool:
             if new_ids:
                 stacks = extract_row_pages(rows_cache, self.axes, row,
                                            new_lps[0], len(new_lps), P)
-                self.arena = self._write_fn(
-                    self.arena, jnp.asarray(new_ids, jnp.int32), stacks)
+                self._write_pages(jnp.asarray(new_ids, jnp.int32), stacks)
         finally:
             self.tree.release(path)
             self._gauge()
 
+    def alloc_temp_pages(self, n: int,
+                         tenant: Optional[str] = None) -> List[int]:
+        """``n`` cleaned scratch pages for a slot-less paged extend (the
+        prefill worker's warm path writes suffix KV straight into them).
+        Charged to ``tenant``'s pocket; raises :class:`PoolExhausted`
+        (holding nothing) when the pocket/pool cannot cover them — the
+        caller falls back to the cold dense-prefill path."""
+        got: List[int] = []
+        for _ in range(n):
+            page = self._alloc_raw(tenant)
+            if page is None:
+                self._uncharge(tenant, len(got))
+                self.free.extend(got)
+                raise PoolExhausted(
+                    f"need {n} temp pages, got {len(got)} "
+                    f"(free={len(self.free)}, "
+                    f"evictable={self.evictable_pages()})")
+            got.append(page)
+        if got:
+            self._clean_pages(jnp.asarray(got, jnp.int32))
+        return got
+
+    def free_temp_pages(self, pages: List[int],
+                        tenant: Optional[str] = None):
+        """Return temp pages that did not transfer into the tree."""
+        self._uncharge(tenant, len(pages))
+        self.free.extend(pages)
+
+    def intern_arena_pages(self, prompt, ctx_key, lease: PrefixLease,
+                           temp_pages: List[int],
+                           tenant: Optional[str] = None):
+        """Ownership-transfer intern for the slot-less warm path:
+        ``temp_pages[i]`` holds logical page ``lease.pages + i`` of
+        ``prompt``, already written IN PLACE by the paged extend — the
+        native-paged twin of ``intern_rows`` with zero data movement.
+        Full pages enter the tree as refs-0 reclaimable cache (or are
+        freed when the chunk is already interned); the partial tail
+        page is always freed.  A foreign lease never interns (read-only
+        public grant): every temp page is freed.  The walked chain is
+        pinned so an eviction inside ``_transfer_charge`` can't reap a
+        just-inserted leaf mid-walk."""
+        P = self.page_size
+        L = len(prompt)
+        owner = (PUBLIC if (ctx_key is not None and ctx_key
+                            and ctx_key[0] == "public")
+                 else (tenant if tenant is not None else DEFAULT_TENANT))
+        can_intern = not lease.foreign
+        parent = (lease.nodes[-1] if lease.nodes
+                  else self.tree.root(ctx_key))
+        path: List[_Node] = []
+        leftover: List[int] = []
+        try:
+            for i, page in enumerate(temp_pages):
+                lp = lease.pages + i
+                node = None
+                if can_intern and (lp + 1) * P <= L:
+                    key = tuple(int(t) for t in prompt[lp * P:(lp + 1) * P])
+                    node = parent.children.get(key)
+                    if node is None:
+                        if self._transfer_charge(tenant, owner):
+                            node = self.tree.insert(parent, key, page, owner)
+                            page = None     # consumed: the tree owns it
+                        else:
+                            can_intern = False
+                if page is not None:
+                    leftover.append(page)
+                if node is not None:
+                    self.tree.acquire([node])
+                    path.append(node)
+                    parent = node
+        finally:
+            self.tree.release(path)
+            if leftover:
+                self._uncharge(tenant, len(leftover))
+                self.free.extend(leftover)
+            self._gauge()
+
     def read_pages(self, page_ids) -> list:
         """Canonical page stacks for ``page_ids`` (test / audit surface:
-        the copy-on-write suite snapshots interned pages through this)."""
-        return read_arena_pages(self.arena, page_ids)
+        the copy-on-write suite snapshots interned pages through this).
+        An int8 arena dequantizes to f32 — export/migration round-trips
+        through floats, so int8 pools make no bit-exactness claims."""
+        stacks = read_arena_pages(self.arena, page_ids)
+        if self.kv_scales is None:
+            return stacks
+        idx = jnp.asarray(page_ids, jnp.int32)
+        return [KVSlice(k=dequantize_page(s.k, ks[idx], keep_axes=(0, 2)),
+                        v=dequantize_page(s.v, vs[idx], keep_axes=(0, 2)),
+                        slot_pos=s.slot_pos)
+                for s, (ks, vs) in zip(stacks, self.kv_scales)]
 
     # -- replica-to-replica migration (the cluster cache plane) --------
     def export_subtree(self, ctx_key=None,
@@ -875,8 +1095,7 @@ class KVPool:
                 rows = jnp.asarray(new_rows, jnp.int32)
                 sub = [KVSlice(k=s.k[rows], v=s.v[rows],
                                slot_pos=s.slot_pos[rows]) for s in stacks]
-                self.arena = self._write_fn(
-                    self.arena, jnp.asarray(new_ids, jnp.int32), sub)
+                self._write_pages(jnp.asarray(new_ids, jnp.int32), sub)
         finally:
             self.tree.release(pinned)
             self._gauge()
@@ -886,48 +1105,72 @@ class KVPool:
 # --------------------------------------------------------------------------
 # jitted programs over the paged cache
 # --------------------------------------------------------------------------
-def build_paged_serve_step(model, temperature, *, axes, template,
-                           page_size: int):
-    """paged_step(params, arena, resident, block_table, batch, rng) ->
-    (next_tokens, arena, resident).
+def build_paged_serve_step(model, temperature, *, template):
+    """paged_step(params, arena, scales, resident, block_table, batch,
+    rng) -> (next_tokens, arena, scales, resident).
 
-    Block-table indirection in front of the EXISTING decode kernels:
-    gather dense per-slot KV views from the arena, run the unchanged
-    ``Model.decode`` (``slot_pos`` masking hides unmapped pages), then
-    scatter each slot's current — by invariant private — page back.
-    ``resident`` carries the non-positional cache remainder (encdec
-    cross memory) dense per slot."""
-    def paged_step(params, arena, resident, block_table, batch, rng):
-        nodes = gather_pages(arena, axes, block_table, page_size)
-        cache = rebuild_kv_nodes(template, resident, nodes)
+    NATIVE paged decode: ``paged_view`` hands ``Model.decode`` the arena
+    itself behind each row's block table — attention writes the new
+    token's K/V straight into its physical page (sentinel entries drop
+    the write) and the paged decode kernel walks the row's pages in
+    place.  No gather, no scatter, no dense per-slot KV is ever
+    materialized.  ``resident`` carries the non-positional cache
+    remainder (encdec cross memory) dense per slot; ``scales`` is the
+    per-(page, layer) int8 scale list (None for float arenas).  Callers
+    jit with the arena/scales/resident donated and may width-trim the
+    block table to the live page bucket — paged cost then scales with
+    occupancy, not ``max_len``."""
+    def paged_step(params, arena, scales, resident, block_table, batch, rng):
+        cache = paged_view(template, resident, arena, block_table, scales)
         logits, new_cache = model.decode(params, cache, batch)
-        arena = scatter_current_pages(
-            arena, kv_cache_nodes(new_cache), axes, block_table,
-            batch["pos"], page_size,
-        )
+        arena, scales, resident = extract_paged(new_cache)
         toks = sample_tokens(logits, rng, temperature)
-        return toks, arena, strip_kv_nodes(new_cache)
+        return toks, arena, scales, resident
     return paged_step
 
 
+def build_paged_extend_step(model, temperature, *, template):
+    """paged_extend(params, arena, scales, resident, block_table, batch,
+    rng) -> (first_tokens, arena, scales, resident).
+
+    The suffix-extend twin of ``build_paged_serve_step``:
+    ``Model.prefill_extend`` runs over the paged view, writing each
+    row's suffix K/V directly into its mapped arena pages — no dense
+    prefix gather in front, no page scatter behind.  Each row's block
+    table must already map every page its suffix touches
+    (``KVPool.map_suffix_pages`` / ``alloc_temp_pages``); unmapped rows
+    and pages drop their writes and read fully masked."""
+    def paged_extend(params, arena, scales, resident, block_table, batch,
+                     rng):
+        cache = paged_view(template, resident, arena, block_table, scales)
+        logits, new_cache = model.prefill_extend(params, batch, cache)
+        arena, scales, resident = extract_paged(new_cache)
+        toks = sample_tokens(logits, rng, temperature)
+        return toks, arena, scales, resident
+    return paged_extend
+
+
 def run_extend_group(extend_fn, params, scratch, pool: KVPool, reqs,
-                     leases: List[PrefixLease], *, chunk: int, max_len: int,
-                     rng, model, accounting=None):
-    """ONE suffix-extend invocation over a group of prefix-hit requests.
+                     leases: List[PrefixLease], bt_rows, *, chunk: int,
+                     max_len: int, rng, model, accounting=None):
+    """ONE native-paged suffix-extend invocation over prefix-hit rows.
 
     Mirrors ``run_prefill_group``: the batch dim pads to the next power
     of two with dummy rows and all suffixes share one pad bucket, but
     each row carries its own prefix offset (``pos``), so requests with
-    DIFFERENT hit depths batch together.  The resident-prefix context is
-    materialized with ONE block-table gather over the whole group (rows'
-    leases become block-table rows; everything beyond a prefix reads
-    empty/position-masked by the fill semantics), plus zeroed resident
-    leaves (+ per-request cross memory re-encoded for encdec) — no
-    per-row copies, no stale scratch state by construction.  ``scratch``
-    is a ``batch -> cache`` factory (callers memoize theirs; only its
-    structure and resident leaves are used).  Returns
-    (first_tokens, b_pad-row rows cache, advanced rng, b_pad).
-    """
+    DIFFERENT hit depths batch together.  ``bt_rows`` (B, n_logical)
+    gives each row's block table — slot rows in the batcher, lease +
+    temp-page rows in the prefill worker — with every page the suffix
+    writes already mapped; pad rows are all-sentinel (writes drop,
+    reads mask, outputs are discarded).  The table is width-trimmed to
+    the pow2 page bucket covering the longest prompt, so extend cost
+    scales with occupancy, not ``max_len``.  The suffix K/V lands
+    directly in the arena pages (``extend_fn`` is a — typically
+    jitted — ``build_paged_extend_step`` step; the pool's arena/scales
+    are updated in place here).  ``scratch`` is a ``batch -> cache``
+    factory (callers memoize theirs; only its resident structure is
+    used).  Returns (first_tokens, b_pad-row resident tree, advanced
+    rng, b_pad)."""
     B = len(reqs)
     b_pad = 1 << (B - 1).bit_length()
     P = pool.page_size
@@ -940,24 +1183,26 @@ def run_extend_group(extend_fn, params, scratch, pool: KVPool, reqs,
     for i, s in enumerate(suffixes):
         tokens[i, :len(s)] = s
         lengths[i] = len(s)
-    bt = np.full((b_pad, pool.n_logical), pool.sentinel, np.int32)
-    for i, lease in enumerate(leases):
-        for lp, node in enumerate(lease.nodes):
-            bt[i, lp] = node.page
-    nodes = gather_pages(pool.arena, pool.axes, jnp.asarray(bt), P)
+    width = max(-(-len(r.prompt) // P) for r in reqs)
+    width = min(1 << (width - 1).bit_length(), pool.n_logical)
+    bt = np.full((b_pad, width), pool.sentinel, np.int32)
+    bt[:B] = np.asarray(bt_rows, np.int32)[:, :width]
     resident = jax.tree.map(jnp.zeros_like, strip_kv_nodes(scratch(b_pad)))
-    cache = rebuild_kv_nodes(pool.template, resident, nodes)
     srcs = [getattr(r, "src", None) for r in reqs] + [None] * (b_pad - B)
     mem = model.encode_cross_rows(params, srcs, max_len)
     if mem is not None:
-        cache = install_cross_memory(cache, mem, list(range(b_pad)))
+        resident = install_cross_memory(resident, mem, list(range(b_pad)))
     batch = {
         "tokens": jnp.asarray(tokens),
         "pos": jnp.asarray(prefix, jnp.int32),
         "length": jnp.asarray(lengths),
     }
     rng, sub = jax.random.split(rng)
-    toks, _logits, rows = extend_fn(params, cache, batch, sub)
+    toks, arena, scales, rows = extend_fn(
+        params, pool.arena, pool.kv_scales, resident, jnp.asarray(bt),
+        batch, sub)
+    pool.arena = arena
+    pool.kv_scales = scales
     if accounting is not None and b_pad != B:
         accounting.record_counter("prefill_dummy_rows", b_pad - B)
     return [int(t) for t in np.asarray(toks)], rows, rng, b_pad
