@@ -19,14 +19,17 @@ BENCH_FAMILY_ARCHS := qwen3-4b mixtral-8x7b mamba2-2.7b zamba2-2.7b seamless-m4t
 # hybrid, encdec) + the paged-vs-dense decode step-time gate (native
 # paged step must be <= 1.0x the dense-cache step; skipped for
 # non-pageable families) + the daemon-driven elastic scheduling trace
-# (short) + the prefix-cache cold/warm gate (warm TTFT < 0.6x cold,
-# bytes saved)
+# (short) + the prefix-cache cold/warm gate — paged (warm TTFT < 0.6x
+# cold, kv bytes saved) AND snapshot ssm/hybrid (warm TTFT < 0.7x cold,
+# snapshot bytes saved, warm channel bytes < cold)
 bench-smoke:
 	for arch in $(BENCH_FAMILY_ARCHS); do \
 		PYTHONPATH=$(PYTHONPATH) python benchmarks/disagg_serving.py --smoke --arch $$arch || exit 1; \
 	done
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.elastic_sched --smoke
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/prefix_cache.py --smoke
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/prefix_cache.py --smoke --arch mamba2-2.7b
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/prefix_cache.py --smoke --arch zamba2-2.7b
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/multitenant.py --smoke
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/cluster_cache.py --smoke
 

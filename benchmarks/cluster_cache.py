@@ -103,7 +103,7 @@ def _server(cfg, n_replicas, *, batch_slots, max_len, chunk, page_size,
                        batch_slots=batch_slots, max_len=max_len,
                        chunk=chunk, page_size=page_size, migrate=migrate)
     assert srv.worker is not None and srv.worker.pool is not None, \
-        "cluster-cache benchmark needs the paged cache plane"
+        "cluster-cache benchmark needs a shareable cache plane (paged or snapshot)"
     return sup, srv
 
 

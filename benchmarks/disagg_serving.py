@@ -150,7 +150,7 @@ def run(rows: List[dict], smoke: bool = True, arch: str = "qwen3-4b"):
     # measured (at toy depths per-op dispatch noise drowns it out)
     from repro.serve.kvpool import KVPool
     gate_len = max(max_len, 512)
-    if KVPool.supported(solo.model, gate_len, 16):
+    if KVPool.capability(solo.model, gate_len, 16) == "paged":
         def _decode_step_time(kv_pool):
             gate_reqs = _make_requests(cfg.vocab, [17] * slots, 24, seed=1)
             b = ContinuousBatcher(solo.model, solo.serve_params,

@@ -125,7 +125,7 @@ def run(arch: str = "qwen3-4b", *, max_len: int = 128, chunk: int = 16,
                                            page_quota=0.5),
                                 TenantSpec(ADV, weight=1.0)])
     assert srv.worker is not None and srv.worker.pool is not None, \
-        "multitenant benchmark needs the paged cache plane"
+        "multitenant benchmark needs a shareable cache plane (paged or snapshot)"
 
     rng = np.random.RandomState(0)
     sysp = rng.randint(1, cfg.vocab, size=system_len).astype(np.int32)

@@ -452,9 +452,10 @@ def paged_decode_bytes_per_device(arch: ArchConfig, shape: ShapeConfig, model,
     """
     cfg = arch
     w = cfg.sliding_window
+    from repro.serve.kvpool import KVPool
     if (shape.kind != "decode" or not cfg.num_kv_heads
-            or not getattr(model, "supports_paged_kv", False)
-            or (w is not None and w < shape.seq_len)):
+            or KVPool.capability(model, page_size * -(-shape.seq_len // page_size),
+                                 page_size) != "paged"):
         return None
     n_dev = ctx.mesh.devices.size
     dp = max(ctx.dp_size(), 1)

@@ -139,6 +139,34 @@ def kv_position_bytes(model, max_len: int) -> int:
     return total
 
 
+def recurrent_state_bytes(model, max_len: int) -> int:
+    """Bytes of one slot's NON-positional cache state (everything that is
+    not a KVSlice: mamba conv + ssm tensors, hybrid group states) — the
+    size of one recurrent-state snapshot, and the unit behind the
+    ``snapshot_bytes_saved`` accounting."""
+    total = 0
+    for spec in jax.tree.leaves(strip_kv_nodes(model.cache_specs(1, max_len))):
+        n = 1
+        for d in spec.shape:
+            n *= d
+        total += n * jnp.dtype(spec.dtype or model.cfg.dtype).itemsize
+    return total
+
+
+def clear_kv_row(cache: Any, axes: list, row: int) -> Any:
+    """Invalidate every KV position of one slot row (``slot_pos`` -> -1)
+    so a snapshot restore into a recycled slot can never leave stale
+    attendable positions behind the restored prefix."""
+    nodes = kv_cache_nodes(cache)
+    resident = strip_kv_nodes(cache)
+    out_nodes = []
+    for node, a in zip(nodes, axes):
+        sp = _to_canonical(node.slot_pos, a)
+        sp = sp.at[row].set(-1)
+        out_nodes.append(node._replace(slot_pos=_from_canonical(sp, a)))
+    return rebuild_kv_nodes(cache, resident, out_nodes)
+
+
 def _to_canonical(leaf: jnp.ndarray, axis: int) -> jnp.ndarray:
     return jnp.moveaxis(leaf, (axis, axis + 1), (0, 1))
 

@@ -111,7 +111,8 @@ def ssd_tiling_chunk(S: int, chunk: int) -> int:
 
 def ssd_chunked(x, dt, A_log, B_in, C_in, *, chunk: int,
                 initial_state: Optional[jnp.ndarray] = None,
-                mask: Optional[jnp.ndarray] = None):
+                mask: Optional[jnp.ndarray] = None,
+                checkpoints: bool = False):
     """SSD in chunked matmul form.
 
     x: (B, S, H, P)    dt: (B, S, H) (post-softplus, >0)
@@ -122,7 +123,11 @@ def ssd_chunked(x, dt, A_log, B_in, C_in, *, chunk: int,
     through pad positions untouched and ``final_state`` equals the state
     at each row's last REAL token.  Outputs at masked positions are
     garbage and must not be read.
-    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32).
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32); with
+    ``checkpoints`` also the state at EVERY interior chunk boundary —
+    ``ck[:, c]`` is the state after chunk ``c`` (positions ``< (c+1) *
+    chunk``), shape (B, nc, H, P, N) fp32 — the inter-chunk recurrence
+    already computes these, so emitting them is free of extra matmuls.
     """
     if mask is not None:
         dt = jnp.where(mask[..., None], dt, jnp.zeros_like(dt))
@@ -188,6 +193,11 @@ def ssd_chunked(x, dt, A_log, B_in, C_in, *, chunk: int,
     )
 
     y = (y_diag + y_off).reshape(Bb, S, H, P_)
+    if checkpoints:
+        # state AFTER chunk c = h_all[c] + a_all[c] * init — the same
+        # associative-scan outputs the recurrence is built from
+        ck = (h_all + a_all * init[None]).transpose(1, 0, 2, 3, 4, 5)
+        return y, final, ck.reshape(Bb, nc, H, P_, N)
     return y, final
 
 
@@ -209,7 +219,7 @@ def ssd_decode_step(state, x, dt, A_log, B_in, C_in):
 # --------------------------------------------------------------------------
 # full block
 # --------------------------------------------------------------------------
-def _causal_conv(seq, w, conv_state=None, length=None):
+def _causal_conv(seq, w, conv_state=None, length=None, boundary_every=None):
     """Depthwise causal conv.  seq: (B,S,C); w: (K,C).  Returns (y, new_state).
 
     ``length`` (B,) optional: snapshot the returned conv state at each
@@ -217,6 +227,12 @@ def _causal_conv(seq, w, conv_state=None, length=None):
     ``new_state[b]`` holds the K-1 inputs preceding position ``length[b]``
     (zero left-padding included for rows shorter than K-1), exactly what a
     decode step at position ``length[b]`` must see.
+
+    ``boundary_every`` (static int R) optional: additionally return the
+    conv windows at every interior boundary — ``bstates[:, c]`` holds the
+    K-1 inputs preceding position ``(c+1)*R``, shape (B, S//R, K-1, C) —
+    what a suffix continuation restored from a chunk-boundary snapshot
+    must see.  Boundary positions are static, so these are plain slices.
     """
     K = w.shape[0]
     if conv_state is None:
@@ -234,21 +250,39 @@ def _causal_conv(seq, w, conv_state=None, length=None):
         # K-1 inputs BEFORE position length[b] is full[b, length[b] : length[b]+K-1]
         idx = length[:, None].astype(jnp.int32) + jnp.arange(K - 1)[None, :]
         new_state = jnp.take_along_axis(full, idx[:, :, None], axis=1)
-    return y, new_state
+    if boundary_every is None:
+        return y, new_state
+    R = boundary_every
+    bstates = jnp.stack(
+        [full[:, bp : bp + K - 1] for bp in range(R, seq.shape[1] + 1, R)],
+        axis=1)                                           # (B, S//R, K-1, C)
+    return y, new_state, bstates
 
 
 def mamba_block(p, x, cfg: ArchConfig, *, mode: str,
                 state: Optional[MambaState] = None,
-                mask: Optional[jnp.ndarray] = None
+                mask: Optional[jnp.ndarray] = None,
+                ckpt_every: Optional[int] = None
                 ) -> Tuple[jnp.ndarray, Optional[MambaState]]:
     """x: (B, S, D).  Returns (y (B,S,D), new state or None).
 
-    ``mask`` (B, S) bool (prefill only): marks the REAL tokens of each
+    ``mask`` (B, S) bool (prefill/extend): marks the REAL tokens of each
     bucket-padded row.  Masked (pad) positions make no state update
     (``dt`` zeroed inside :func:`ssd_chunked`) and the conv state is
     snapshotted at each row's last real token, so the returned
     :class:`MambaState` is bit-identical to having prefilled each row at
     its exact length — the contract chunked prefill needs.
+
+    ``mode="extend"`` continues from ``state`` (the deepest restored
+    snapshot): conv state seeds the left pad, ssm state seeds the
+    recurrence, and the returned state is snapshotted at each row's last
+    real SUFFIX token.
+
+    ``ckpt_every`` (prefill only): also emit a :class:`MambaState` of
+    per-boundary checkpoints with a chunk axis after batch — ``conv``
+    (B, nb, K-1, C), ``ssm`` (B, nb, H, P, N) with ``nb = S //
+    ckpt_every`` — the sharable cache payload for this family.  The
+    return value becomes ``(final_state, checkpoints)``.
     """
     s = cfg.ssm
     d_inner, H, G, N, K = mamba_dims(cfg)
@@ -264,11 +298,17 @@ def mamba_block(p, x, cfg: ArchConfig, *, mode: str,
 
     xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
     conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
-    conv_in = state.conv if (state is not None and mode == "decode") else None
+    conv_in = (state.conv if (state is not None
+                              and mode in ("decode", "extend")) else None)
     length = None
-    if mask is not None and mode == "prefill":
+    if mask is not None and mode in ("prefill", "extend"):
         length = jnp.sum(mask.astype(jnp.int32), axis=1)
-    xbc_conv, new_conv = _causal_conv(xbc, conv_w, conv_in, length=length)
+    conv_ck = None
+    if ckpt_every is not None and mode == "prefill":
+        xbc_conv, new_conv, conv_ck = _causal_conv(
+            xbc, conv_w, conv_in, length=length, boundary_every=ckpt_every)
+    else:
+        xbc_conv, new_conv = _causal_conv(xbc, conv_w, conv_in, length=length)
     xbc_conv = jax.nn.silu(xbc_conv)
     xs_c = xbc_conv[..., :d_inner]
     Bm_c = xbc_conv[..., d_inner : d_inner + G * N].reshape(Bb, S, G, N)
@@ -281,13 +321,26 @@ def mamba_block(p, x, cfg: ArchConfig, *, mode: str,
         new_state = MambaState(conv=new_conv, ssm=new_ssm)
     else:
         init = state.ssm if state is not None else None
-        y, final = ssd_chunked(
-            xh, dt, p["A_log"], Bm_c, Cm_c, chunk=s.chunk, initial_state=init,
-            mask=mask,
-        )
+        if conv_ck is not None:
+            # checkpoint chunks must land on SSD chunk boundaries, so the
+            # scan runs at the (smaller) checkpoint granularity — exact at
+            # any chunk size, only the matmul tiling changes
+            y, final, ssm_ck = ssd_chunked(
+                xh, dt, p["A_log"], Bm_c, Cm_c, chunk=ckpt_every,
+                initial_state=init, mask=mask, checkpoints=True,
+            )
+            return_ck = MambaState(conv=conv_ck, ssm=ssm_ck)
+        else:
+            y, final = ssd_chunked(
+                xh, dt, p["A_log"], Bm_c, Cm_c, chunk=s.chunk,
+                initial_state=init, mask=mask,
+            )
         new_state = (
-            MambaState(conv=new_conv, ssm=final) if mode == "prefill" else None
+            MambaState(conv=new_conv, ssm=final)
+            if mode in ("prefill", "extend") else None
         )
+        if conv_ck is not None:
+            new_state = (new_state, return_ck)
 
     y = y + xh.astype(F32) * p["D_skip"][None, None, :, None].astype(F32)
     y = y.reshape(Bb, S, d_inner).astype(x.dtype)

@@ -353,13 +353,18 @@ class Model:
         return f
 
     def _backbone(self, params, x, *, mode: str, cache=None, pos=None, x0=None,
-                  mask=None):
+                  mask=None, ckpt_every=None):
         """Shared decoder trunk for non-encdec families.
 
         ``mask`` (B, S) bool marks the real tokens of bucket-padded
         prefill rows.  Recurrent families (ssm / hybrid) thread it into
         the SSD scan so pad positions make no state update; KV families
         ignore it (causality + ``mask_pad_slots`` already confine pads).
+
+        ``ckpt_every`` (prefill, ssm/hybrid only): emit recurrent-state
+        checkpoints at every interior chunk boundary — the per-layer new
+        state becomes ``(state, checkpoints)`` and rides the scan ys; the
+        caller splits it back apart (``prefill_ranged``).
         """
         cfg, ctx = self.cfg, self.ctx
         remat = mode == "train"
@@ -393,7 +398,7 @@ class Model:
             new_cache["moe_layers"] = nc
             aux_total += aux
         elif fam == "ssm":
-            fn = lambda h, lp, csl: zmb.mamba_layer(lp, h, cfg, mode=mode, state=csl, mask=mask)
+            fn = lambda h, lp, csl: zmb.mamba_layer(lp, h, cfg, mode=mode, state=csl, mask=mask, ckpt_every=ckpt_every)
             x, nc, aux = _scan_stack(fn, x, params["mamba_layers"],
                                      None if cache is None else cache["mamba_layers"],
                                      remat=remat, policy=pol, constrain=constrain, gather=gather)
@@ -404,7 +409,7 @@ class Model:
 
             def group_fn(h, gp, gcsl):
                 m_cache = None if gcsl is None else gcsl.mamba
-                inner = lambda hh, lp, csl: zmb.mamba_layer(lp, hh, cfg, mode=mode, state=csl, mask=mask)
+                inner = lambda hh, lp, csl: zmb.mamba_layer(lp, hh, cfg, mode=mode, state=csl, mask=mask, ckpt_every=ckpt_every)
                 h, n_m, aux = _scan_stack(inner, h, gp, m_cache, remat=False, policy=pol)
                 h, n_s = zmb.shared_block(
                     shared, h, x0, cfg, self.ctx, mode=mode,
@@ -553,12 +558,31 @@ class Model:
         same prompt prefix (and, for encdec, the same source features)
         would compute, so they can be mapped read-only.  Recurrent state
         (ssm / hybrid) folds the whole history into one non-positional
-        state and cannot be page-shared — a known non-goal (those
-        families stay on the dense per-slot cache; see ROADMAP.md).
+        state and cannot be page-shared — those families share state
+        SNAPSHOTS at chunk boundaries instead
+        (:attr:`supports_snapshot_state`); the pool-level three-way
+        capability is ``repro.serve.kvpool.KVPool.capability``.
         encdec qualifies: its decoder self-KV pages, while the cross
         memory rides the dense *resident* remainder of the cache.
         """
         return self.cfg.family in ("dense", "vlm", "moe", "encdec")
+
+    @property
+    def supports_snapshot_state(self) -> bool:
+        """True when this family's serve cache is a recurrent state that
+        can be SNAPSHOTTED at token-chunk boundaries and restored to seed
+        a suffix-only prefill (``repro.serve.kvpool`` snapshot pools).
+
+        Requires the state after token ``i`` to depend only on tokens
+        ``<= i`` (plus, for hybrid, the shared-attention KV up to ``i``,
+        which is causal and travels with the snapshot as page stacks), so
+        an interned checkpoint written by one request is bit-identical to
+        what any request with the same prefix would compute —
+        :meth:`prefill_ranged` with ``checkpoint_every`` emits the
+        checkpoints, :meth:`restore_state_row` +
+        :meth:`prefill_extend` replay from the deepest one.
+        """
+        return self.cfg.family in ("ssm", "hybrid")
 
     def prefill_extend(self, params, batch, cache):
         """Suffix-only prefill behind a resident prefix (prefix sharing).
@@ -571,15 +595,21 @@ class Model:
         ``slot_pos``, and K/V for the suffix is written in place — the
         per-layer work is ``attention_block(mode="extend")``.  encdec
         reads its cross memory from the cache (installed by the caller),
-        exactly like decode.  Returns (logits at each row's LAST REAL
-        suffix token, updated cache).
+        exactly like decode.  Recurrent families (ssm/hybrid) continue
+        from the cache's restored snapshot state instead of resident
+        pages: the suffix validity mask keeps pad tokens out of the SSD
+        scan (a ``length`` 0 row is a pure no-op: identity state update,
+        and its attention writes land out of range when the caller sets
+        ``pos`` past the cache length).  Returns (logits at each row's
+        LAST REAL suffix token, updated cache).
         """
         cfg = self.cfg
-        if not self.supports_paged_kv:
+        if not (self.supports_paged_kv or self.supports_snapshot_state):
             raise NotImplementedError(
-                f"no paged suffix prefill for family {cfg.family!r}"
+                f"no suffix prefill for family {cfg.family!r}"
             )
         tokens, pos, length = batch["tokens"], batch["pos"], batch["length"]
+        mask = jnp.arange(tokens.shape[1])[None, :] < length[:, None]
         x = self._embed_tokens(params, tokens)
         if cfg.family == "encdec":
             x, new_cache, _ = self._decode_stack(
@@ -587,7 +617,8 @@ class Model:
             )
         else:
             x, new_cache, _ = self._backbone(
-                params, x, mode="extend", cache=cache, pos=pos, x0=x
+                params, x, mode="extend", cache=cache, pos=pos, x0=x,
+                mask=mask,
             )
         last = jnp.clip(length - 1, 0, x.shape[1] - 1)
         x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
@@ -605,14 +636,24 @@ class Model:
         token-at-a-time admit (the batcher consults this)."""
         return self.cfg.family in ("dense", "vlm", "moe")
 
-    def prefill_ranged(self, params, batch, cache):
+    def prefill_ranged(self, params, batch, cache, *, checkpoint_every=None):
         """Chunked prefill: whole padded prompts in a single invocation.
 
         ``batch`` = {tokens (B, S_pad) int32, length (B,) int32} where row b
         holds a real prompt in ``tokens[b, :length[b]]`` and padding after
         (``length`` 0 marks a dummy batch-padding row).  encdec batches add
         {src (B, S_src, d_model), src_len (B,)} — see
-        :meth:`ranged_batch_extras`.  Returns (logits (B, V) taken at each
+        :meth:`ranged_batch_extras`.
+
+        ``checkpoint_every`` (ssm/hybrid only; must divide S_pad): also
+        return the stacked per-boundary recurrent-state checkpoints the
+        snapshot cache plane interns — return becomes ``(logits, cache,
+        ckpts)`` with ``ckpts`` sliceable via :meth:`slice_checkpoint`.
+        Checkpoints at boundaries past a row's true length are garbage
+        (identity updates over pad conv windows) and must not be read —
+        consumers only intern full-chunk boundaries ``<= length - 1``.
+
+        Returns (logits (B, V) taken at each
         row's LAST REAL token, cache exact at each row's true length:
 
         * KV families: pad slots' ``slot_pos`` masked to -1 so decode
@@ -629,6 +670,14 @@ class Model:
                 f"no exact chunked prefill for family {cfg.family!r}"
             )
         tokens, length = batch["tokens"], batch["length"]
+        if checkpoint_every is not None:
+            if not self.supports_snapshot_state:
+                raise NotImplementedError(
+                    f"no state checkpoints for family {cfg.family!r}")
+            if tokens.shape[1] % checkpoint_every:
+                raise ValueError(
+                    f"S_pad={tokens.shape[1]} not a multiple of "
+                    f"checkpoint_every={checkpoint_every}")
         mask = jnp.arange(tokens.shape[1])[None, :] < length[:, None]
         if cfg.family == "encdec":
             src_len = batch.get("src_len")
@@ -644,15 +693,70 @@ class Model:
         else:
             x = self._embed_tokens(params, tokens)
             x, new_cache, _ = self._backbone(
-                params, x, mode="prefill", cache=cache, x0=x, mask=mask
+                params, x, mode="prefill", cache=cache, x0=x, mask=mask,
+                ckpt_every=checkpoint_every,
             )
+        ckpts = None
+        if checkpoint_every is not None:
+            new_cache, ckpts = self._split_checkpoints(new_cache)
         last = jnp.clip(length - 1, 0, x.shape[1] - 1)
         x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B,1,D)
         x_last = rms_norm(x_last, params["final_norm"], cfg.rms_eps)
         logits = self._logits(params, x_last)[:, 0]
         from repro.models.cache_utils import mask_pad_slots
         new_cache = mask_pad_slots(new_cache, length)
+        if checkpoint_every is not None:
+            return logits, new_cache, ckpts
         return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # recurrent-state snapshots (the ssm/hybrid cache-plane payload)
+    # ------------------------------------------------------------------
+    def _split_checkpoints(self, new_cache):
+        """Split the ``(state, checkpoints)`` tuples the checkpointing
+        backbone threads through the layer scan back into (cache, ckpts).
+        ``ckpts`` leaves carry the chunk axis right after batch: ssm
+        (L, B, nb, ...), hybrid (G, E, B, nb, ...)."""
+        if self.cfg.family == "ssm":
+            states, ck = new_cache["mamba_layers"]
+            return {**new_cache, "mamba_layers": states}, ck
+        g = new_cache["groups"]
+        states, ck = g.mamba
+        return {**new_cache, "groups": g._replace(mamba=states)}, ck
+
+    @property
+    def _state_batch_axis(self) -> int:
+        """Batch-axis index of the stacked recurrent-state leaves: ssm
+        stacks (L,) in front, hybrid (G, E)."""
+        return 1 if self.cfg.family == "ssm" else 2
+
+    def slice_checkpoint(self, ckpts, row: int, chunk_idx: int):
+        """One row's recurrent state at interior chunk boundary
+        ``chunk_idx`` (state AFTER chunk ``chunk_idx``), as a 1-row state
+        tree shaped exactly like the recurrent part of a dense cache row
+        — the snapshot payload :meth:`restore_state_row` writes back."""
+        ax = self._state_batch_axis
+        idx = (slice(None),) * ax + (slice(row, row + 1), chunk_idx)
+        return jax.tree.map(lambda a: a[idx], ckpts)
+
+    def restore_state_row(self, cache, state, row: int):
+        """Write a 1-row snapshot ``state`` (from :meth:`slice_checkpoint`
+        or a final prefill state row) over slot ``row``'s recurrent cache
+        leaves; KV leaves (hybrid shared attention) are untouched — the
+        caller restores those from the snapshot's page stacks."""
+        ax = self._state_batch_axis
+        idx = (slice(None),) * ax + (slice(row, row + 1),)
+
+        def put(c, s):
+            return c.at[idx].set(s.astype(c.dtype))
+
+        if self.cfg.family == "ssm":
+            return {**cache,
+                    "mamba_layers": jax.tree.map(put, cache["mamba_layers"],
+                                                 state)}
+        g = cache["groups"]
+        return {**cache, "groups": g._replace(
+            mamba=jax.tree.map(put, g.mamba, state))}
 
     # ------------------------------------------------------------------
     # chunked-prefill batch helpers (family-specific knowledge lives HERE

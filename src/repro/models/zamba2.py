@@ -64,8 +64,9 @@ def mamba_layer(
     lp, x, cfg: ArchConfig, *, mode: str,
     state: Optional[MambaState] = None,
     mask: Optional[jnp.ndarray] = None,
+    ckpt_every: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, Optional[MambaState], jnp.ndarray]:
     h = rms_norm(x, lp["norm"], cfg.rms_eps)
     y, new_state = mamba_block(lp["mamba"], h, cfg, mode=mode, state=state,
-                               mask=mask)
+                               mask=mask, ckpt_every=ckpt_every)
     return x + y, new_state, jnp.float32(0.0)

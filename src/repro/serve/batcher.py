@@ -29,8 +29,16 @@ per-slot cache.  Admission consults the tree first: a request whose
 prompt shares an interned prefix maps those pages read-only, skips their
 prefill chunks entirely (only the suffix runs, one ``prefill_extend``
 invocation per pad bucket), and admission BLOCKS (requests stay queued)
-when the pool is exhausted instead of over-committing memory.  Recurrent
-families (ssm/hybrid) and rolling-SWA layouts keep the dense cache.
+when the pool is exhausted instead of over-committing memory.
+
+RECURRENT FAMILIES (ssm/hybrid) get the SAME prefix-cache plane through
+snapshot payloads (``KVPool.capability`` == "snapshot"): decode stays on
+the dense per-slot cache (recurrent state is O(1) per slot), but cold
+prefills emit per-chunk boundary-state checkpoints that intern into the
+pool's radix tree, and a warm prompt restores the deepest checkpoint
+into its slot row and suffix-extends only the divergence tail
+(:meth:`ContinuousBatcher._restore_group`).  Only rolling-SWA layouts
+keep the plain dense cache with no prefix sharing.
 
 ADMISSION IS TENANT-AWARE (``repro.serve.tenancy``): requests carry a
 ``tenant`` tag, a persistent deficit-round-robin scheduler shares free
@@ -144,18 +152,23 @@ class ContinuousBatcher:
         quota_fn = (self.tenants.page_quotas
                     if any(t.page_quota is not None
                            for t in self.tenants.specs.values()) else None)
-        # paged KV plane: "auto" -> pool iff the family/cache layout
-        # supports it; None -> legacy dense per-slot cache; or inject a
-        # prebuilt KVPool
+        # cache payload plane: "auto" -> pool iff the family/cache layout
+        # supports one (``KVPool.capability``: "paged" arenas for KV
+        # families, "snapshot" state checkpoints for ssm/hybrid); None ->
+        # legacy dense per-slot cache; or inject a prebuilt KVPool
         if kv_pool == "auto":
             kv_pool = (KVPool(model, max_len=max_len, page_size=page_size,
                               slots=batch_slots, num_pages=pool_pages,
                               accounting=accounting, quotas=quota_fn,
                               kv_dtype=kv_dtype)
-                       if KVPool.supported(model, max_len, page_size)
-                       else None)
+                       if KVPool.capability(model, max_len, page_size)
+                       != "none" else None)
         self.pool: Optional[KVPool] = kv_pool
-        if self.pool is not None:
+        self._paged = (self.pool is not None
+                       and self.pool.payload_kind == "page")
+        self._snapshot = (self.pool is not None
+                          and self.pool.payload_kind == "snapshot")
+        if self._paged:
             self.cache = None
             self.resident = strip_kv_nodes(model.init_cache(batch_slots, max_len))
             # native paged decode: the arena + block table flow straight
@@ -168,6 +181,9 @@ class ContinuousBatcher:
                 donate_argnums=(1, 2, 3),
             )
         else:
+            # dense per-slot cache — also the decode plane for snapshot
+            # pools (recurrent state is O(1) per slot; the pool only
+            # holds the shareable checkpoint chains, not the hot state)
             self.cache = model.init_cache(batch_slots, max_len)
             self.resident = None
             self._step = jax.jit(build_serve_step(model, temperature),
@@ -180,8 +196,17 @@ class ContinuousBatcher:
             prefill_chunk is not None
             and supports_chunked_prefill(model, max_len)
         )
+        if self.chunked and self._snapshot:
+            # checkpoint boundaries live at page_size multiples, so every
+            # prefill bucket must be page-aligned: coarsen the bucket
+            # quantum to lcm(chunk, page_size) (the max_len cap stays
+            # aligned — snapshot pools require page-divisible max_len)
+            self.prefill_chunk = int(np.lcm(prefill_chunk, page_size))
         self._prefill = (
-            jax.jit(build_prefill_step(model, temperature)) if self.chunked else None
+            jax.jit(build_prefill_step(
+                model, temperature,
+                checkpoint_every=page_size if self._snapshot else None))
+            if self.chunked else None
         )
         self._extend = None                        # lazy; first prefix hit
         self._scratch_caches: Dict[int, Any] = {}  # B -> B-row prefill cache
@@ -249,12 +274,17 @@ class ContinuousBatcher:
             chunk=self.prefill_chunk, max_len=self.max_len, rng=self._rng,
             model=self.model, accounting=self.accounting,
         )
+        ckpts = None
+        if self._snapshot:
+            rows_cache, ckpts = rows_cache
         self.prefill_invocations += 1
         self.prefill_batch_sizes.append(B)
         slots = [s for s, _, _ in group]
-        if self.pool is not None:
+        if self._paged:
             self._install_pool_rows(group, rows_cache, toks[:B])
         else:
+            if ckpts is not None:
+                self._intern_snapshot_chains(group, rows_cache, ckpts)
             if b_pad != B:
                 rows_cache = slice_cache_slots(rows_cache, self._cache_axes,
                                                list(range(B)))
@@ -304,6 +334,81 @@ class ContinuousBatcher:
         self._merge_resident_rows(resident_rows, list(range(len(group))),
                                   slots)
         self._post_install(slots, reqs, toks[:len(group)])
+
+    def _intern_snapshot_chains(self, group, rows_cache, ckpts):
+        """Intern each cold request's per-chunk snapshot chain (snapshot
+        pools): chunk ``lp``'s payload is the boundary recurrent state
+        AFTER position ``(lp+1)*P`` (sliced from the prefill's stacked
+        checkpoints) plus, for hybrid, the chunk's shared-attention KV
+        page.  Checkpoints at boundaries past a row's true length are
+        never read — only ``len(prompt) // P`` chunks intern."""
+        from repro.serve.kvpool import (
+            build_snapshot_payloads,
+            request_ctx_key,
+        )
+        for i, (_slot, req, _lease) in enumerate(group):
+            payloads = build_snapshot_payloads(
+                self.model, self.pool.axes, self.pool.page_size,
+                req.prompt, rows_cache, ckpts, i)
+            if payloads:
+                self.pool.intern_snapshots(
+                    req.prompt, request_ctx_key(req), payloads,
+                    tenant=getattr(req, "tenant", None))
+
+    def _restore_group(self, group):
+        """Warm-path twin of ``_extend_group`` for SNAPSHOT pools: seed
+        each slot's dense cache row from its leased chain (deepest
+        boundary state + the chain's shared-attention pages), then run
+        ONE dense suffix-extend over the full slot cache — only the
+        divergence tail is computed; the shared prefix is replayed in
+        O(1) by the state restore.
+
+        Rows outside the group ride along untouched: their batch rows
+        carry ``length`` 0 (every SSD step dt-masked to identity, so
+        recurrent state is preserved bit-exactly) and ``pos`` = max_len
+        (every KV write lands out of bounds and drops)."""
+        from repro.models.cache_utils import clear_kv_row, load_pages_into_row
+        from repro.serve.serve_step import bucket_len, build_extend_step
+        if self._extend is None:
+            self._extend = jax.jit(
+                build_extend_step(self.model, self.temperature))
+        P = self.pool.page_size
+        for slot, _req, lease in group:
+            state, stacks = self.pool.snapshot_chain(lease)
+            if self.pool.axes:
+                self.cache = clear_kv_row(self.cache, self.pool.axes, slot)
+            if state is not None:
+                self.cache = self.model.restore_state_row(self.cache, state,
+                                                          slot)
+            if stacks:
+                self.cache = load_pages_into_row(
+                    self.cache, self.cache, self.pool.axes, slot, stacks,
+                    0, P)
+        s_pad = bucket_len(
+            max(len(r.prompt) - le.tokens for _, r, le in group),
+            self.prefill_chunk, self.max_len)
+        tokens = np.zeros((self.B, s_pad), np.int32)
+        length = np.zeros((self.B,), np.int32)
+        pos = np.full((self.B,), self.max_len, np.int32)
+        for slot, req, lease in group:
+            suf = req.prompt[lease.tokens:]
+            tokens[slot, :len(suf)] = suf
+            length[slot] = len(suf)
+            pos[slot] = lease.tokens
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "pos": jnp.asarray(pos),
+            "length": jnp.asarray(length),
+        }
+        self._rng, sub = jax.random.split(self._rng)
+        toks, _logits, self.cache = self._extend(self.params, self.cache,
+                                                 batch, sub)
+        self.prefill_invocations += 1
+        self.prefill_batch_sizes.append(len(group))
+        toks = np.asarray(toks)
+        self._post_install([s for s, _, _ in group],
+                           [r for _, r, _ in group],
+                           [int(toks[s]) for s, _, _ in group])
 
     def _install_pool_rows(self, group, rows_cache, first_tokens):
         """Map each request's computed pages out of a dense rows cache
@@ -381,6 +486,8 @@ class ContinuousBatcher:
         if self.pool is None:
             self._install_rows([slot], [req], row_cache, [first_token])
             return True
+        if not self._paged:
+            return self.install_snapshot(req, row_cache, first_token)
         ctx = request_ctx_key(req)
         alt = (public_ctx_key(req) if self.tenants.share_public(
             getattr(req, "tenant", DEFAULT_TENANT)) else None)
@@ -395,6 +502,44 @@ class ContinuousBatcher:
                                lease.pages)
         self._merge_resident_rows(row_cache, [0], [slot])
         self._post_install([slot], [req], [first_token])
+        return True
+
+    def install_snapshot(self, req: Request, row_cache, first_token: int,
+                         lease=None, chain=None) -> bool:
+        """Adopt an externally prefilled request on a SNAPSHOT pool: the
+        dense 1-row install of :meth:`install_prefilled` plus the prefix
+        bookkeeping — the lease (router-acquired, or taken fresh here)
+        transfers to the slot via ``admit`` (recording the hit/saved
+        counters), and a cold handoff's snapshot chain (per-chunk payload
+        dicts) interns so the NEXT request with this prefix stays warm.
+        Returns False (lease released) when no slot is free."""
+        from repro.serve.kvpool import (
+            PoolExhausted,
+            public_ctx_key,
+            request_ctx_key,
+        )
+        free = self.free_slots()
+        if not free:
+            if lease is not None:
+                self.pool.release_lease(lease)
+            return False
+        slot = free[0]
+        ctx = request_ctx_key(req)
+        if lease is None:
+            alt = (public_ctx_key(req) if self.tenants.share_public(
+                getattr(req, "tenant", DEFAULT_TENANT)) else None)
+            lease = self.pool.lease(req.prompt, ctx, alt)
+        try:
+            self.pool.admit(slot, lease, len(req.prompt),
+                            req.max_new_tokens,
+                            tenant=getattr(req, "tenant", None))
+        except PoolExhausted:            # snapshot admit reserves nothing,
+            self.pool.release_lease(lease)   # but keep the contract
+            return False
+        if chain:
+            self.pool.intern_snapshots(req.prompt, ctx, chain,
+                                       tenant=getattr(req, "tenant", None))
+        self._install_rows([slot], [req], row_cache, [first_token])
         return True
 
     def install_paged(self, req: Request, stacks, resident_row,
@@ -434,7 +579,8 @@ class ContinuousBatcher:
         slot only after a successful adopt on the destination."""
         from repro.models.cache_utils import slice_cache_slots
         req = self.slot_req[slot]
-        assert req is not None and self.pool is not None
+        assert req is not None and self._paged, \
+            "slot export is page-granular (snapshot/dense slots requeue)"
         pos = int(self.pos[slot])
         P = self.pool.page_size
         n_pages = -(-pos // P)
@@ -469,7 +615,7 @@ class ContinuousBatcher:
             request_ctx_key,
         )
         free = self.free_slots()
-        if not free or self.pool is None:
+        if not free or not self._paged:
             return False
         slot = free[0]
         ctx = request_ctx_key(req)
@@ -513,7 +659,7 @@ class ContinuousBatcher:
                 merge_cache_slots,
                 strip_kv_nodes,
             )
-            if self.pool is not None:
+            if self._paged:
                 self.resident = merge_cache_slots(
                     self.resident, strip_kv_nodes(self._slot_init()),
                     self._resident_axes, [slot])
@@ -527,7 +673,7 @@ class ContinuousBatcher:
             self.params, [getattr(req, "src", None)], self.max_len)
         if mem is not None:
             from repro.models.cache_utils import install_cross_memory
-            if self.pool is not None:
+            if self._paged:
                 self.resident = install_cross_memory(self.resident, mem,
                                                      [slot])
             else:
@@ -601,7 +747,10 @@ class ContinuousBatcher:
         for _, group in sorted(cold.items()):
             self._prefill_group(group)
         for _, group in sorted(warm.items()):
-            self._extend_group(group)
+            if self._paged:
+                self._extend_group(group)
+            else:
+                self._restore_group(group)
 
     # -- one decode step over all busy slots -----------------------------
     def step(self) -> int:
@@ -614,7 +763,7 @@ class ContinuousBatcher:
             "pos": jnp.asarray(self.pos),
         }
         self._rng, sub = jax.random.split(self._rng)
-        if self.pool is not None:
+        if self._paged:
             # map the page each busy slot is about to write (drawn from
             # the pocket its admission reserved — cannot fail mid-decode)
             for s in busy:

@@ -38,6 +38,16 @@ what any replica would have computed for the same chunk (the PR 5
 invariant), so migrated pages are indistinguishable from locally
 interned ones and a migrated in-flight request decodes token-identical
 output on its new replica.
+
+The plane is PAYLOAD-POLYMORPHIC: everything here keys on cumulative
+chunk *digests* and moves opaque exported subtrees, so snapshot pools
+(ssm/hybrid recurrent-state checkpoints, ``KVPool.capability ==
+"snapshot"``) advertise into the same :class:`PrefixIndex` and migrate
+over the same ``ArrayChannel`` as page subtrees — the digest of a token
+chunk identifies the boundary state exactly as it identifies the KV
+page, and ``export_subtree``/``import_subtree`` carry the interned
+payload either way.  No code below branches on the payload kind; the
+only capability decision in the stack is ``KVPool.capability``.
 """
 from __future__ import annotations
 

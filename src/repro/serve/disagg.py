@@ -93,22 +93,34 @@ class PrefillWorker:
         self.max_len = max_len
         self.chunk = chunk
         self.temperature = temperature
-        self._step = jax.jit(build_prefill_step(self.model, temperature))
-        self._extend = None
-        self._scratch_caches: Dict[int, object] = {}
-        self._axes = None
-        self._rng = jax.random.PRNGKey(0)
-        self.invocations = 0
         self.tenants = (tenants if isinstance(tenants, TenantRegistry)
                         else TenantRegistry(tenants or ()))
         quota_fn = (self.tenants.page_quotas
                     if any(t.page_quota is not None
                            for t in self.tenants.specs.values()) else None)
+        cap = KVPool.capability(self.model, max_len, page_size)
         self.pool = (KVPool(self.model, max_len=max_len, num_pages=pool_pages,
                             page_size=page_size, accounting=cell.accounting,
                             quotas=quota_fn)
-                     if KVPool.supported(self.model, max_len, page_size)
-                     else None)
+                     if cap != "none" else None)
+        self._snapshot = cap == "snapshot"
+        if self._snapshot:
+            # checkpoint boundaries live at page_size multiples, so every
+            # prefill bucket must be page-aligned: coarsen the bucket
+            # quantum to lcm(chunk, page_size) (the max_len cap stays
+            # aligned — snapshot pools require page-divisible max_len)
+            self.chunk = int(np.lcm(chunk, page_size))
+        # snapshot families prefill with per-chunk boundary checkpoints
+        # enabled so cold prompts feed both the worker's prefix cache and
+        # the handoff chain the decode pool interns
+        self._step = jax.jit(build_prefill_step(
+            self.model, temperature,
+            checkpoint_every=page_size if self._snapshot else None))
+        self._extend = None
+        self._scratch_caches: Dict[int, object] = {}
+        self._axes = None
+        self._rng = jax.random.PRNGKey(0)
+        self.invocations = 0
 
     def _scratch(self, batch: int):
         if batch not in self._scratch_caches:
@@ -117,20 +129,108 @@ class PrefillWorker:
 
     def _cold_group(self, group, out):
         """ONE cold prefill invocation over same-bucket requests, interned
-        into the prefix cache and emitted through :meth:`_payload`."""
-        from repro.serve.kvpool import request_ctx_key
+        into the prefix cache and emitted through :meth:`_payload`.
+
+        Snapshot families additionally slice the invocation's boundary
+        checkpoints into per-chunk chain payloads: the chain interns into
+        THIS worker's tree (the next same-prefix prompt prefills warm)
+        and rides the handoff so the decode replica's pool can intern it
+        too (the next same-prefix REQUEST routes warm cluster-wide)."""
+        from repro.serve.kvpool import (
+            build_snapshot_payloads,
+            request_ctx_key,
+        )
         toks, cache, self._rng, _b_pad = run_prefill_group(
             self._step, self.cell.serve_params, self._scratch, group,
             chunk=self.chunk, max_len=self.max_len, rng=self._rng,
             model=self.model, accounting=self.cell.accounting,
         )
+        ckpts = None
+        if self._snapshot:
+            cache, ckpts = cache
         self.invocations += 1
         for i, (req, tok) in enumerate(zip(group, toks)):
+            if self._snapshot:
+                chain = build_snapshot_payloads(
+                    self.model, self.pool.axes, self.pool.page_size,
+                    req.prompt, cache, ckpts, i)
+                if chain:
+                    self.pool.intern_snapshots(
+                        req.prompt, request_ctx_key(req), chain,
+                        tenant=getattr(req, "tenant", None))
+                out[req.rid] = (req, tok,
+                                {"row": self._dense_row(cache, i),
+                                 "chain": chain})
+                continue
             if self.pool is not None:
                 self.pool.intern_rows(req.prompt, request_ctx_key(req),
                                       cache, i,
                                       tenant=getattr(req, "tenant", None))
             out[req.rid] = (req, tok, self._payload(cache, i, req))
+
+    def _dense_row(self, cache, row: int):
+        from repro.models.cache_utils import slice_cache_slots
+        return slice_cache_slots(cache, self._axes, [row])
+
+    def _warm_snapshot_group(self, group, out):
+        """Warm snapshot prefill: restore each request's deepest interned
+        boundary state into a scratch row (plus the chain's
+        shared-attention pages for hybrid), then ONE dense suffix-extend
+        over the group — the shared prefix replays in O(1) instead of
+        re-running its chunks.  The handoff payload is the 1-row cache
+        WITHOUT a chain (nothing new was computed below the boundary), so
+        a warm handoff ships strictly fewer bytes than a cold one."""
+        from repro.models.cache_utils import (
+            cache_batch_axes,
+            clear_kv_row,
+            load_pages_into_row,
+        )
+        from repro.serve.serve_step import build_extend_step
+        if self._axes is None:
+            self._axes = cache_batch_axes(self.model, 1, self.max_len)
+        if self._extend is None:
+            self._extend = jax.jit(
+                build_extend_step(self.model, self.temperature))
+        P = self.pool.page_size
+        B = len(group)
+        b_pad = 1 << (B - 1).bit_length()
+        cache = self._scratch(b_pad)
+        for i, (req, lease) in enumerate(group):
+            state, stacks = self.pool.snapshot_chain(lease)
+            if self.pool.axes:
+                cache = clear_kv_row(cache, self.pool.axes, i)
+            if state is not None:
+                cache = self.model.restore_state_row(cache, state, i)
+            if stacks:
+                cache = load_pages_into_row(cache, cache, self.pool.axes,
+                                            i, stacks, 0, P)
+        s_pad = bucket_len(
+            max(len(r.prompt) - le.tokens for r, le in group),
+            self.chunk, self.max_len)
+        tokens = np.zeros((b_pad, s_pad), np.int32)
+        length = np.zeros((b_pad,), np.int32)
+        pos = np.full((b_pad,), self.max_len, np.int32)
+        for i, (req, lease) in enumerate(group):
+            suf = req.prompt[lease.tokens:]
+            tokens[i, :len(suf)] = suf
+            length[i] = len(suf)
+            pos[i] = lease.tokens
+        import jax.numpy as jnp
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "pos": jnp.asarray(pos),
+            "length": jnp.asarray(length),
+        }
+        self._rng, sub = jax.random.split(self._rng)
+        toks, _logits, cache = self._extend(self.cell.serve_params, cache,
+                                            batch, sub)
+        self.invocations += 1
+        toks = np.asarray(toks)
+        for i, (req, lease) in enumerate(group):
+            out[req.rid] = (req, int(toks[i]),
+                            {"row": self._dense_row(cache, i),
+                             "chain": None})
+            self.pool.release_lease(lease)
 
     def _payload(self, cache, row: int, req: Request):
         """The per-request handoff artifact: with a pool, a dict of FULL-
@@ -208,6 +308,9 @@ class PrefillWorker:
         for _, group in sorted(cold.items()):
             self._cold_group(group, out)
         for _, group in sorted(warm.items()):
+            if self._snapshot:
+                self._warm_snapshot_group(group, out)
+                continue
             if self._extend is None:
                 self._extend = jax.jit(
                     build_paged_extend_step(self.model, self.temperature,
@@ -399,7 +502,10 @@ class DisaggServer:
                                 "kv_seconds": 0.0,
                                 "prefix_hit_tokens": 0,
                                 "prefix_miss_tokens": 0,
-                                "pages_evicted": 0, "kv_bytes_saved": 0}
+                                "pages_evicted": 0, "kv_bytes_saved": 0,
+                                "snapshots_interned": 0,
+                                "snapshot_hit_tokens": 0,
+                                "snapshot_bytes_saved": 0}
         # cluster cache plane: a supervisor-held prefix index routes warm
         # prompts to the replica already holding their deepest prefix.
         # Live page/slot migration (drain-before-detach) is OPT-IN via
@@ -536,7 +642,9 @@ class DisaggServer:
         if rep.pool is not None:
             ps = rep.pool.stats()
             for k in ("prefix_hit_tokens", "prefix_miss_tokens",
-                      "pages_evicted", "kv_bytes_saved"):
+                      "pages_evicted", "kv_bytes_saved",
+                      "snapshots_interned", "snapshot_hit_tokens",
+                      "snapshot_bytes_saved"):
                 self._detached_stats[k] += ps[k]
         n = 0
         for rid, req in list(rep.inflight.items()):
@@ -613,7 +721,13 @@ class DisaggServer:
                 dst = r
         self.pages_migrated += migrate_prefixes(
             rep.pool, dst.pool, self._pages_channel(rep, dst))
-        # in-flight slotted requests -> any survivor with a free slot
+        # in-flight slotted requests -> any survivor with a free slot.
+        # Slot export is page-granular; snapshot-plane slots (dense rows,
+        # no mid-decode boundary checkpoint) requeue via _detach instead
+        # — their interned prefix chains DID just migrate above, so the
+        # cold restart still prefills warm on the survivor
+        if rep.pool.payload_kind != "page":
+            return 0
         handoffs = 0
         for slot, req in enumerate(rep.batcher.slot_req):
             if req is None:
@@ -963,6 +1077,20 @@ class DisaggServer:
                         meta={"rid": req.rid, "first_token": tok,
                               "prompt_len": len(req.prompt)},
                     )
+                elif rep.pool.payload_kind == "snapshot":
+                    # snapshot handoff: one dense row (the state IS the
+                    # prefix) plus, cold only, the intern-able chain — a
+                    # warm worker payload carries no chain, so the warm
+                    # channel bytes are strictly below the cold ones.
+                    # The replica-side lease (acquired by routing) pins
+                    # the replica's own chain until install transfers it
+                    rep.channel.send_kv(
+                        row_cache, None,
+                        meta={"rid": req.rid, "first_token": tok,
+                              "prompt_len": len(req.prompt)},
+                    )
+                    if lease is not None:
+                        rep.leases[req.rid] = lease
                 else:
                     # paged handoff: ONLY the page suffix the decode pool
                     # does not already hold crosses the channel — the
@@ -1003,6 +1131,16 @@ class DisaggServer:
                     # the capacity budget reserves a slot for every send
                     # on the legacy plane — a failure here is a real
                     # accounting bug, not back-pressure
+                    assert ok, \
+                        "pump() never sends more KV than there are free slots"
+                elif rep.pool.payload_kind == "snapshot":
+                    lease = rep.leases.pop(env.meta["rid"], None)
+                    ok = rep.batcher.install_snapshot(
+                        req, env.cache["row"], env.meta["first_token"],
+                        lease=lease, chain=env.cache["chain"],
+                    )
+                    # snapshot admission reserves no pages, so like the
+                    # legacy plane only slot capacity gates the install
                     assert ok, \
                         "pump() never sends more KV than there are free slots"
                 else:
@@ -1122,6 +1260,11 @@ class DisaggServer:
             "cache_index_entries": len(self.cacheplane.index),
             "pages_evicted": pool_sum("pages_evicted"),
             "kv_bytes_saved": pool_sum("kv_bytes_saved"),
+            # snapshot cache plane (ssm/hybrid): zero on page pools, so
+            # the keys are uniform across payload kinds
+            "snapshots_interned": pool_sum("snapshots_interned"),
+            "snapshot_hit_tokens": pool_sum("snapshot_hit_tokens"),
+            "snapshot_bytes_saved": pool_sum("snapshot_bytes_saved"),
             "pages_in_use": sum(p["pages_in_use"] for p in pools),
             "pool_occupancy": max((p["occupancy"] for p in pools),
                                   default=0.0),

@@ -1,4 +1,4 @@
-"""KVPool — paged KV memory with radix-tree prefix sharing.
+"""KVPool — payload-polymorphic cache memory with radix-tree prefix sharing.
 
 The paper's memory model applied to the serving cache plane: each subOS
 (here: each decode cell) owns an *isolated* arena of physical memory, and
@@ -30,9 +30,36 @@ on tokens ``<= i`` (plus, for encdec, the request's source features — the
 tree roots are keyed by a source digest), so an interned page written by
 one request is bit-identical to what any other request with the same
 prefix would have computed; chunk-granular matching means partial matches
-are misses.  Recurrent families (ssm/hybrid) fold history into
-non-positional state and are a declared non-goal — they keep the dense
-per-slot cache (``Model.supports_paged_kv``).
+are misses.
+
+**The payload protocol.**  The unit of sharing is a typed *payload*, not
+hard-coded pages — the OSmosis argument (arXiv:2309.09291) that
+isolation/sharing policy should be expressed over a uniform resource
+abstraction.  A :class:`PrefixTree` node's ``page`` field is an integer
+HANDLE whose meaning is the pool's ``payload_kind``:
+
+* ``"page"`` — a physical page id in the KV arena (causal-KV families:
+  dense/vlm/moe/encdec), the classic paged plane above;
+* ``"snapshot"`` — a key into the pool's snapshot store holding
+  ``{"state": <1-row recurrent-state tree at the chunk boundary>,
+  "pages": [<this chunk's shared-attention KV page stacks>]}`` for
+  recurrent families (ssm/hybrid).  Node ``d-1``'s state is the FULL
+  state after the depth-``d`` prefix (Mamba state folds history, so each
+  node stores one boundary checkpoint, not a delta); ``"pages"`` carries
+  only chunk ``d-1``'s KV positions (empty for pure ssm), so a chain's
+  KV grows linearly with depth.  A warm prompt restores the deepest
+  node's state (plus the chain's concatenated KV pages) into a dense
+  cache row and prefill-extends only the suffix.
+
+Every mechanism above the handle — refcounts, LRU eviction, tenant quota
+pockets, COW admission, export/import migration — is payload-agnostic
+and identical for both kinds.  The three-way capability predicate is
+:meth:`KVPool.capability` (``"paged" | "snapshot" | "none"``): the ONLY
+place family reach into the cache plane is decided.  Digest
+compatibility: both kinds key tree nodes by the same ``page_size``-token
+chunks, so ``serve.cacheplane.chunk_digests`` / ``advertise`` /
+``PrefixIndex`` routing and ``migrate_prefixes`` work unchanged over
+snapshot pools — the cluster plane never looks inside a payload.
 
 Tenancy applies the same subOS model one level up, to *users* of one
 pool.  Each tenant is a little subOS of the cache plane:
@@ -99,6 +126,7 @@ from repro.models.cache_utils import (
     paged_view,
     quantize_page,
     read_arena_pages,
+    recurrent_state_bytes,
     strip_kv_nodes,
     write_arena_pages,
 )
@@ -356,9 +384,14 @@ class KVPool:
                  slots: int = 0, num_pages: Optional[int] = None,
                  accounting=None, quotas: Any = None,
                  kv_dtype: Optional[str] = None):
-        if not model.supports_paged_kv:
+        if model.supports_paged_kv:
+            self.payload_kind = "page"
+        elif getattr(model, "supports_snapshot_state", False):
+            self.payload_kind = "snapshot"
+        else:
             raise ValueError(
-                f"family {model.cfg.family!r} has no paged KV cache")
+                f"family {model.cfg.family!r} has no shareable cache "
+                f"payload (neither paged KV nor state snapshots)")
         if max_len % page_size:
             raise ValueError(f"max_len={max_len} not a multiple of "
                              f"page_size={page_size}")
@@ -374,25 +407,43 @@ class KVPool:
             raise ValueError("pool smaller than one request's worst case")
         self.template = model.cache_specs(1, max_len)
         self.axes = kv_node_axes(model, 1, max_len)
+        # a warm hit skips BOTH the prefix KV bytes (hybrid shared
+        # attention; zero for pure ssm) and, amortized per position, the
+        # boundary state checkpoints the handoff no longer ships
         self.position_bytes = kv_position_bytes(model, max_len)
-        self.arena = page_arena(model, self.num_pages, page_size)
-        if kv_dtype is None:
+        if self.payload_kind == "snapshot":
+            self.position_bytes += (
+                recurrent_state_bytes(model, max_len) // page_size)
+        # snapshot store: handle -> interned payload pytree.  Handles are
+        # drawn from the same free list / quota / eviction machinery as
+        # physical page ids — only the backing storage differs.
+        self._snaps: Dict[int, Any] = {}
+        if self.payload_kind == "snapshot":
+            if kv_dtype is not None:
+                raise ValueError(
+                    "snapshot pools hold float state payloads; kv_dtype "
+                    "quantization applies to page arenas only")
+            self.arena = []
             self.kv_scales = None
-        elif kv_dtype == "int8":
-            # int8 page scaffolding: k/v store int8 with one f32 scale
-            # per (page, layer) per tensor — quantized on page write,
-            # dequantized in-kernel on the paged hot path (and on
-            # read_pages / export, so migration round-trips via floats)
-            self.arena = [KVSlice(k=jnp.zeros(a.k.shape, jnp.int8),
-                                  v=jnp.zeros(a.v.shape, jnp.int8),
-                                  slot_pos=a.slot_pos)
-                          for a in self.arena]
-            self.kv_scales = [
-                (jnp.zeros((self.num_pages, a.k.shape[2]), jnp.float32),
-                 jnp.zeros((self.num_pages, a.k.shape[2]), jnp.float32))
-                for a in self.arena]
         else:
-            raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+            self.arena = page_arena(model, self.num_pages, page_size)
+            if kv_dtype is None:
+                self.kv_scales = None
+            elif kv_dtype == "int8":
+                # int8 page scaffolding: k/v store int8 with one f32 scale
+                # per (page, layer) per tensor — quantized on page write,
+                # dequantized in-kernel on the paged hot path (and on
+                # read_pages / export, so migration round-trips via floats)
+                self.arena = [KVSlice(k=jnp.zeros(a.k.shape, jnp.int8),
+                                      v=jnp.zeros(a.v.shape, jnp.int8),
+                                      slot_pos=a.slot_pos)
+                              for a in self.arena]
+                self.kv_scales = [
+                    (jnp.zeros((self.num_pages, a.k.shape[2]), jnp.float32),
+                     jnp.zeros((self.num_pages, a.k.shape[2]), jnp.float32))
+                    for a in self.arena]
+            else:
+                raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
         self.kv_dtype = kv_dtype
         self.sentinel = self.num_pages          # unmapped block-table entry
         self.block_table = np.full((max(slots, 1), self.n_logical),
@@ -428,11 +479,18 @@ class KVPool:
         self.prefix_hit_tokens = 0
         self.prefix_miss_tokens = 0
         self.kv_bytes_saved = 0
+        # snapshot-payload counters — present (zero) on page pools too so
+        # aggregators can fold stats() dicts without key checks
+        self.snapshots_interned = 0
+        self.snapshot_hit_tokens = 0
+        self.snapshot_bytes_saved = 0
         # arena mutators run jitted with the arena DONATED so updates are
         # in-place buffer writes, not whole-arena functional copies — the
         # admission path must not pay O(arena) per request (compiled
         # variants are bounded by the <= n_logical distinct page counts)
-        if self.kv_scales is None:
+        if self.payload_kind == "snapshot":
+            self._clean_fn = self._write_fn = None
+        elif self.kv_scales is None:
             self._clean_fn = jax.jit(clean_arena_pages, donate_argnums=(0,))
             self._write_fn = jax.jit(write_arena_pages, donate_argnums=(0,))
         else:
@@ -458,14 +516,28 @@ class KVPool:
 
     # -- capability ----------------------------------------------------
     @staticmethod
-    def supported(model, max_len: int, page_size: int) -> bool:
-        """Pool gate: pageable family, page-aligned cache, and an
-        absolute-position cache layout (a rolling SWA buffer keeps only a
-        window of *slots*, so page ids would not be stable)."""
+    def capability(model, max_len: int, page_size: int) -> str:
+        """Pool gate, three-way: what cache payload can this config share?
+
+        * ``"paged"`` — attention KV lives in a pageable absolute-position
+          layout: full page-granular prefix sharing.
+        * ``"snapshot"`` — no paged KV, but the family carries compact
+          recurrent state (ssm/hybrid): prefix sharing via interned
+          boundary-state checkpoints.
+        * ``"none"`` — neither (page-misaligned cache, or a rolling SWA
+          buffer that keeps only a window of *slots*, so neither page ids
+          nor chunk-boundary states are stable).
+
+        This predicate is the ONLY place payload capability is decided;
+        callers branch on its result, never on ``supports_paged_kv``."""
         w = model.cfg.sliding_window
-        return (model.supports_paged_kv
-                and max_len % page_size == 0
-                and (w is None or w >= max_len))
+        if max_len % page_size or not (w is None or w >= max_len):
+            return "none"
+        if model.supports_paged_kv:
+            return "paged"
+        if getattr(model, "supports_snapshot_state", False):
+            return "snapshot"
+        return "none"
 
     # -- occupancy -----------------------------------------------------
     @property
@@ -531,6 +603,9 @@ class KVPool:
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_miss_tokens": self.prefix_miss_tokens,
             "kv_bytes_saved": self.kv_bytes_saved,
+            "snapshots_interned": self.snapshots_interned,
+            "snapshot_hit_tokens": self.snapshot_hit_tokens,
+            "snapshot_bytes_saved": self.snapshot_bytes_saved,
         }
         if self.quotas is not None:
             out["quota_pages"] = dict(self.quotas)
@@ -540,6 +615,12 @@ class KVPool:
     def _gauge(self):
         if self.accounting is not None:
             self.accounting.record_gauge("pages_in_use", self.pages_in_use)
+
+    def _reap(self, handle: int):
+        """Drop the payload behind an evicted/freed handle.  Physical
+        pages have nothing to drop (the arena slab is recycled in place);
+        snapshot handles release their interned state pytree."""
+        self._snaps.pop(handle, None)
 
     # -- page supply ---------------------------------------------------
     def _alloc_raw(self, tenant: Optional[str] = None) -> Optional[int]:
@@ -559,6 +640,7 @@ class KVPool:
             if evicted is None:
                 return None
             _, page = evicted
+            self._reap(page)
             self.pages_evicted += 1
             if self.accounting is not None:
                 self.accounting.record_counter("pages_evicted")
@@ -569,6 +651,7 @@ class KVPool:
             if evicted is None:
                 return None             # quota exhausted, pool untouched
             _, page = evicted
+            self._reap(page)
             self.pages_evicted += 1
             if self.accounting is not None:
                 self.accounting.record_counter("pages_evicted",
@@ -638,6 +721,9 @@ class KVPool:
         self.prefix_miss_tokens += prompt_len - hit_tokens
         saved = hit_tokens * self.position_bytes if saved_bytes else 0
         self.kv_bytes_saved += saved
+        if self.payload_kind == "snapshot":
+            self.snapshot_hit_tokens += hit_tokens
+            self.snapshot_bytes_saved += saved
         if acc is not None:
             acc.record_counter("prefix_hit_tokens", hit_tokens)
             acc.record_counter("prefix_miss_tokens", prompt_len - hit_tokens)
@@ -650,7 +736,13 @@ class KVPool:
         """Worst-case private pages a request can touch: every page up to
         its last writable position, minus the shared prefix.  At least
         one post-prompt position is counted — install always maps the
-        page holding position ``prompt_len`` for the first decode write."""
+        page holding position ``prompt_len`` for the first decode write.
+
+        Snapshot pools reserve nothing per slot: the request's state
+        lives in its dense cache row, and handle supply is consumed only
+        when a finished prefix interns new checkpoints."""
+        if self.payload_kind == "snapshot":
+            return 0
         last = min(prompt_len + max(max_new, 1), self.max_len)
         return -(-last // self.page_size) - shared_pages
 
@@ -689,8 +781,9 @@ class KVPool:
         if got:
             self._clean_pages(jnp.asarray(got, jnp.int32))
         self._pocket[slot] = got
-        for lp, node in enumerate(lease.nodes):
-            self.block_table[slot, lp] = node.page
+        if self.payload_kind == "page":
+            for lp, node in enumerate(lease.nodes):
+                self.block_table[slot, lp] = node.page
         self._shared[slot] = list(lease.nodes)
         lease.released = True            # ownership moved to the slot
         self.note_lookup(prompt_len, lease.tokens)
@@ -714,6 +807,7 @@ class KVPool:
             if evicted is None:
                 return False
             _, page = evicted
+            self._reap(page)
             self.pages_evicted += 1
             self.free.append(page)
             self.used[dst] -= 1
@@ -930,6 +1024,70 @@ class KVPool:
             self.tree.release(path)
             self._gauge()
 
+    def intern_snapshots(self, prompt, ctx_key, payloads,
+                         tenant: Optional[str] = None):
+        """Best-effort intern of a prompt's per-chunk state snapshots —
+        the snapshot-pool twin of ``intern_rows`` (refcounts stay 0, the
+        chain is pure reclaimable cache).  ``payloads[lp]`` is chunk
+        ``lp``'s payload dict: ``{"state": the 1-row recurrent state
+        AFTER position ``(lp+1)*page_size``, "pages": per-KV-node 1-page
+        canonical stacks for the chunk's shared-attention positions
+        ([] for pure ssm)}``.  Handles bill the landing namespace's
+        pocket exactly like pages; the walked chain is pinned so an
+        eviction inside ``_alloc_raw`` can't detach it mid-walk."""
+        assert self.payload_kind == "snapshot", "page pools intern rows"
+        P = self.page_size
+        L = len(prompt)
+        owner = (PUBLIC if (ctx_key is not None and ctx_key
+                            and ctx_key[0] == "public")
+                 else (tenant if tenant is not None else DEFAULT_TENANT))
+        parent = self.tree.root(ctx_key)
+        path: List[_Node] = []
+        try:
+            for lp in range(min(L // P, len(payloads))):
+                key = tuple(int(t) for t in prompt[lp * P:(lp + 1) * P])
+                node = parent.children.get(key)
+                if node is None:
+                    handle = self._alloc_raw(owner)
+                    if handle is None:
+                        break
+                    node = self.tree.insert(parent, key, handle, owner)
+                    self._snaps[handle] = payloads[lp]
+                    self.snapshots_interned += 1
+                    if self.accounting is not None:
+                        self.accounting.record_counter("snapshots_interned")
+                self.tree.acquire([node])
+                path.append(node)
+                parent = node
+        finally:
+            self.tree.release(path)
+            self._gauge()
+
+    def snapshot_chain(self, lease: PrefixLease) -> tuple:
+        """Materialize a warm lease's restore payload.
+
+        Returns ``(state, page_stacks)``: ``state`` is the DEEPEST
+        node's boundary recurrent state (the scan state after
+        ``lease.tokens`` positions — restoring it replays the whole
+        prefix in O(1)); ``page_stacks`` is, per KV node, the
+        concatenation of every chain chunk's shared-attention pages
+        (logical pages ``[0, lease.pages)``, [] for pure ssm).
+        ``(None, [])`` for an empty lease.  Read-only — the lease keeps
+        its pins."""
+        if not lease.nodes:
+            return None, []
+        payloads = [self._snaps[n.page] for n in lease.nodes]
+        state = payloads[-1]["state"]
+        per_chunk = [p["pages"] for p in payloads]
+        if not per_chunk[0]:
+            return state, []
+        stacks = [
+            jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                         *(pc[i] for pc in per_chunk))
+            for i in range(len(per_chunk[0]))
+        ]
+        return state, stacks
+
     def alloc_temp_pages(self, n: int,
                          tenant: Optional[str] = None) -> List[int]:
         """``n`` cleaned scratch pages for a slot-less paged extend (the
@@ -1051,6 +1209,10 @@ class KVPool:
             else:
                 idx = pidx
             stack.extend((c, idx) for c in node.children.values())
+        if self.payload_kind == "snapshot":
+            # stacks row i is record i's interned payload dict verbatim
+            # (ArrayChannel._transfer device-puts any pytree)
+            return records, [self._snaps[p] for p in pages]
         stacks = (self.read_pages(jnp.asarray(pages, jnp.int32))
                   if pages else [])
         return records, stacks
@@ -1086,12 +1248,15 @@ class KVPool:
                     if page is None:
                         continue        # exhausted: siblings may still fit
                     node = self.tree.insert(parent, key, page, rec["owner"])
+                    if self.payload_kind == "snapshot":
+                        self._snaps[page] = stacks[i]
+                        self.snapshots_interned += 1
                     new_ids.append(page)
                     new_rows.append(i)
                 self.tree.acquire([node])
                 pinned.append(node)
                 nodes[i] = node
-            if new_ids:
+            if new_ids and self.payload_kind == "page":
                 rows = jnp.asarray(new_rows, jnp.int32)
                 sub = [KVSlice(k=s.k[rows], v=s.v[rows],
                                slot_pos=s.slot_pos[rows]) for s in stacks]
@@ -1148,6 +1313,36 @@ def build_paged_extend_step(model, temperature, *, template):
         toks = sample_tokens(logits, rng, temperature)
         return toks, arena, scales, resident
     return paged_extend
+
+
+def build_snapshot_payloads(model, axes, page_size: int, prompt,
+                            rows_cache, ckpts, row: int) -> list:
+    """Per-chunk snapshot payload dicts for one cold-prefilled row — the
+    intern/handoff artifact of the snapshot cache plane.
+
+    ``payloads[lp]`` covers prompt chunk ``lp``: ``state`` is the 1-row
+    recurrent state AFTER position ``(lp+1)*page_size`` (sliced from the
+    checkpoint-emitting prefill's stacked ``ckpts``) and ``pages`` holds
+    the chunk's shared-attention KV as per-node 1-page canonical stacks
+    ([] for pure ssm — ``axes`` empty).  Only ``len(prompt) //
+    page_size`` chunks are built: checkpoints at boundaries past a row's
+    true length are bucket-pad garbage and must never be read."""
+    from repro.models.cache_utils import extract_row_pages
+    n_chunks = len(prompt) // page_size
+    if n_chunks == 0:
+        return []
+    all_stacks = (extract_row_pages(rows_cache, axes, row, 0, n_chunks,
+                                    page_size)
+                  if axes else None)
+    payloads = []
+    for lp in range(n_chunks):
+        pages = ([jax.tree.map(lambda a, lp=lp: a[lp:lp + 1], s)
+                  for s in all_stacks] if all_stacks else [])
+        payloads.append({
+            "state": model.slice_checkpoint(ckpts, row, lp),
+            "pages": pages,
+        })
+    return payloads
 
 
 def run_extend_group(extend_fn, params, scratch, pool: KVPool, reqs,

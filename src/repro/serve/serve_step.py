@@ -67,15 +67,27 @@ def supports_chunked_prefill(model: Model, max_len: int) -> bool:
     )
 
 
-def build_prefill_step(model: Model, temperature: float = 0.0) -> Callable:
+def build_prefill_step(model: Model, temperature: float = 0.0,
+                       checkpoint_every: Optional[int] = None) -> Callable:
     """prefill_step(params, cache, batch, rng) -> (first_tokens, logits, cache).
 
     ``batch`` = {tokens (B, S_pad), length (B,)}; ``cache`` is a fresh
     (B-row) cache whose buffers are NOT donated — callers reuse a scratch
     cache across requests since prefill rebuilds every KV leaf.
+
+    ``checkpoint_every`` (ssm/hybrid snapshot pools): the third output
+    becomes ``(cache, ckpts)`` with ``ckpts`` the stacked per-boundary
+    recurrent-state checkpoints from ``Model.prefill_ranged`` — the rest
+    of the batching protocol (``run_prefill_prompts`` / ``_group``) passes
+    it through untouched, so checkpointing callers unpack the pair.
     """
     def prefill_step(params, cache, batch, rng):
-        logits, cache = model.prefill_ranged(params, batch, cache)
+        if checkpoint_every is None:
+            logits, cache = model.prefill_ranged(params, batch, cache)
+        else:
+            logits, cache, ckpts = model.prefill_ranged(
+                params, batch, cache, checkpoint_every=checkpoint_every)
+            cache = (cache, ckpts)
         toks = sample_tokens(logits, rng, temperature)
         return toks, logits, cache
     return prefill_step

@@ -1,0 +1,162 @@
+"""Deterministic snapshot cache-plane tests (no hypothesis dep).
+
+The payload-polymorphic ``KVPool`` plane for recurrent families
+(ssm/hybrid): the capability gate, eviction reaping of interned
+payloads, and the headline exactness guarantee — a warm request whose
+prefix is restored from an interned chunk-boundary snapshot chain (and
+whose suffix is prefill-extended) decodes TOKEN-IDENTICALLY to a cold
+run of the same prompt, colocated and disaggregated.  The randomized
+tree/migration invariants live in ``test_snapshot_properties.py``.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import smoke_config
+from repro.configs.registry import get_arch
+from repro.models.model import build_model
+from repro.serve.batcher import ContinuousBatcher, Request
+from repro.serve.kvpool import KVPool
+from repro.sharding.rules import single_device_ctx
+
+MAX_LEN = 32
+PAGE = 8
+SNAP_ARCHS = ["mamba2-2.7b", "zamba2-2.7b"]
+
+_CACHE = {}
+
+
+def _model(name):
+    if name not in _CACHE:
+        cfg = smoke_config(get_arch(name))
+        model = build_model(cfg, single_device_ctx())
+        _CACHE[name] = (model, model.init(jax.random.PRNGKey(0)))
+    return _CACHE[name]
+
+
+def _payloads(tag, n):
+    """n fake chunk payloads with distinguishable states — the pool
+    never inspects payload contents, only stores/returns them."""
+    return [{"state": np.asarray([tag, lp], np.int64), "pages": []}
+            for lp in range(n)]
+
+
+def test_capability_three_way():
+    """``KVPool.capability`` is the single payload gate: paged for
+    attention KV, snapshot for ssm/hybrid, none for misaligned configs."""
+    model, _ = _model("mamba2-2.7b")
+    assert KVPool.capability(model, MAX_LEN, PAGE) == "snapshot"
+    assert KVPool.capability(model, MAX_LEN + 1, PAGE) == "none"
+    paged, _ = _model("qwen3-4b")
+    assert KVPool.capability(paged, MAX_LEN, PAGE) == "paged"
+
+
+def test_snapshot_eviction_reaps_payloads():
+    """Handle pressure evicts refs-0 leaves AND their payloads: the
+    ``_snaps`` map never orphans an entry, occupancy never exceeds the
+    handle supply, and a live (leased) chain survives the squeeze."""
+    model, _ = _model("mamba2-2.7b")
+    pool = KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=0,
+                  num_pages=4)
+    a = np.asarray([1] * MAX_LEN, np.int32)
+    pool.intern_snapshots(a, None, _payloads(0, MAX_LEN // PAGE))
+    lease = pool.lease(a, None)
+    assert len(lease.nodes) == (MAX_LEN - 1) // PAGE  # pinned below
+    # a second full chain cannot fit: only the unpinned tail is evictable
+    b = np.asarray([2] * MAX_LEN, np.int32)
+    pool.intern_snapshots(b, None, _payloads(1, MAX_LEN // PAGE))
+    assert pool.pages_in_use <= pool.num_pages
+    assert set(n.page for n in pool.tree._walk()) == set(pool._snaps)
+    # the leased chain is untouched and still materializes
+    state, stacks = pool.snapshot_chain(lease)
+    assert stacks == []
+    assert np.array_equal(state, np.asarray([0, len(lease.nodes) - 1],
+                                            np.int64))
+    pool.release_lease(lease)
+    assert all(n.refs == 0 for n in pool.tree._walk())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end exactness: warm restored decode == cold decode
+# ---------------------------------------------------------------------------
+E2E_LEN = 64
+E2E_CHUNK = 8
+
+
+def _e2e_prompts(cfg):
+    rng = np.random.RandomState(0)
+    sysp = rng.randint(1, cfg.vocab, size=40).astype(np.int32)
+    t1 = rng.randint(1, cfg.vocab, size=5).astype(np.int32)
+    t2 = rng.randint(1, cfg.vocab, size=7).astype(np.int32)
+    return np.concatenate([sysp, t1]), np.concatenate([sysp, t2])
+
+
+@pytest.mark.parametrize("arch", SNAP_ARCHS)
+def test_snapshot_restore_exact_colocated(arch):
+    """A warm request (prefix restored from an interned snapshot chain,
+    suffix prefill-extended) decodes token-identically to a cold run of
+    the same prompt, and the lease's pins return to 0 after drain."""
+    model, params = _model(arch)
+    p1, p2 = _e2e_prompts(model.cfg)
+
+    def run(prompts, fresh_each=False):
+        out = {}
+        bat = None
+        for i, p in enumerate(prompts):
+            if bat is None or fresh_each:
+                bat = ContinuousBatcher(model, params, batch_slots=2,
+                                        max_len=E2E_LEN,
+                                        prefill_chunk=E2E_CHUNK,
+                                        page_size=PAGE)
+                assert bat.pool is not None
+                assert bat.pool.payload_kind == "snapshot"
+            bat.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+            for r in bat.run_until_drained():
+                out[r.rid] = r.output
+        return out, bat
+
+    cold, _ = run([p1, p2], fresh_each=True)        # independent servers
+    warm, bat = run([p1, p2])                       # p2 hits p1's chain
+    assert warm == cold
+    st = bat.pool.stats()
+    assert st["snapshot_hit_tokens"] > 0 and st["snapshot_bytes_saved"] > 0
+    assert all(n.refs == 0 for n in bat.pool.tree._walk())
+
+
+@pytest.mark.parametrize("arch", SNAP_ARCHS)
+def test_snapshot_restore_exact_disagg(arch):
+    """Disaggregated twin of the colocated exactness test: the warm
+    prefill->decode handoff (one dense row, chain elided) decodes
+    token-identically to cold, and the decode-side pool records the
+    snapshot hit."""
+    from repro.core import DeviceGrid, Supervisor
+    from repro.serve.disagg import DisaggServer
+
+    model, _ = _model(arch)
+    cfg = model.cfg
+    p1, p2 = _e2e_prompts(cfg)
+
+    def srv_new():
+        grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1,
+                                    cols=2, allow_reuse=True)
+        sup = Supervisor(grid)
+        sup.create_cell("prefill", cfg, "serve", ncols=1)
+        dec = sup.create_cell("decode", cfg, "serve", ncols=1)
+        dec.init_serve(rng=jax.random.PRNGKey(0))
+        return DisaggServer(sup, "prefill", "decode", batch_slots=2,
+                            max_len=E2E_LEN, chunk=E2E_CHUNK,
+                            page_size=PAGE)
+
+    def run(srv, prompts, rid0=0):
+        for i, p in enumerate(prompts):
+            srv.submit(Request(rid=rid0 + i, prompt=p, max_new_tokens=4))
+        return {r.rid: r.output for r in srv.run_until_drained()}
+
+    ref1 = run(srv_new(), [p1])[0]
+    ref2 = run(srv_new(), [p2])[0]
+    srv = srv_new()
+    assert run(srv, [p1])[0] == ref1                # cold
+    assert run(srv, [p2], rid0=1)[1] == ref2        # warm, same prefix
+    st = srv.stats()
+    assert st["snapshot_hit_tokens"] > 0 and st["snapshot_bytes_saved"] > 0

@@ -1,0 +1,177 @@
+"""Property-based (hypothesis) invariants for the snapshot cache plane.
+
+The snapshot twin of ``test_kvpool_properties.py``: a snapshot-mode
+``KVPool`` interns per-chunk recurrent-state payloads under the same
+``PrefixTree`` handles that page pools use for page ids, so every tree
+invariant must carry over payload-polymorphically —
+
+  * intern/lease/release over random prompt sequences: handle <->
+    payload bijection (``_snaps`` keys are exactly the walked handles),
+    refcounts never negative and return to 0 after every lease is
+    released, ``snapshot_chain`` materializes the DEEPEST interned
+    boundary state of the matched chain;
+  * ``export_subtree`` / ``import_subtree`` (the migration path)
+    round-trip chains payload-exactly with refs-0 arrivals.
+
+Deterministic snapshot-plane tests (capability gate, eviction reaping,
+warm-restore decode exactness) live in ``test_snapshot_cache.py`` so
+they run even without the hypothesis dep.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # keep collection alive without the dep
+
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.base import smoke_config  # noqa: E402
+from repro.configs.registry import get_arch  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve.kvpool import KVPool  # noqa: E402
+from repro.sharding.rules import single_device_ctx  # noqa: E402
+
+MAX_LEN = 32
+PAGE = 8
+
+_CACHE = {}
+
+
+def _model(name):
+    if name not in _CACHE:
+        cfg = smoke_config(get_arch(name))
+        model = build_model(cfg, single_device_ctx())
+        _CACHE[name] = (model, model.init(jax.random.PRNGKey(0)))
+    return _CACHE[name]
+
+
+def _payloads(tag, n):
+    """n fake chunk payloads whose states are distinguishable scalars —
+    the pool never inspects payload contents, only stores/returns them."""
+    return [{"state": np.asarray([tag, lp], np.int64), "pages": []}
+            for lp in range(n)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_snapshot_pool_invariants(data):
+    """Intern/lease/release over random prompts from a tiny alphabet
+    (maximal prefix collisions): the handle->payload map mirrors the
+    tree exactly, ``snapshot_chain`` returns the deepest matched
+    boundary state, refcounts are non-negative throughout and return to
+    0 once every lease is released."""
+    model, _ = _model("mamba2-2.7b")
+    # generous handle supply: intern never breaks mid-chain, so a
+    # pre-intern walk predicts insertions exactly
+    pool = KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=0,
+                  num_pages=256)
+    mirror = {}          # key-path -> expected "state" payload
+    leased = []
+    next_tag = [0]
+
+    def _paths(prompt):
+        keys = [tuple(int(t) for t in prompt[i * PAGE:(i + 1) * PAGE])
+                for i in range(len(prompt) // PAGE)]
+        return [tuple(keys[:lp + 1]) for lp in range(len(keys))]
+
+    for _ in range(data.draw(st.integers(1, 25), label="ops")):
+        op = data.draw(st.sampled_from(["intern", "lease", "release"]),
+                       label="op")
+        prompt = np.asarray(data.draw(
+            st.lists(st.integers(0, 2), min_size=0, max_size=MAX_LEN),
+            label="prompt"), np.int32)
+        if op == "intern":
+            pays = _payloads(next_tag[0], len(prompt) // PAGE)
+            next_tag[0] += 1
+            pool.intern_snapshots(prompt, None, pays)
+            # intern only inserts missing nodes (existing paths keep
+            # their original payload): record each newly-landed path
+            parent = pool.tree.root(None)
+            for lp, path in enumerate(_paths(prompt)):
+                node = parent.children.get(path[-1])
+                assert node is not None, "generous pool never breaks"
+                if path not in mirror:
+                    mirror[path] = pays[lp]["state"]
+                parent = node
+        elif op == "lease":
+            lease = pool.lease(prompt, None)
+            state, stacks = pool.snapshot_chain(lease)
+            assert stacks == []
+            if lease.nodes:
+                path = tuple(n.key for n in lease.nodes)
+                assert np.array_equal(state, mirror[path])
+                assert all(n.refs >= 1 for n in lease.nodes)
+                leased.append(lease)
+            else:
+                assert state is None
+                pool.release_lease(lease)
+        elif op == "release" and leased:
+            pool.release_lease(leased.pop())
+
+    # handle <-> payload bijection
+    handles = [n.page for n in pool.tree._walk()]
+    assert len(handles) == len(set(handles)) == pool.tree.interned
+    assert set(handles) == set(pool._snaps)
+    assert pool.snapshots_interned == pool.tree.interned
+    # every interned payload matches its mirror entry
+    for ck, root in pool.tree._roots.items():
+        stack = [(root, ())]
+        while stack:
+            node, path = stack.pop()
+            for key, child in node.children.items():
+                p = path + (key,)
+                assert np.array_equal(pool._snaps[child.page]["state"],
+                                      mirror[p])
+                stack.append((child, p))
+    # refcounts return to 0
+    assert all(n.refs >= 0 for n in pool.tree._walk())
+    for lease in leased:
+        pool.release_lease(lease)
+    assert all(n.refs == 0 for n in pool.tree._walk())
+    assert pool.evictable_pages() == pool.tree.interned
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_snapshot_export_import_roundtrip(data):
+    """Migration round-trips snapshot chains payload-exactly: the
+    destination reproduces every key-path with an equal ``"state"``
+    payload at refs 0; re-import is idempotent."""
+    model, _ = _model("mamba2-2.7b")
+    src = KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=0,
+                 num_pages=64)
+    for tag in range(data.draw(st.integers(1, 4), label="prompts")):
+        n_tok = data.draw(st.integers(PAGE, MAX_LEN), label="len")
+        prompt = np.asarray(data.draw(
+            st.lists(st.integers(1, 3), min_size=n_tok, max_size=n_tok),
+            label="prompt"), np.int32)
+        src.intern_snapshots(prompt, None, _payloads(tag, n_tok // PAGE))
+
+    def _paths(pool):
+        out = {}
+        for ck, root in pool.tree._roots.items():
+            stack = [(root, ())]
+            while stack:
+                node, path = stack.pop()
+                for key, child in node.children.items():
+                    p = path + (key,)
+                    out[(ck, p)] = child
+                    stack.append((child, p))
+        return out
+
+    dst = KVPool(model, max_len=MAX_LEN, page_size=PAGE, slots=0,
+                 num_pages=64)
+    records, stacks = src.export_subtree(None)
+    assert len(stacks) == len(records)
+    imported = dst.import_subtree(None, records, stacks)
+    before, after = _paths(src), _paths(dst)
+    assert set(after) == set(before) and imported == len(before)
+    for key, node in after.items():
+        assert node.refs == 0
+        assert np.array_equal(dst._snaps[node.page]["state"],
+                              src._snaps[before[key].page]["state"])
+    # idempotent
+    records, stacks = src.export_subtree(None)
+    assert dst.import_subtree(None, records, stacks) == 0
