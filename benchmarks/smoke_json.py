@@ -1,0 +1,55 @@
+"""Fold bench-smoke CSV outputs into one machine-readable JSON artifact.
+
+Every benchmark entry point prints ``name,us_per_call,derived`` rows to
+stdout; ``make bench-smoke`` captures each run under ``artifacts/`` and
+this converter merges them into a single JSON document that CI uploads
+as a workflow artifact (alongside the Perfetto demo trace from
+``make trace-demo``).
+
+Run:  python benchmarks/smoke_json.py artifacts/*.csv -o artifacts/bench_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+
+def parse_csv(path: str) -> List[dict]:
+    """Rows from one captured benchmark log.  Non-row lines (headers,
+    progress prints) are skipped: a row is ``name,float,derived``."""
+    rows: List[dict] = []
+    with open(path) as f:
+        for line in f:
+            parts = line.rstrip("\n").split(",", 2)
+            if len(parts) != 3:
+                continue
+            name, val, derived = parts
+            try:
+                us = float(val)
+            except ValueError:
+                continue
+            rows.append({"source": os.path.basename(path), "name": name,
+                         "us_per_call": us, "derived": derived})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("csvs", nargs="+", help="captured benchmark CSV logs")
+    ap.add_argument("-o", "--out", required=True, help="output JSON path")
+    args = ap.parse_args(argv)
+    rows: List[dict] = []
+    for path in args.csvs:
+        rows.extend(parse_csv(path))
+    doc = {"schema": "bench-smoke/v1", "n_rows": len(rows), "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"{args.out}: {len(rows)} rows from {len(args.csvs)} logs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,12 +19,16 @@ imperative demos sequenced by hand:
   its params (no re-init, no fan-out), and sync re-attaches it — zero
   requests lost, zero manual primitive calls.
 
-Run:  PYTHONPATH=src python examples/serve_disagg.py
-(uses 8 virtual host devices so the cells sit on disjoint zones)
+Run:  PYTHONPATH=src python examples/serve_disagg.py [--trace-out FILE]
+(uses 8 virtual host devices so the cells sit on disjoint zones;
+``--trace-out`` exports the whole run — request span trees + the
+daemon's decision audit — as Chrome trace-event JSON, openable in
+Perfetto / chrome://tracing: ``make trace-demo``)
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import argparse
 import tempfile
 
 import numpy as np
@@ -46,7 +50,12 @@ from repro.serve.batcher import Request
 from repro.serve.disagg import DisaggServer
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="export the run as Chrome trace-event JSON "
+                         "(Perfetto-loadable), incl. the decision audit")
+    args = ap.parse_args(argv)
     grid = DeviceGrid.from_flat(jax.devices(), pods=1, rows=2, cols=4)
     sup = Supervisor(grid)
     arch = smoke_config(get_arch("qwen3-4b"))
@@ -136,6 +145,23 @@ def main():
     print(f"serving summary: {st['decode_serving']}")
     print(f"daemon: {daemon.ticks} ticks, "
           f"{sum(1 for r in daemon.history if r['plan'] != 'noop')} non-noop plans")
+    print(f"tail telemetry: { {k: round(v.get('p99', 0), 4) for k, v in st['telemetry'].items() if 'p99' in v} }")
+
+    # -- the decision audit: WHY the daemon scaled / recovered / synced
+    print("decision audit (scale/recover/sync):")
+    for hit in daemon.audit.query():
+        if any(k in hit["kind"] for k in
+               ("grow", "shrink", "scale", "recover", "sync",
+                "mark_failed", "destroy", "drain")):
+            print(f"  tick {hit['tick']:3d}  {hit['kind']:<16} "
+                  f"{hit.get('cell') or '-':<10} {hit.get('reason', '')}")
+
+    # -- flight-recorder export: one span tree per request, audit folded
+    #    in as instant events (must run BEFORE teardown drops the cells)
+    if args.trace_out:
+        trace = srv.trace_export(args.trace_out, daemon=daemon)
+        print(f"trace: {len(trace['traceEvents'])} events "
+              f"-> {args.trace_out} (open in Perfetto / chrome://tracing)")
 
     # -- empty spec tears everything down
     sup.apply(ClusterSpec())

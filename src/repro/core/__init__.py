@@ -32,3 +32,13 @@ from repro.core.accounting import (  # noqa: F401
     tenant_percentile,
 )
 from repro.core.resharding import reshard_tree, tree_bytes  # noqa: F401
+from repro.core.telemetry import (  # noqa: F401
+    DecisionAudit,
+    EventLog,
+    FlightRecorder,
+    HistogramSketch,
+    Span,
+    TraceContext,
+    chrome_trace,
+    collect_traces,
+)

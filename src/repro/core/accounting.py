@@ -86,8 +86,8 @@ class RequestMetrics:
 
 
 def summarize_requests(requests) -> dict:
-    """p50/p99 TTFT/TPOT over any collection carrying .ttft/.tpot (the
-    per-cell request log, or a merged multi-replica one)."""
+    """p50/p99/p99.9 TTFT/TPOT over any collection carrying .ttft/.tpot
+    (the per-cell request log, or a merged multi-replica one)."""
     import numpy as np
     ttfts = [r.ttft for r in requests if r.ttft is not None]
     tpots = [r.tpot for r in requests if r.tpot is not None]
@@ -96,6 +96,7 @@ def summarize_requests(requests) -> dict:
         if xs:
             out[f"{key}_p50"] = float(np.percentile(xs, 50))
             out[f"{key}_p99"] = float(np.percentile(xs, 99))
+            out[f"{key}_p999"] = float(np.percentile(xs, 99.9))
     return out
 
 
@@ -146,6 +147,10 @@ class CellAccounting:
         # the same counters broken down by tenant label:
         # tenant -> name -> value
         self.tenant_counters: Dict[str, Dict[str, int]] = {}
+        # the cell's private flight recorder (spans + latency sketches);
+        # same ownership rule as every field above — strictly per-cell
+        from .telemetry import FlightRecorder
+        self.recorder = FlightRecorder(cell_name)
 
     def register_program(self, name: str, compiled, hlo_text: Optional[str] = None):
         ca = _normalize_cost_analysis(compiled.cost_analysis())
@@ -206,11 +211,13 @@ class CellAccounting:
                      tenant: Optional[str] = None):
         """Set a point-in-time counter (e.g. ``pages_in_use`` of the
         cell's KV pool) — unlike :meth:`record_counter` it overwrites,
-        reflecting current state rather than a cumulative total."""
+        reflecting current state rather than a cumulative total.  Like
+        :meth:`record_counter`, the global entry always moves; with
+        ``tenant=`` the value is additionally mirrored under that
+        label, so unlabeled readers see the latest state either way."""
+        self.counters[name] = value
         if tenant is not None:
             self.tenant_counters.setdefault(tenant, {})[name] = value
-        else:
-            self.counters[name] = value
 
     def record_invocation(self, name: str, n: int = 1):
         if name in self.programs:

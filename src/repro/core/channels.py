@@ -25,6 +25,7 @@ from typing import Any, Dict, List, Optional
 import jax
 
 from repro.core.resharding import tree_bytes
+from repro.core.telemetry import recorder_of
 
 
 class ChannelError(Exception):
@@ -146,6 +147,15 @@ class ArrayChannel:
         self.bytes_sent += nb
         self.transfers += 1
         self.seconds += dt
+        # per-transfer telemetry on the SENDING cell's recorder (the cell
+        # whose devices sourced the bytes — exact attribution); page
+        # migration (kind="pages") and weight fan-out land here too
+        rec = recorder_of(getattr(self.src, "accounting", None))
+        if rec.enabled:
+            rec.add_complete(f"xfer:{self.kind}", t0, dt, bytes=nb,
+                             dst=getattr(self.dst, "name", "?"))
+            rec.record(f"xfer_{self.kind}_s", dt)
+            rec.record(f"xfer_{self.kind}_bytes", nb)
         return out, {"bytes": nb, "seconds": dt, "gbps": nb / max(dt, 1e-9) / 1e9}
 
     def send(self, tree: Any, target_shardings: Any = None) -> dict:

@@ -49,6 +49,7 @@ from collections import deque
 from typing import Deque, List, Optional, Tuple
 
 from repro.core.elastic import ElasticPolicy, ReconcilePolicy
+from repro.core.telemetry import DecisionAudit
 
 
 class SupervisorDaemon:
@@ -65,6 +66,10 @@ class SupervisorDaemon:
         # record per tick forever
         self.history: Deque[dict] = deque(maxlen=history_limit)
         self.errors: Deque[dict] = deque(maxlen=1_000)
+        # the decision audit: every tick's observed SLO signals + every
+        # action taken with its reason, queryable after the fact and
+        # folded into DisaggServer.trace_export(daemon=...)
+        self.audit = DecisionAudit()
         self._stop_evt = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -181,6 +186,7 @@ class SupervisorDaemon:
         now = time.monotonic() if now is None else now
         rec = {"tick": self.ticks, "ts": now, "dead": [], "plan": "noop",
                "actions": [], "sync": {}}
+        audited: List[dict] = []        # this tick's audit actions
         # 1. health: heartbeat-stale cells become failed, so the planner
         #    below schedules their recover
         check = getattr(self.sup, "check_health", None)
@@ -190,21 +196,55 @@ class SupervisorDaemon:
                 if cell is not None and cell.status == "running":
                     cell.status = "failed"
                 rec["dead"].append(name)
+                audited.append({"kind": "mark_failed", "cell": name,
+                                "reason": "heartbeat stale"})
         # 2. converge observed -> desired (recover, regrow, re-channel)
         plan = self.sup.reconcile()
         rec["plan"] = plan.summary()
+        for op in getattr(plan, "ops", ()):
+            audited.append({"kind": f"plan:{op.verb}",
+                            "cell": getattr(op, "cell", None),
+                            "reason": (f"reconcile: {op.verb} "
+                                       f"{getattr(op, 'cell', '?')} "
+                                       f"[{op.status}]")})
         # 3. SLO policies may rewrite + re-apply the spec (bands track the
         #    spec's CURRENT SLOTarget, not the one seen at registration)
+        signals: dict = {}
         for policy in self.policies:
             self._refresh_slo_bands(policy)
             act = policy.maybe_act(now)
             if act:
                 rec["actions"].append(act)
+                audited.append(act)
+            # the signals the policy ACTUALLY saw this tick (post-pull),
+            # whether or not it acted — the audit must explain inaction
+            # as well as action (duck-typed: hand-built policies need not
+            # expose the full ReconcilePolicy surface)
+            srv_name = getattr(policy, "server", None)
+            if srv_name is None:
+                continue
+            sig = signals.setdefault(srv_name, {})
+            if callable(getattr(policy, "tail", None)):
+                sig["tail"] = policy.tail()
+            if callable(getattr(policy, "replica_tail", None)):
+                sig["tpot_tail"] = policy.replica_tail()
+            qd = getattr(policy, "queue_depth", None)
+            if callable(qd):
+                sig["queue_depth"] = int(qd())
+            occ = getattr(policy, "pool_occupancy", None)
+            if callable(occ):
+                sig["pool_occupancy"] = float(occ())
         # 4. serving surfaces follow the (possibly rescaled) spec
         for srv, base in self.servers:
             s = srv.sync(getattr(self.sup, "desired", None), base)
             if s["attached"] or s["detached"]:
                 rec["sync"][base or srv._decode_base] = s
+                audited.append({
+                    "kind": "sync", "cell": base or srv._decode_base,
+                    "reason": (f"replica surface converged: attached "
+                               f"{s['attached']} detached {s['detached']} "
+                               f"requeued {s['requeued']}")})
+        self.audit.record(self.ticks, now, signals, audited)
         self.ticks += 1
         self.history.append(rec)
         return rec

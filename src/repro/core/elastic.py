@@ -269,6 +269,18 @@ class ReconcilePolicy:
         return plan
 
     # ------------------------------------------------------------------
+    def _ncols(self) -> Optional[int]:
+        spec = self.sup.desired
+        if spec is not None and spec.has_cell(self.server):
+            return spec.cell(self.server).ncols
+        return None
+
+    def _nreplicas(self) -> Optional[int]:
+        spec = self.sup.desired
+        if spec is not None and spec.has_cell(self.server):
+            return spec.cell(self.server).replicas
+        return None
+
     def _maybe_scale_cols(self, now: float) -> Optional[dict]:
         if self.policy is None:
             return None
@@ -277,17 +289,31 @@ class ReconcilePolicy:
         p = self.tail()
         if p is None:
             return None
+        pct = self.policy.percentile
+        metric = self.policy.metric
         if p > self.policy.ut:
+            old = self._ncols()
             plan = self._rescale(+1)
             if plan is not None:
                 self.samples.clear()   # fresh window after topology change
                 return {"kind": "grow_server", "p_tail": p,
+                        "cell": self.server,
+                        "reason": (f"grow {self.server} cols "
+                                   f"{old}->{self._ncols()}: "
+                                   f"{metric}_p{pct:g} {p:.4f} > "
+                                   f"ut {self.policy.ut:.4f}"),
                         "plan": plan.summary()}
         elif p < self.policy.lt:
+            old = self._ncols()
             plan = self._rescale(-1)
             if plan is not None:
                 self.samples.clear()
                 return {"kind": "shrink_server", "p_tail": p,
+                        "cell": self.server,
+                        "reason": (f"shrink {self.server} cols "
+                                   f"{old}->{self._ncols()}: "
+                                   f"{metric}_p{pct:g} {p:.4f} < "
+                                   f"lt {self.policy.lt:.4f}"),
                         "plan": plan.summary()}
         return None
 
@@ -307,21 +333,42 @@ class ReconcilePolicy:
         if (qd > self.queue_high
                 or (tail is not None and tail > rp.ut)
                 or (occ is not None and occ > self.occupancy_high)):
+            # which signal(s) actually tripped — the audit's "why"
+            why = []
+            if qd > self.queue_high:
+                why.append(f"queue_depth {qd} > {self.queue_high}")
+            if tail is not None and tail > rp.ut:
+                why.append(f"tpot_p{rp.percentile:g} {tail:.4f} > "
+                           f"ut {rp.ut:.4f}")
+            if occ is not None and occ > self.occupancy_high:
+                why.append(f"pool_occupancy {occ:.2f} > "
+                           f"{self.occupancy_high:.2f}")
+            old = self._nreplicas()
             plan = self._rescale_replicas(+1)
             if plan is not None:
                 self.replica_samples.clear()
                 return {"kind": "grow_replicas", "p_tail": tail,
                         "queue_depth": qd, "pool_occupancy": occ,
+                        "cell": self.server,
+                        "reason": (f"scale replicas {old}->"
+                                   f"{self._nreplicas()}: "
+                                   + " | ".join(why)),
                         "plan": plan.summary()}
         elif (qd == 0 and tail is not None and tail < rp.lt
                 and (occ is None or occ < self.occupancy_high / 2)):
             # never shrink into a memory squeeze: the surviving replicas
             # would inherit the victim's requeued requests' pages
+            old = self._nreplicas()
             plan = self._rescale_replicas(-1)
             if plan is not None:
                 self.replica_samples.clear()
                 return {"kind": "shrink_replicas", "p_tail": tail,
                         "queue_depth": qd, "pool_occupancy": occ,
+                        "cell": self.server,
+                        "reason": (f"scale replicas {old}->"
+                                   f"{self._nreplicas()}: queue empty, "
+                                   f"tpot_p{rp.percentile:g} {tail:.4f} < "
+                                   f"lt {rp.lt:.4f}"),
                         "plan": plan.summary()}
         return None
 

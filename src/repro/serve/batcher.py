@@ -58,6 +58,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.telemetry import (
+    finish_request,
+    mark_admitted,
+    migrate_decode,
+    open_decode,
+    open_request,
+    recorder_of,
+    span_group,
+)
 from repro.serve.tenancy import (
     DEFAULT_TENANT,
     TenantRegistry,
@@ -134,6 +143,9 @@ class ContinuousBatcher:
         self.eos = eos_token
         self.temperature = temperature
         self.accounting = accounting
+        # the owning cell's flight recorder (a shared no-op when the
+        # batcher runs standalone with accounting=None)
+        self.rec = recorder_of(accounting)
         self.pos = np.zeros(batch_slots, np.int32)
         self.cur_tok = np.zeros(batch_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
@@ -218,6 +230,10 @@ class ContinuousBatcher:
     # -- request management --------------------------------------------
     def submit(self, req: Request):
         req.submitted_at = req.submitted_at or time.monotonic()
+        # colocated front door: the root "request" span opens here (the
+        # disagg server opens it earlier, on the prefill cell — then
+        # this is a no-op returning the existing root)
+        open_request(self.rec, req)
         self.queue.append(req)
 
     def free_slots(self) -> List[int]:
@@ -225,6 +241,7 @@ class ContinuousBatcher:
 
     def _finish(self, req: Request, now: float, slot: Optional[int] = None):
         req.finished_at = now
+        finish_request(req, ts=now)
         self.done.append(req)
         if slot is not None:
             self.slot_req[slot] = None
@@ -269,11 +286,15 @@ class ContinuousBatcher:
         from repro.serve.serve_step import run_prefill_group
         B = len(group)
         reqs = [r for _, r, _ in group]
+        t0 = self.rec.clock()
         toks, rows_cache, self._rng, b_pad = run_prefill_group(
             self._prefill, self.params, self._scratch, reqs,
             chunk=self.prefill_chunk, max_len=self.max_len, rng=self._rng,
             model=self.model, accounting=self.accounting,
         )
+        t1 = self.rec.clock()
+        span_group(self.rec, "prefill", reqs, t0, t1, kind="cold", batch=B)
+        self.rec.record("prefill_s", t1 - t0)
         ckpts = None
         if self._snapshot:
             rows_cache, ckpts = rows_cache
@@ -319,12 +340,18 @@ class ContinuousBatcher:
         for slot, req in zip(slots, reqs):
             self.pool.map_suffix_pages(slot, len(req.prompt))
         bt_rows = np.asarray(self.pool.block_table[slots], np.int32)
+        t0 = self.rec.clock()
         toks, resident_rows, self._rng, _b_pad = run_extend_group(
             self._extend, self.params, self._scratch, self.pool, reqs,
             leases, bt_rows, chunk=self.prefill_chunk,
             max_len=self.max_len, rng=self._rng, model=self.model,
             accounting=self.accounting,
         )
+        t1 = self.rec.clock()
+        span_group(self.rec, "prefill", reqs, t0, t1, kind="warm",
+                   batch=len(group),
+                   hit_tokens=sum(le.tokens for le in leases))
+        self.rec.record("prefill_s", t1 - t0)
         self.prefill_invocations += 1
         self.prefill_batch_sizes.append(len(group))
         for slot, req in zip(slots, reqs):
@@ -401,11 +428,17 @@ class ContinuousBatcher:
             "length": jnp.asarray(length),
         }
         self._rng, sub = jax.random.split(self._rng)
+        t0 = self.rec.clock()
         toks, _logits, self.cache = self._extend(self.params, self.cache,
                                                  batch, sub)
+        toks = np.asarray(toks)
+        t1 = self.rec.clock()
+        span_group(self.rec, "prefill", [r for _, r, _ in group], t0, t1,
+                   kind="warm_snapshot", batch=len(group),
+                   hit_tokens=sum(le.tokens for _, _, le in group))
+        self.rec.record("prefill_s", t1 - t0)
         self.prefill_invocations += 1
         self.prefill_batch_sizes.append(len(group))
-        toks = np.asarray(toks)
         self._post_install([s for s, _, _ in group],
                            [r for _, r, _ in group],
                            [int(toks[s]) for s, _, _ in group])
@@ -468,6 +501,7 @@ class ContinuousBatcher:
                 self._finish(req, now, slot=slot)
             else:
                 self.slot_req[slot] = req
+                open_decode(self.rec, req, ts=now)
 
     def install_prefilled(self, req: Request, row_cache, first_token: int) -> bool:
         """Adopt an EXTERNALLY prefilled request (disaggregated serving):
@@ -646,6 +680,7 @@ class ContinuousBatcher:
         self.slot_req[slot] = req
         self.pos[slot] = pos
         self.cur_tok[slot] = cur_tok
+        migrate_decode(req, self.rec)
         return True
 
     def _admit_fallback(self, slot: int, req: Request):
@@ -720,10 +755,13 @@ class ContinuousBatcher:
                     return False
             taken[0] += 1
             req.started_at = req.started_at or time.monotonic()
+            mark_admitted(req, slot=slot,
+                          prefix_hit=lease.tokens if lease else 0)
             if chunkable:
                 staged.append((slot, req, lease))
             else:
                 self._admit_fallback(slot, req)
+                open_decode(self.rec, req)
             return True
 
         if free and self.queue:
@@ -758,6 +796,7 @@ class ContinuousBatcher:
         busy = [s for s in range(self.B) if self.slot_req[s] is not None]
         if not busy:
             return 0
+        t0 = self.rec.clock() if self.rec.enabled else 0.0
         batch = {
             "tokens": jnp.asarray(self.cur_tok[:, None]),
             "pos": jnp.asarray(self.pos),
@@ -786,7 +825,12 @@ class ContinuousBatcher:
             toks, _logits, self.cache = self._step(self.params, self.cache,
                                                    batch, sub)
         self.decode_invocations += 1
-        toks = np.asarray(toks)
+        toks = np.asarray(toks)       # sync point: device step complete
+        if self.rec.enabled:
+            t1 = self.rec.clock()
+            self.rec.add_complete("decode_step", t0, t1 - t0,
+                                  busy=len(busy))
+            self.rec.record("decode_step_s", t1 - t0)
         now = time.monotonic()
         for s in busy:
             req = self.slot_req[s]

@@ -47,6 +47,18 @@ from typing import Dict, List, Optional, Sequence, Union
 import jax
 import numpy as np
 
+from repro.core.telemetry import (
+    HistogramSketch,
+    chrome_trace,
+    collect_traces,
+    finish_request,
+    mark_admitted,
+    open_request,
+    recorder_of,
+    requeue_request,
+    span_group,
+    write_trace,
+)
 from repro.serve.batcher import ContinuousBatcher, Request
 from repro.serve.serve_step import (
     build_prefill_step,
@@ -121,6 +133,7 @@ class PrefillWorker:
         self._axes = None
         self._rng = jax.random.PRNGKey(0)
         self.invocations = 0
+        self.rec = recorder_of(cell.accounting)
 
     def _scratch(self, batch: int):
         if batch not in self._scratch_caches:
@@ -140,11 +153,16 @@ class PrefillWorker:
             build_snapshot_payloads,
             request_ctx_key,
         )
+        t0 = self.rec.clock()
         toks, cache, self._rng, _b_pad = run_prefill_group(
             self._step, self.cell.serve_params, self._scratch, group,
             chunk=self.chunk, max_len=self.max_len, rng=self._rng,
             model=self.model, accounting=self.cell.accounting,
         )
+        t1 = self.rec.clock()
+        span_group(self.rec, "prefill", group, t0, t1, kind="cold",
+                   batch=len(group))
+        self.rec.record("prefill_s", t1 - t0)
         ckpts = None
         if self._snapshot:
             cache, ckpts = cache
@@ -222,10 +240,16 @@ class PrefillWorker:
             "length": jnp.asarray(length),
         }
         self._rng, sub = jax.random.split(self._rng)
+        t0 = self.rec.clock()
         toks, _logits, cache = self._extend(self.cell.serve_params, cache,
                                             batch, sub)
-        self.invocations += 1
         toks = np.asarray(toks)
+        t1 = self.rec.clock()
+        span_group(self.rec, "prefill", [r for r, _ in group], t0, t1,
+                   kind="warm_snapshot", batch=len(group),
+                   hit_tokens=sum(le.tokens for _, le in group))
+        self.rec.record("prefill_s", t1 - t0)
+        self.invocations += 1
         for i, (req, lease) in enumerate(group):
             out[req.rid] = (req, int(toks[i]),
                             {"row": self._dense_row(cache, i),
@@ -350,12 +374,18 @@ class PrefillWorker:
                     bt_rows[i, lp] = node.page
                 for j, pg in enumerate(temps[i]):
                     bt_rows[i, lease.pages + j] = pg
+            t0 = self.rec.clock()
             toks, rows, self._rng, _b_pad = run_extend_group(
                 self._extend, self.cell.serve_params, self._scratch,
                 self.pool, greqs, leases, bt_rows, chunk=self.chunk,
                 max_len=self.max_len, rng=self._rng, model=self.model,
                 accounting=self.cell.accounting,
             )
+            t1 = self.rec.clock()
+            span_group(self.rec, "prefill", greqs, t0, t1, kind="warm",
+                       batch=len(group),
+                       hit_tokens=sum(le.tokens for le in leases))
+            self.rec.record("prefill_s", t1 - t0)
             self.invocations += 1
             from repro.models.cache_utils import strip_kv_nodes
             for i, (req, tok) in enumerate(zip(greqs, toks)):
@@ -506,6 +536,12 @@ class DisaggServer:
                                 "snapshots_interned": 0,
                                 "snapshot_hit_tokens": 0,
                                 "snapshot_bytes_saved": 0}
+        # detached replicas' telemetry survives the same way their
+        # counters do: the recorder's ring drains into an archive of
+        # dumps (for trace_export) and its sketches merge into
+        # _detached_hists (for stats()["telemetry"])
+        self._detached_dumps: List[dict] = []
+        self._detached_hists: Dict[str, HistogramSketch] = {}
         # cluster cache plane: a supervisor-held prefix index routes warm
         # prompts to the replica already holding their deepest prefix.
         # Live page/slot migration (drain-before-detach) is OPT-IN via
@@ -621,6 +657,8 @@ class DisaggServer:
         req.finished_at = None
         if hasattr(req, "_prompt_cursor"):
             del req._prompt_cursor
+        requeue_request(recorder_of(self.prefill_cell.accounting), req,
+                        "requeued")
         self.pending.appendleft(req)
         self.requeued += 1
 
@@ -667,6 +705,17 @@ class DisaggServer:
             n += 1
         if rep.channel.open:
             rep.channel.close()
+        # archive the victim's telemetry AFTER the requeues above closed
+        # its open decode spans — the drained ring is this replica's
+        # complete, final record
+        dump = recorder_of(rep.cell.accounting).dump(reset=True)
+        self._detached_dumps.append(dump)
+        for k, hd in dump["hists"].items():
+            h = HistogramSketch.from_dict(hd)
+            if k in self._detached_hists:
+                self._detached_hists[k].merge(h)
+            else:
+                self._detached_hists[k] = h
         return n
 
     # -- cluster cache plane -------------------------------------------
@@ -753,6 +802,11 @@ class DisaggServer:
                     handoffs += 1
                     break
         self.drain_handoffs += handoffs
+        vrec = recorder_of(rep.cell.accounting)
+        if vrec.enabled:
+            t = vrec.clock()
+            vrec.add_complete("drain", t, 0.0, handoffs=handoffs,
+                              pages_migrated=self.pages_migrated)
         return handoffs
 
     def _refresh_prefill(self) -> bool:
@@ -866,6 +920,10 @@ class DisaggServer:
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         req.submitted_at = req.submitted_at or time.monotonic()
+        # disagg front door: the root "request" span opens on the PREFILL
+        # cell (the first cell to touch the request); the handle rides
+        # with the request across cells, its storage stays here
+        open_request(recorder_of(self.prefill_cell.accounting), req)
         self.pending.append(req)
 
     def _route(self, capacity: Dict[int, int]) -> Optional[int]:
@@ -901,6 +959,8 @@ class DisaggServer:
         ctx = request_ctx_key(req)
         alt = (public_ctx_key(req) if self.tenants.share_public(
             getattr(req, "tenant", DEFAULT_TENANT)) else None)
+        # routing decision breadcrumbs for the request's "route" span
+        self._last_route = {"warm": False, "depth": 0, "replica": None}
 
         def try_lease(i: int):
             rep = self.replicas[i]
@@ -924,9 +984,13 @@ class DisaggServer:
                 ok, le = try_lease(cand[name])
                 if ok and le is not None and le.tokens > 0:
                     self.routed_warm += 1
+                    self._last_route = {"warm": True, "depth": depth,
+                                        "replica": name}
                     return cand[name], le
                 if ok:   # admitted but the advert was stale (no hit):
                     self.routed_cold += 1
+                    self._last_route = {"warm": False, "depth": 0,
+                                        "replica": name}
                     return cand[name], le
         # cold path: most-free-slots, deterministic tie-break
         skipped: Dict[int, int] = {}
@@ -944,6 +1008,8 @@ class DisaggServer:
         capacity.update(skipped)
         if pick is not None:
             self.routed_cold += 1
+            self._last_route = {"warm": False, "depth": 0,
+                                "replica": self.replicas[pick].cell.name}
         return pick, lease
 
     def _block_on_pool(self, req: Request, deferred: List[Request]):
@@ -952,6 +1018,8 @@ class DisaggServer:
         batch at the front of ``pending`` in ORIGINAL order, so blocked
         requests never lose their place to each other."""
         req.started_at = None
+        requeue_request(recorder_of(self.prefill_cell.accounting), req,
+                        "pool_blocked")
         deferred.append(req)
         self.blocked_on_pool += 1
         tenant = getattr(req, "tenant", None)
@@ -983,6 +1051,7 @@ class DisaggServer:
             else:
                 req.started_at = req.started_at or time.monotonic()
                 req.finished_at = time.monotonic()
+                finish_request(req, ts=req.finished_at, outcome="rejected")
                 self.rejected.append(req)
         if len(servable) != len(self.pending):
             self.pending = deque(servable)
@@ -998,6 +1067,7 @@ class DisaggServer:
             now = time.monotonic()
             for req in victims:
                 req.finished_at = now
+                finish_request(req, ts=now, outcome="shed")
                 self.rejected.append(req)
                 self.shed_requests += 1
                 self.prefill_cell.accounting.record_counter(
@@ -1059,11 +1129,19 @@ class DisaggServer:
                 "prefill_fallback_requests", len(taking))
         elif taking:
             import jax.numpy as jnp
+            prec = recorder_of(self.prefill_cell.accounting)
+            for req in taking:
+                mark_admitted(req)      # queue wait ends: prefill begins
             # fresh adverts before routing: what each replica interned
             # since the last pump is exactly what warm routing needs
             self._refresh_index()
             for req, tok, row_cache in self.worker.prefill_many(taking):
+                root = getattr(req, "_tspans", {}).get("request")
+                rspan = prec.start_span("route", trace_id=req.rid,
+                                        parent=root.ctx if root else None)
                 i, lease = self._route_paged(capacity, req)
+                rspan.end(**self._last_route,
+                          blocked=(i is None))
                 if i is None:
                     # every replica is slot- or page-saturated right now:
                     # block (prefix pages the prefill cell just interned
@@ -1072,7 +1150,7 @@ class DisaggServer:
                     continue
                 rep = self.replicas[i]
                 if rep.pool is None:
-                    rep.channel.send_kv(
+                    st = rep.channel.send_kv(
                         row_cache, rep.kv_shardings,
                         meta={"rid": req.rid, "first_token": tok,
                               "prompt_len": len(req.prompt)},
@@ -1084,7 +1162,7 @@ class DisaggServer:
                     # channel bytes are strictly below the cold ones.
                     # The replica-side lease (acquired by routing) pins
                     # the replica's own chain until install transfers it
-                    rep.channel.send_kv(
+                    st = rep.channel.send_kv(
                         row_cache, None,
                         meta={"rid": req.rid, "first_token": tok,
                               "prompt_len": len(req.prompt)},
@@ -1109,13 +1187,23 @@ class DisaggServer:
                         "stacks": stacks,
                         "resident": row_cache["resident"],
                     }
-                    rep.channel.send_kv(
+                    st = rep.channel.send_kv(
                         payload, None,
                         meta={"rid": req.rid, "first_token": tok,
                               "prompt_len": len(req.prompt),
                               "start_page": lease.pages},
                     )
                     rep.leases[req.rid] = lease
+                if prec.enabled:
+                    # the KV handoff as a traced child of the request's
+                    # tree (the channel also self-records an untraced
+                    # xfer:kv span on this cell)
+                    t1 = prec.clock()
+                    prec.add_complete(
+                        "channel", t1 - st["seconds"], st["seconds"],
+                        trace_id=req.rid,
+                        parent=root.ctx if root else None,
+                        bytes=st["bytes"], dst=rep.cell.name)
                 rep.inflight[req.rid] = req
         installed = 0
         for rep in self.replicas:
@@ -1228,6 +1316,52 @@ class DisaggServer:
             for tenant, reqs in sorted(by.items())
         }
 
+    # -- telemetry plane ------------------------------------------------
+    def _recorders(self) -> Dict[str, object]:
+        """name -> FlightRecorder of every live serving cell."""
+        recs = {self.prefill_cell.name:
+                recorder_of(self.prefill_cell.accounting)}
+        for rep in self.replicas:
+            recs[rep.cell.name] = recorder_of(rep.cell.accounting)
+        return recs
+
+    def trace_export(self, path: Optional[str] = None, *,
+                     daemon=None) -> dict:
+        """Export the cluster's flight-recorder state as Chrome
+        trace-event JSON (Perfetto-loadable).
+
+        One collection round over the supervisor's control plane (each
+        live cell unicasts its dump — metadata only, mirroring the cache
+        plane's advert round), plus the archived dumps of since-detached
+        replicas.  ``daemon=`` folds a :class:`SupervisorDaemon`'s
+        decision audit in as instant events on a ``daemon`` pseudo-pid
+        and under ``otherData.decision_audit``.  Writes JSON to ``path``
+        when given; returns the trace dict either way."""
+        dumps = collect_traces(self.sup, self._recorders())
+        dumps += [d for d in self._detached_dumps
+                  if d.get("events") or d.get("open_spans")]
+        audit = getattr(daemon, "audit", None) if daemon is not None \
+            else None
+        trace = chrome_trace(dumps, audit=audit)
+        if path is not None:
+            write_trace(path, trace)
+        return trace
+
+    def telemetry_summary(self) -> Dict[str, dict]:
+        """Merged histogram summaries (p50/p99/p99.9) across every live
+        cell's sketches plus the detached archive — O(buckets), no
+        request-list re-scan."""
+        merged: Dict[str, HistogramSketch] = {
+            k: HistogramSketch.from_dict(h.to_dict())
+            for k, h in self._detached_hists.items()}
+        for rec in self._recorders().values():
+            for k, h in rec.hists.items():
+                if k in merged:
+                    merged[k].merge(h)
+                else:
+                    merged[k] = HistogramSketch.from_dict(h.to_dict())
+        return {k: h.summary() for k, h in sorted(merged.items())}
+
     def stats(self) -> dict:
         from repro.core.accounting import summarize_requests
         ds = self._detached_stats
@@ -1292,4 +1426,5 @@ class DisaggServer:
             "blocked_by_tenant": dict(self.blocked_by_tenant),
             "throttled_by_tenant": dict(self.scheduler.throttled),
             "served_cost_by_tenant": dict(self.scheduler.served_cost),
+            "telemetry": self.telemetry_summary(),
         }

@@ -1,0 +1,339 @@
+"""Flight recorder: span lifecycle, histogram sketches, decision audit,
+and the Chrome trace export — plus the end-to-end guarantee that one
+request yields exactly ONE closed span tree in both colocated and
+disaggregated serving.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import smoke_config
+from repro.configs.registry import get_arch
+from repro.core import DeviceGrid, Supervisor
+from repro.core.accounting import CellAccounting, summarize_requests
+from repro.core.telemetry import (
+    DecisionAudit,
+    EventLog,
+    FlightRecorder,
+    HistogramSketch,
+    chrome_trace,
+    finish_request,
+    mark_admitted,
+    open_request,
+    recorder_of,
+)
+from repro.models.model import build_model
+from repro.serve.batcher import ContinuousBatcher, Request
+from repro.sharding.rules import single_device_ctx
+
+MAX_LEN = 48
+SLOTS = 3
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = smoke_config(get_arch("qwen3-4b"))
+    model = build_model(cfg, single_device_ctx())
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(vocab, lens, max_new=4, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i, prompt=rng.randint(1, vocab, size=L).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, L in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def test_span_lifecycle_with_fake_clock():
+    t = [0.0]
+    rec = FlightRecorder("cellA", clock=lambda: t[0])
+    root = rec.start_span("request", trace_id=7, prompt_len=12)
+    assert root.open and rec.open_spans == [root]
+    t[0] = 0.5
+    child = rec.start_span("queue", trace_id=7, parent=root.ctx)
+    t[0] = 1.25
+    child.end(outcome="admitted")
+    root.end()
+    assert not root.open and rec.open_spans == []
+    evs = {e["name"]: e for e in rec.log}
+    assert evs["queue"]["parent_id"] == root.span_id
+    assert evs["queue"]["dur"] == pytest.approx(0.75)
+    assert evs["request"]["dur"] == pytest.approx(1.25)
+    assert evs["request"]["attrs"]["prompt_len"] == 12
+    # end() is idempotent: a second close must not double-log
+    root.end()
+    assert sum(1 for e in rec.log if e["name"] == "request") == 1
+
+
+def test_disabled_recorder_is_total_noop():
+    rec = FlightRecorder("off", enabled=False)
+    s = rec.start_span("x", trace_id=1)
+    s.end()
+    rec.add_complete("y", 0.0, 1.0)
+    rec.record("lat", 0.5)
+    assert len(rec.log) == 0 and rec.hists == {} and rec.open_spans == []
+    # accounting=None resolves to the shared disabled recorder
+    assert recorder_of(None).enabled is False
+
+
+def test_event_log_ring_is_bounded_and_counts_drops():
+    log = EventLog(capacity=4)
+    for i in range(10):
+        log.append({"i": i})
+    assert len(log) == 4
+    assert log.dropped == 6
+    assert [e["i"] for e in log] == [6, 7, 8, 9]
+    assert [e["i"] for e in log.drain()] == [6, 7, 8, 9]
+    assert len(log) == 0
+
+
+def test_histogram_sketch_tracks_numpy_percentiles():
+    rng = np.random.RandomState(0)
+    xs = rng.lognormal(mean=-3.0, sigma=1.0, size=20_000)
+    h = HistogramSketch(rel_err=0.01)
+    for x in xs:
+        h.record(x)
+    for q, pct in ((0.5, 50), (0.99, 99), (0.999, 99.9)):
+        got, want = h.quantile(q), float(np.percentile(xs, pct))
+        assert abs(got - want) / want < 0.05, (q, got, want)
+    s = h.summary()
+    assert s["count"] == len(xs)
+    assert s["min"] == pytest.approx(xs.min())
+    assert s["max"] == pytest.approx(xs.max())
+
+
+def test_histogram_sketch_merge_and_roundtrip():
+    a, b = HistogramSketch(), HistogramSketch()
+    xs = np.linspace(0.001, 1.0, 500)
+    for x in xs:
+        a.record(x)
+        b.record(x)
+    b = HistogramSketch.from_dict(json.loads(json.dumps(b.to_dict())))
+    a.merge(b)
+    assert a.count == 2 * len(xs)
+    assert a.quantile(0.5) == pytest.approx(float(np.percentile(xs, 50)),
+                                            rel=0.05)
+    # zeros bin + empty sketch edges
+    z = HistogramSketch()
+    assert z.quantile(0.5) is None and z.summary() == {"count": 0}
+    z.record(0.0)
+    z.record(-1.0)
+    # non-positive values collapse into the zeros bin (estimate 0.0);
+    # the true minimum survives in the summary
+    assert z.quantile(0.5) == 0.0
+    assert z.summary()["min"] == -1.0
+
+
+def test_decision_audit_query_filters_kind_and_cell():
+    audit = DecisionAudit()
+    audit.record(0, 1.0, {"decode": {"queue_depth": 7}},
+                 [{"kind": "scale_replicas", "cell": "decode",
+                   "reason": "scale replicas 2->3: queue_depth 7 > 4"}])
+    audit.record(1, 2.0, {}, [{"kind": "plan:recover", "cell": "decode/1",
+                               "reason": "reconcile: recover decode/1 [failed]"}])
+    hits = audit.query(kind="scale")
+    assert len(hits) == 1 and "2->3" in hits[0]["reason"]
+    assert hits[0]["signals"]["decode"]["queue_depth"] == 7
+    assert audit.query(cell="decode/1")[0]["kind"] == "plan:recover"
+    assert audit.query(kind="nope") == []
+
+
+# ---------------------------------------------------------------------------
+# accounting satellites
+# ---------------------------------------------------------------------------
+def test_record_gauge_always_sets_global_entry():
+    """Regression: a gauge recorded WITH a tenant label must still move
+    the global counter — unlabeled readers (pool occupancy, stats())
+    would otherwise read a stale global while the per-tenant mirror
+    advanced."""
+    acc = CellAccounting("c")
+    acc.record_gauge("pages_in_use", 5)
+    assert acc.counters["pages_in_use"] == 5
+    acc.record_gauge("pages_in_use", 9, tenant="t0")
+    assert acc.counters["pages_in_use"] == 9
+    assert acc.tenant_counters["t0"]["pages_in_use"] == 9
+    acc.record_gauge("pages_in_use", 2)
+    assert acc.counters["pages_in_use"] == 2
+
+
+def test_summarize_requests_reports_p999():
+    reqs = [Request(rid=i, prompt=np.ones(4, np.int32), max_new_tokens=1)
+            for i in range(100)]
+    for i, r in enumerate(reqs):
+        r.submitted_at = 0.0
+        r.first_token_at = 0.001 * (i + 1)
+        r.finished_at = r.first_token_at + 0.01
+        r.output = [1, 2]
+    s = summarize_requests(reqs)
+    assert {"ttft_p50", "ttft_p99", "ttft_p999", "tpot_p999"} <= set(s)
+    assert s["ttft_p50"] <= s["ttft_p99"] <= s["ttft_p999"] <= 0.1
+
+
+# ---------------------------------------------------------------------------
+# request helpers
+# ---------------------------------------------------------------------------
+def test_request_helpers_build_one_closed_tree():
+    t = [0.0]
+    rec = FlightRecorder("front", clock=lambda: t[0])
+    req = Request(rid=3, prompt=np.ones(8, np.int32), max_new_tokens=2)
+    req.submitted_at = 0.0
+    open_request(rec, req)
+    assert open_request(rec, req) is req._tspans["request"]  # idempotent
+    t[0] = 0.2
+    mark_admitted(req, slot=1)
+    t[0] = 1.0
+    req.first_token_at, req.finished_at, req.output = 0.3, 1.0, [5, 6]
+    finish_request(req, ts=1.0)
+    finish_request(req, ts=2.0)                              # idempotent
+    assert rec.open_spans == []
+    names = [e["name"] for e in rec.log]
+    assert names.count("request") == 1 and names.count("finish") == 1
+    fin = next(e for e in rec.log if e["name"] == "finish")
+    assert fin["attrs"]["outcome"] == "ok"
+    assert fin["attrs"]["new_tokens"] == 2
+    assert "ttft_s" in rec.hists and "tpot_s" in rec.hists
+
+
+# ---------------------------------------------------------------------------
+# colocated end-to-end
+# ---------------------------------------------------------------------------
+def test_colocated_requests_yield_closed_span_trees(model_and_params):
+    model, params = model_and_params
+    acc = CellAccounting("solo")
+    bat = ContinuousBatcher(model, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                            prefill_chunk=16, accounting=acc)
+    reqs = _requests(model.cfg.vocab, [3, 33, 17, 40])
+    for r in reqs:
+        bat.submit(r)
+    done = bat.run_until_drained()
+    assert len(done) == len(reqs)
+
+    rec = acc.recorder
+    assert rec.open_spans == [], [s.name for s in rec.open_spans]
+    roots = [e for e in rec.log if e["name"] == "request"]
+    assert sorted(e["trace_id"] for e in roots) == [0, 1, 2, 3]
+    assert all(e["dur"] is not None for e in roots)
+    # per-request phases all parent back to that request's root
+    by_rid = {e["trace_id"]: e for e in roots}
+    for name in ("queue", "prefill", "decode", "finish"):
+        evs = [e for e in rec.log if e["name"] == name]
+        assert len(evs) == len(reqs), name
+        for e in evs:
+            assert e["parent_id"] == by_rid[e["trace_id"]]["span_id"], name
+    assert any(e["name"] == "decode_step" for e in rec.log)
+    assert {"ttft_s", "tpot_s", "prefill_s", "decode_step_s"} <= set(rec.hists)
+
+
+# ---------------------------------------------------------------------------
+# disaggregated end-to-end + export
+# ---------------------------------------------------------------------------
+def test_disagg_span_tree_and_chrome_export(model_and_params, tmp_path):
+    from repro.serve.disagg import DisaggServer
+
+    model, params = model_and_params
+    cfg = model.cfg
+    grid = DeviceGrid.from_flat(jax.devices()[:1], pods=1, rows=1, cols=2,
+                                allow_reuse=True)
+    sup = Supervisor(grid)
+    sup.create_cell("prefill", cfg, "serve", ncols=1)
+    dec = sup.create_cell("decode", cfg, "serve", ncols=1)
+    dec.init_serve(rng=jax.random.PRNGKey(0))
+    srv = DisaggServer(sup, "prefill", "decode", batch_slots=SLOTS,
+                       max_len=MAX_LEN, chunk=16)
+    reqs = _requests(cfg.vocab, [3, 33, 17, 40])
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run_until_drained()
+    assert len(done) == len(reqs)
+
+    # zero leaked spans on ANY cell after drain
+    for name, rec in srv._recorders().items():
+        assert rec.open_spans == [], (name, [s.name for s in rec.open_spans])
+
+    # one closed root per request, on the front-door (prefill) cell
+    prec = recorder_of(srv.prefill_cell.accounting)
+    roots = {e["trace_id"]: e for e in prec.log if e["name"] == "request"}
+    assert sorted(roots) == [0, 1, 2, 3]
+    assert all(e["dur"] is not None for e in roots.values())
+
+    # the full disagg phase chain, each phase parented to its root:
+    # queue -> route -> prefill (prefill cell) -> channel -> decode (decode
+    # cell) -> finish
+    all_events = [e for _, rec in srv._recorders().items() for e in rec.log]
+    for name in ("queue", "route", "prefill", "channel", "decode", "finish"):
+        evs = [e for e in all_events if e["name"] == name
+               and e.get("trace_id") is not None]
+        assert len(evs) >= len(reqs), name
+        for e in evs:
+            assert e["parent_id"] == roots[e["trace_id"]]["span_id"], name
+    drec = recorder_of(dec.accounting)
+    assert any(e["name"] == "decode" for e in drec.log)
+    # per-transfer spans land on the SENDING cell (exact attribution)
+    assert any(e["name"] == "xfer:kv" for e in prec.log)
+
+    # export: valid JSON, Perfetto-shaped, round-trips through json.loads
+    path = tmp_path / "trace.json"
+    trace = srv.trace_export(str(path))
+    loaded = json.loads(path.read_text())
+    assert loaded["traceEvents"] and loaded["displayTimeUnit"] == "ms"
+    assert len(loaded["traceEvents"]) == len(trace["traceEvents"])
+    for ev in loaded["traceEvents"]:
+        assert {"ph", "ts", "pid", "tid"} <= set(ev), ev
+        assert ev["ph"] in ("X", "M", "i")
+        if ev["ph"] == "X":
+            assert ev["ts"] >= 0.0 and ev["dur"] >= 0.0
+    # one pid per cell, tid = request id on request-scoped events
+    names = {ev["args"]["name"] for ev in loaded["traceEvents"]
+             if ev["ph"] == "M"}
+    assert {"cell:prefill", "cell:decode"} <= names
+    tids = {ev["tid"] for ev in loaded["traceEvents"]
+            if ev["ph"] == "X" and ev["name"] == "request"}
+    assert tids == {0, 1, 2, 3}
+
+    # histogram summaries fold into stats()
+    st = srv.stats()
+    tel = st["telemetry"]
+    assert tel["ttft_s"]["count"] == len(reqs)
+    assert {"p50", "p99", "p999"} <= set(tel["ttft_s"])
+    assert "xfer_kv_bytes" in tel
+
+
+def test_daemon_audit_explains_actions():
+    """A daemon tick records observed signals + audited actions; the
+    Chrome export folds them in as instant events on a daemon pid."""
+
+    class _FakePlan:
+        ops = ()
+
+        def summary(self):
+            return "noop"
+
+    class _FakeSup:
+        cells: dict = {}
+        desired = None
+
+        def check_health(self):
+            return ["decode/1"]
+
+        def reconcile(self):
+            return _FakePlan()
+
+    d = None
+    from repro.core.daemon import SupervisorDaemon
+    d = SupervisorDaemon(_FakeSup())
+    d.tick(now=1.0)
+    hits = d.audit.query(kind="mark_failed")
+    assert len(hits) == 1 and hits[0]["cell"] == "decode/1"
+    assert "heartbeat" in hits[0]["reason"]
+
+    trace = chrome_trace([], audit=d.audit)
+    inst = [e for e in trace["traceEvents"] if e["ph"] == "i"]
+    assert len(inst) == 1 and inst[0]["name"] == "mark_failed"
+    assert trace["otherData"]["decision_audit"][0]["tick"] == 0
